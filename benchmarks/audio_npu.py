@@ -1,0 +1,74 @@
+"""Table 7 (audio modality, ultravox) + Figure 9 / Appendix F (NPU).
+
+Table 7: 24 audio clips/request, 4 GPUs; vLLM DP vs DistServe 3P1D vs
+EPD 2E1P1D; SLO TTFT<=2.0 TPOT<=0.025. Paper goodput: 1.01 / 0.45 / 1.16.
+
+App F: encode-to-prefill latency ratio is 10-20% higher on 910B3 NPUs than
+A100s, so EPD helps more there (Fig 9: EPD is the only system meeting the
+8x4K-image SLO on NPUs).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import A100_80G, NPU_910B3, SLO
+from repro.core import costmodel as cm
+from repro.core.cluster import ClusterSpec, simulate, summarize
+from repro.data.workload import WorkloadSpec, poisson_requests
+
+from benchmarks.common import Row, timed
+
+ULTRAVOX = get_config("ultravox-v0_3")
+IVL8 = get_config("internvl2-8b")
+
+
+def run_audio(quick: bool) -> list[Row]:
+    slo = SLO(2.0, 0.025)
+    rows = []
+    n = 40 if quick else 100
+    rates = (0.25, 1.0) if quick else (0.10, 0.25, 0.50, 1.00, 1.10, 1.15)
+    systems = {"vLLM": ClusterSpec("4EPD", irp=False),
+               "DistServe": ClusterSpec("3EP1D", irp=False),
+               "EPD": ClusterSpec("2E1P1D", irp=True)}
+    for rate in rates:
+        reqs = poisson_requests(ULTRAVOX, WorkloadSpec(
+            rate=rate, n_requests=n, n_items=24, output_len=10, slo=slo))
+        for name, spec in systems.items():
+            out, us = timed(simulate, spec, ULTRAVOX, A100_80G, reqs)
+            s = summarize(out, slo)
+            rows.append(Row(f"table7/rate{rate}/{name}", us,
+                            round(s.slo_attainment, 3)))
+    return rows
+
+
+def run_npu(quick: bool) -> list[Row]:
+    rows = []
+    # Fig 12: encode/prefill latency ratio GPU vs NPU
+    for n_img in (2, 4, 8):
+        patches = n_img * IVL8.modality.patches_at_res[(4032, 3024)]
+        seq = patches * IVL8.modality.tokens_per_item + 22
+        r_gpu = cm.encode_time(IVL8, A100_80G, patches) / \
+            cm.prefill_time(IVL8, A100_80G, seq)
+        r_npu = cm.encode_time(IVL8, NPU_910B3, patches) / \
+            cm.prefill_time(IVL8, NPU_910B3, seq)
+        rows.append(Row(f"fig12/img{n_img}/enc_prefill_ratio", 0.0,
+                        f"gpu={r_gpu:.2f};npu={r_npu:.2f}",
+                        {"npu_vs_gpu": round(r_npu / r_gpu, 3),
+                         "paper": "1.10-1.20"}))
+    # Fig 9: NPU SLO attainment, 8x4K images, 5E2P1D optimum
+    slo = SLO(8.5, 0.12)
+    n = 30 if quick else 100
+    for rate in ((0.05, 0.1) if quick else (0.05, 0.1, 0.2, 0.4)):
+        reqs = poisson_requests(IVL8, WorkloadSpec(
+            rate=rate, n_requests=n, n_items=8, output_len=10, slo=slo))
+        for name, spec in (("EPD-NPU", ClusterSpec("5E2P1D", irp=True)),
+                           ("vLLM-NPU", ClusterSpec("8EPD", irp=False)),
+                           ("Dist-NPU", ClusterSpec("7EP1D", irp=False))):
+            out, us = timed(simulate, spec, IVL8, NPU_910B3, reqs)
+            s = summarize(out, slo)
+            rows.append(Row(f"fig9/rate{rate}/{name}", us,
+                            round(s.slo_attainment, 3)))
+    return rows
+
+
+def run(quick: bool = False) -> list[Row]:
+    return run_audio(quick) + run_npu(quick)

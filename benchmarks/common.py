@@ -1,0 +1,38 @@
+"""Shared benchmark plumbing: timing, CSV rows, paper-value annotations."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float            # wall-clock of the measured operation, µs
+    derived: Any                  # the headline metric for the paper table
+    extra: dict = field(default_factory=dict)
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# Paper SLO criteria (Table 9)
+SLO_TABLE9 = {
+    ("minicpm-v-2.6", 2): (1.40, 0.04), ("minicpm-v-2.6", 4): (2.60, 0.04),
+    ("minicpm-v-2.6", 6): (3.90, 0.06), ("minicpm-v-2.6", 8): (5.10, 0.06),
+    ("internvl2-8b", 2): (1.20, 0.05), ("internvl2-8b", 4): (2.40, 0.06),
+    ("internvl2-8b", 6): (3.55, 0.09), ("internvl2-8b", 8): (5.00, 0.18),
+    ("internvl2-26b", 2): (3.50, 0.07), ("internvl2-26b", 4): (7.05, 0.08),
+    ("internvl2-26b", 6): (11.00, 0.95), ("internvl2-26b", 8): (15.00, 0.15),
+}
+
+EPD_SPEC = "5E2P1D"
+DIST_SPEC = "7EP1D"
+VLLM_SPEC = "8EPD"

@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: per-call wall time of the jnp oracle path on
+this host (the Pallas kernels themselves are TPU-targeted; interpret mode
+is a correctness harness, not a performance proxy)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn import decode_attn_ref
+from repro.kernels.flash_prefill import flash_prefill_ref
+from repro.kernels.mamba2_scan import mamba2_ssd_ref
+from repro.kernels.rwkv6_scan import rwkv6_wkv_ref
+
+from benchmarks.common import Row
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _time(fn, *args, reps=5):
+    out = jax.block_until_ready(fn(*args))            # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows = []
+    ks = jax.random.split(KEY, 8)
+    B, H, K, S, hd = 1, 8, 2, (256 if quick else 1024), 64
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, K, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, K, S, hd), jnp.float32)
+    f = jax.jit(lambda a, b, c: flash_prefill_ref(a, b, c, causal=True))
+    rows.append(Row(f"kernel/flash_prefill_ref/S{S}", _time(f, q, k, v),
+                    "cpu_oracle"))
+
+    W = 2048 if quick else 8192
+    qd = jax.random.normal(ks[3], (4, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[4], (4, W, K, hd), jnp.float32)
+    vc = jax.random.normal(ks[5], (4, W, K, hd), jnp.float32)
+    ln = jnp.full((4,), W, jnp.int32)
+    fd = jax.jit(decode_attn_ref)
+    rows.append(Row(f"kernel/decode_attn_ref/W{W}", _time(fd, qd, kc, vc, ln),
+                    "cpu_oracle"))
+
+    Sm = 256 if quick else 1024
+    x = jax.random.normal(ks[6], (1, Sm, 8, 64), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[7], (1, Sm, 8), jnp.float32))
+    a = -dt * 0.5
+    bm = jax.random.normal(ks[0], (1, Sm, 64), jnp.float32)
+    cm_ = jax.random.normal(ks[1], (1, Sm, 64), jnp.float32)
+    fm = jax.jit(lambda *t: mamba2_ssd_ref(*t, chunk=128)[0])
+    rows.append(Row(f"kernel/mamba2_ssd_ref/S{Sm}",
+                    _time(fm, x, dt, a, bm, cm_), "cpu_oracle"))
+
+    r = jax.random.normal(ks[2], (1, Sm, 4, 64), jnp.float32)
+    kk = jax.random.normal(ks[3], (1, Sm, 4, 64), jnp.float32)
+    vv = jax.random.normal(ks[4], (1, Sm, 4, 64), jnp.float32)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[5], (1, Sm, 4, 64)) * 0.3))
+    u = jax.random.normal(ks[6], (4, 64), jnp.float32) * 0.3
+    fr = jax.jit(lambda *t: rwkv6_wkv_ref(*t)[0])
+    rows.append(Row(f"kernel/rwkv6_wkv_ref/S{Sm}",
+                    _time(fr, r, kk, vv, w, u), "cpu_oracle"))
+    return rows

@@ -1,0 +1,80 @@
+"""§4.3 + Table 2 + Table 3 + Table 8: memory savings of disaggregation.
+
+Paper anchors: weight savings ~95%/96.2%/78.3% (E workers), Table 2
+(images/request), Table 3 (max E/P batch), Table 8 (max KV %).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core import costmodel as cm
+from repro.core import memlimits as ml
+
+from benchmarks.common import Row, timed
+
+MODELS = ("minicpm-v-2.6", "internvl2-8b", "internvl2-26b")
+RES = ((313, 234), (787, 444), (4032, 3024))
+PAPER_WEIGHT_SAVING = {"minicpm-v-2.6": 0.95, "internvl2-8b": 0.962,
+                       "internvl2-26b": 0.783}
+PAPER_T2 = {  # (model, res) -> (DistServe, EPD)
+    ("minicpm-v-2.6", (313, 234)): (77, 490),
+    ("minicpm-v-2.6", (787, 444)): (26, 165),
+    ("minicpm-v-2.6", (4032, 3024)): (7, 49),
+    ("internvl2-8b", (313, 234)): (19, 19),
+    ("internvl2-8b", (787, 444)): (19, 19),
+    ("internvl2-8b", (4032, 3024)): (19, 19),
+    ("internvl2-26b", (313, 234)): (1, 10),
+    ("internvl2-26b", (787, 444)): (11, 45),
+    ("internvl2-26b", (4032, 3024)): (1, 10),
+}
+PAPER_T8 = {  # (model, n_images) -> (DistServe, EPD)
+    ("minicpm-v-2.6", 5): ("86", "99"), ("minicpm-v-2.6", 10): ("74", "97"),
+    ("minicpm-v-2.6", 20): ("49", "95"), ("minicpm-v-2.6", 40): ("OOM", "92"),
+    ("minicpm-v-2.6", 80): ("OOM", "OOCL"),
+    ("internvl2-8b", 5): ("94", "95"), ("internvl2-8b", 10): ("89", "91"),
+    ("internvl2-8b", 20): ("OOCL", "OOCL"),
+    ("internvl2-26b", 5): ("67", "89"), ("internvl2-26b", 10): ("36", "80"),
+    ("internvl2-26b", 20): ("OOM", "63"),
+    ("internvl2-26b", 40): ("OOM", "OOCL"),
+}
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    for model in MODELS:
+        cfg = get_config(model)
+        # §4.3 weight savings at E workers
+        full = cm.weights_bytes(cfg)
+        enc = cm.weights_bytes(cfg, include_llm=False)
+        rows.append(Row(f"sec4.3/{model}/e_weight_saving", 0.0,
+                        round(1 - enc / full, 3),
+                        {"paper": PAPER_WEIGHT_SAVING[model]}))
+        # Table 2
+        for res in RES:
+            (d, _), us1 = timed(
+                lambda: (ml.max_images_per_request(cfg, A100_80G, "EP", res),
+                         None))
+            e = ml.max_images_per_request(cfg, A100_80G, "E", res)
+            paper = PAPER_T2[(model, res)]
+            rows.append(Row(
+                f"table2/{model}/{res[0]}x{res[1]}", us1,
+                f"dist={d};epd={e}",
+                {"paper_dist": paper[0], "paper_epd": paper[1]}))
+        # Table 3 (10 images/request, E and P batch)
+        for res in RES:
+            dist = ml.max_batch(cfg, A100_80G, "EP", res, images_per_req=10)
+            e = ml.max_batch(cfg, A100_80G, "E", res, images_per_req=10)
+            p = ml.max_batch(cfg, A100_80G, "P", res, images_per_req=10)
+            rows.append(Row(f"table3/{model}/{res[0]}x{res[1]}", 0.0,
+                            f"dist={dist};epd_e={e};epd_p={p}"))
+        # Table 8
+        for n in (5, 10, 20, 40, 80):
+            if (model, n) not in PAPER_T8:
+                continue
+            dist = ml.max_kv_percent(cfg, A100_80G, "EP", images_per_req=n)
+            p = ml.max_kv_percent(cfg, A100_80G, "P", images_per_req=n)
+            paper = PAPER_T8[(model, n)]
+            rows.append(Row(f"table8/{model}/img{n}", 0.0,
+                            f"dist={dist};epd={p}",
+                            {"paper_dist": paper[0], "paper_epd": paper[1]}))
+    return rows

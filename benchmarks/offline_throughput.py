@@ -1,0 +1,88 @@
+"""Figure 10 + Appendix A.3: offline E2E throughput.
+
+Left: vary #encode workers (x->y->0 notation: x E, y P workers; decode on
+1); DistServe fixed 7P(EP)1D. Middle: throughput vs images/request.
+Right: sensitivity to encode/prefill batch size.
+1000 single-image requests, 10 output tokens (quick: 200).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core.cluster import ClusterSpec, simulate
+from repro.data.workload import WorkloadSpec, poisson_requests
+
+from benchmarks.common import Row, timed
+
+CFG = get_config("minicpm-v-2.6")
+
+
+def _throughput(spec: ClusterSpec, reqs) -> float:
+    out = simulate(spec, CFG, A100_80G, reqs)
+    makespan = max(r.finish for r in out) - min(r.arrival for r in out)
+    return len(out) / makespan
+
+
+def _offline_requests(n, n_items=1):
+    # all submitted up-front (offline batch) ~ huge rate
+    return poisson_requests(CFG, WorkloadSpec(
+        rate=1e6, n_requests=n, n_items=n_items, output_len=10,
+        resolution=(787, 444)))
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    n = 200 if quick else 1000
+    reqs = _offline_requests(n)
+    # left plot: x E, y P
+    for n_e, n_p in ((2, 5), (3, 4), (4, 3), (5, 2), (6, 1)):
+        spec = ClusterSpec(f"{n_e}E{n_p}P1D", max_batch=8, decode_batch=128)
+        thr, us = timed(_throughput, spec, reqs)
+        rows.append(Row(f"fig10_left/{n_e}E{n_p}P1D", us, round(thr, 2)))
+    thr, us = timed(_throughput,
+                    ClusterSpec("7EP1D", irp=False, max_batch=1,
+                                decode_batch=128), reqs)
+    rows.append(Row("fig10_left/distserve_7EP1D_b1", us, round(thr, 2)))
+    # middle: images per request
+    for n_items in (1, 2, 4) if quick else (1, 2, 4, 8):
+        r2 = _offline_requests(n // 2, n_items=n_items)
+        epd = _throughput(ClusterSpec("5E2P1D", max_batch=8,
+                                      decode_batch=128), r2)
+        dist = _throughput(ClusterSpec("7EP1D", irp=False, max_batch=1,
+                                       decode_batch=128), r2)
+        rows.append(Row(f"fig10_mid/img{n_items}", 0.0,
+                        f"epd={epd:.2f};dist={dist:.2f}"))
+    # right: batch-size sensitivity
+    for b in (1, 2, 8, 32):
+        thr = _throughput(ClusterSpec("5E2P1D", max_batch=b,
+                                      decode_batch=128), reqs)
+        rows.append(Row(f"fig10_right/batch{b}", 0.0, round(thr, 2)))
+    rows.extend(run_heterogeneous(quick))
+    return rows
+
+
+def run_heterogeneous(quick: bool = False) -> list[Row]:
+    """App A.3 heterogeneous setting: a cluster mixing high-end and
+    low-memory devices. The aggregated EP worker cannot even hold encoder +
+    LLM + KV on the low-end card (OOM -> effectively batch 1 / infeasible),
+    while EPD places E stages on the small devices and P/D on the big ones."""
+    from dataclasses import replace as _replace
+    lowend = _replace(A100_80G, name="a30-24g", mem_bytes=24e9,
+                      peak_flops=165e12, hbm_bw=933e9)
+    n = 100 if quick else 400
+    reqs = _offline_requests(n)
+    rows = []
+    # EPD: 5 low-end E + 2 big P + 1 big D
+    epd = ClusterSpec("5E2P1D", max_batch=8, decode_batch=128,
+                      hw_mix=[lowend] * 5 + [A100_80G] * 3)
+    thr, us = timed(_throughput, epd, reqs)
+    rows.append(Row("appA3_hetero/EPD_lowendE", us, round(thr, 2)))
+    # DistServe: EP on the SAME mix — low-end EP workers are memory-starved
+    # (batch 1), big ones fine
+    dist = ClusterSpec("7EP1D", irp=False, max_batch=1, decode_batch=128,
+                       hw_mix=[lowend] * 5 + [A100_80G] * 3)
+    thr_d, us_d = timed(_throughput, dist, reqs)
+    rows.append(Row("appA3_hetero/DistServe_mixed_b1", us_d, round(thr_d, 2)))
+    rows.append(Row("appA3_hetero/epd_over_dist", 0.0,
+                    round(thr / max(thr_d, 1e-9), 2)))
+    return rows

@@ -1,0 +1,36 @@
+"""Figures 7 & 8: SLO attainment on NextQA / Video-MME trace statistics
+(MiniCPM-V 2.6; NextQA SLO TTFT=5.60 TPOT=0.06, Video-MME TTFT=3.1
+TPOT=0.025, 64 frames)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import A100_80G, SLO
+from repro.core.cluster import ClusterSpec, simulate, summarize
+from repro.data.workload import nextqa_like, videomme_like
+
+from benchmarks.common import DIST_SPEC, EPD_SPEC, Row, VLLM_SPEC, timed
+
+SYSTEMS = {"EPD": (EPD_SPEC, True), "DistServe": (DIST_SPEC, False),
+           "vLLM": (VLLM_SPEC, False)}
+
+
+def run(quick: bool = False) -> list[Row]:
+    cfg = get_config("minicpm-v-2.6")
+    rows: list[Row] = []
+    n = 40 if quick else 100
+    rates = (0.25, 0.5) if quick else (0.1, 0.25, 0.5, 1.0, 2.0)
+    traces = {
+        "fig7_nextqa": (nextqa_like, SLO(5.60, 0.06), {}),
+        "fig8_videomme": (videomme_like, SLO(3.10, 0.025), {"n_frames": 64}),
+    }
+    for tname, (gen, slo, kw) in traces.items():
+        for rate in rates:
+            reqs = gen(cfg, rate, n, slo=slo, **kw)
+            for sysname, (spec, irp) in SYSTEMS.items():
+                out, us = timed(simulate, ClusterSpec(spec, irp=irp),
+                                cfg, A100_80G, reqs)
+                s = summarize(out, slo)
+                rows.append(Row(f"{tname}/rate{rate}/{sysname}", us,
+                                round(s.slo_attainment, 3),
+                                {"ttft_mean": s.ttft_mean}))
+    return rows

@@ -1,0 +1,42 @@
+"""Roofline report (brief deliverable g): reads the dry-run JSONL records
+and emits the per-(arch x shape x mesh) three-term roofline table."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import Row
+
+BASELINE = "runs/dryrun_baseline.jsonl"
+MULTIPOD = "runs/dryrun_multipod.jsonl"
+OPTIMIZED = "runs/dryrun_optimized.jsonl"
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return []
+    return [json.loads(l) for l in open(path) if l.strip()]
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    for path, mesh_tag in ((BASELINE, "16x16"), (MULTIPOD, "2x16x16"),
+                           (OPTIMIZED, "opt")):
+        recs = _load(path)
+        for r in recs:
+            t = r["roofline_s"]
+            dom_ms = t[r["dominant"]] * 1e3
+            rows.append(Row(
+                f"roofline/{mesh_tag}/{r['arch']}/{r['shape']}"
+                + (f"/{r['tag']}" if r.get("tag", "baseline") != "baseline"
+                   else ""),
+                dom_ms * 1e3,        # dominant term in µs
+                r["dominant"],
+                {"compute_ms": round(t["compute"] * 1e3, 3),
+                 "memory_ms": round(t["memory"] * 1e3, 3),
+                 "collective_ms": round(t["collective"] * 1e3, 3),
+                 "useful_flop_ratio": round(r["useful_flop_ratio"], 3),
+                 "sw_variant": r["sw_variant"]}))
+        if recs:
+            rows.append(Row(f"roofline/{mesh_tag}/records", 0.0, len(recs)))
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--quick] [--only MODULE]`` prints one CSV line
+``name,us_per_call,derived`` per measurement and writes the full records
+(with paper reference values) to runs/bench_results.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+MODULES = [
+    "slo_attainment",      # Fig 5 / Fig 11
+    "ttft",                # Fig 6 / §4.2
+    "real_traces",         # Fig 7 / Fig 8
+    "video_ttft",          # Table 1
+    "memory_tables",       # §4.3, Tables 2, 3, 8
+    "ablations",           # Tables 4, 5, 6
+    "offline_throughput",  # Fig 10 / App A.3
+    "audio_npu",           # Table 7, Fig 9, Fig 12 / App A.1, F
+    "roofline",            # dry-run roofline report (deliverable g)
+    "kernel_bench",        # kernel oracle micro-times
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--out", default="runs/bench_results.json")
+    args = ap.parse_args()
+
+    mods = [args.only] if args.only else MODULES
+    all_rows = []
+    print("name,us_per_call,derived")
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            rows = mod.run(quick=args.quick)
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for row in rows:
+            print(row.csv(), flush=True)
+            all_rows.append({"name": row.name, "us_per_call": row.us_per_call,
+                             "derived": row.derived, **row.extra})
+        print(f"# {name}: {len(rows)} rows in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

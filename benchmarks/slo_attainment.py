@@ -1,0 +1,40 @@
+"""Figure 5 + Figure 11: SLO attainment vs request rate, 3 LMMs x
+{2,4,6,8} images/request, EPD vs DistServe vs vLLM."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import A100_80G, SLO
+from repro.core.cluster import ClusterSpec, simulate, summarize
+from repro.data.workload import WorkloadSpec, poisson_requests
+
+from benchmarks.common import (DIST_SPEC, EPD_SPEC, Row, SLO_TABLE9,
+                               VLLM_SPEC, timed)
+
+MODELS = ("minicpm-v-2.6", "internvl2-8b", "internvl2-26b")
+SYSTEMS = {"EPD": (EPD_SPEC, True), "DistServe": (DIST_SPEC, False),
+           "vLLM": (VLLM_SPEC, False)}
+
+
+def run(quick: bool = False) -> list[Row]:
+    rows: list[Row] = []
+    images = (2, 4) if quick else (2, 4, 6, 8)
+    rates = (0.25, 0.5) if quick else (0.1, 0.25, 0.5, 1.0)
+    n_req = 40 if quick else 100
+    for model in MODELS:
+        cfg = get_config(model)
+        for n_img in images:
+            ttft_lim, tpot_lim = SLO_TABLE9[(model, n_img)]
+            slo = SLO(ttft_lim, tpot_lim)
+            for rate in rates:
+                reqs = poisson_requests(cfg, WorkloadSpec(
+                    rate=rate, n_requests=n_req, n_items=n_img,
+                    output_len=10, slo=slo))
+                for sysname, (spec, irp) in SYSTEMS.items():
+                    out, us = timed(simulate, ClusterSpec(spec, irp=irp),
+                                    cfg, A100_80G, reqs)
+                    s = summarize(out, slo)
+                    rows.append(Row(
+                        f"fig5/{model}/img{n_img}/rate{rate}/{sysname}",
+                        us, round(s.slo_attainment, 3),
+                        {"ttft_mean": s.ttft_mean, "tpot_mean": s.tpot_mean}))
+    return rows

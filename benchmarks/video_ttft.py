@@ -1,0 +1,35 @@
+"""Table 1: mean TTFT vs video length (8/16/32/64 frames) at 1 req/s,
+Video-MME-style workload, MiniCPM-V 2.6. Paper: EPD 0.24/0.30/0.49/1.00 s
+vs vLLM 0.42/0.82/1.59/3.11 s."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core.cluster import ClusterSpec, simulate
+from repro.data.workload import videomme_like
+
+from benchmarks.common import DIST_SPEC, EPD_SPEC, Row, VLLM_SPEC, timed
+
+PAPER = {  # frames -> (vLLM, DistServe, EPD)
+    8: (0.42, 0.42, 0.24), 16: (0.82, 0.81, 0.30),
+    32: (1.59, 1.54, 0.49), 64: (3.11, 3.08, 1.00),
+}
+
+
+def run(quick: bool = False) -> list[Row]:
+    cfg = get_config("minicpm-v-2.6")
+    rows: list[Row] = []
+    n = 40 if quick else 100
+    for frames, paper in PAPER.items():
+        reqs = videomme_like(cfg, rate=1.0, n=n, n_frames=frames)
+        for i, (sysname, spec, irp) in enumerate(
+                (("vLLM", VLLM_SPEC, False), ("DistServe", DIST_SPEC, False),
+                 ("EPD", EPD_SPEC, True))):
+            out, us = timed(simulate, ClusterSpec(spec, irp=irp),
+                            cfg, A100_80G, reqs)
+            ttft = float(np.mean([r.ttft for r in out]))
+            rows.append(Row(f"table1/frames{frames}/{sysname}", us,
+                            round(ttft, 3), {"paper": paper[i]}))
+    return rows

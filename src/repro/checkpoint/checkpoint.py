@@ -1,0 +1,90 @@
+"""Checkpointing: pytree <-> .npz with a msgpack-encoded treedef.
+
+orbax/flax are not available offline; this stores every leaf as an npz
+entry keyed by its flattened index plus a msgpack sidecar describing the
+tree structure and dtypes (bf16 stored as uint16 views — npz has no bf16).
+Atomic on rename; keeps the last ``keep`` steps.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _to_numpy(leaf) -> tuple[np.ndarray, str]:
+    arr = np.asarray(jax.device_get(leaf))
+    if str(arr.dtype) == _BF16:
+        return arr.view(np.uint16), _BF16
+    return arr, str(arr.dtype)
+
+
+def _from_numpy(arr: np.ndarray, dtype: str):
+    if dtype == _BF16:
+        return jnp.asarray(arr.view(jnp.bfloat16))
+    return jnp.asarray(arr)
+
+
+def _paths(tree: Any) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [jax.tree_util.keystr(p) for p, _ in flat]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays, dtypes = {}, []
+    for i, leaf in enumerate(leaves):
+        arr, dt = _to_numpy(leaf)
+        arrays[f"leaf_{i}"] = arr
+        dtypes.append(dt)
+    meta = msgpack.packb({"step": step, "dtypes": dtypes,
+                          "paths": _paths(tree),
+                          "treedef": str(treedef)})
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".npz.tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, __meta__=np.frombuffer(meta, np.uint8), **arrays)
+    os.replace(tmp, path)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if re.fullmatch(r"ckpt_\d+\.npz", f))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"ckpt_(\d+)\.npz", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, tree_like: Any,
+                       step: Optional[int] = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like`` (shapes must match)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+    meta = msgpack.unpackb(bytes(data["__meta__"]))
+    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(leaves) == len(meta["dtypes"]), \
+        f"leaf count mismatch: {len(leaves)} vs {len(meta['dtypes'])}"
+    out = [_from_numpy(data[f"leaf_{i}"], meta["dtypes"][i])
+           for i in range(len(leaves))]
+    return jax.tree_util.tree_unflatten(treedef, out), meta["step"]

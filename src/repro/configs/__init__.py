@@ -1,0 +1,63 @@
+"""Architecture config registry.
+
+Importing this package registers every config. ``ASSIGNED`` lists the 10
+architectures assigned from the public pool; ``PAPER_LMMS`` the paper's own
+evaluation models.
+"""
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ArchConfig,
+    InputShape,
+    ModalitySpec,
+    MoESpec,
+    RWKVSpec,
+    SSMSpec,
+    get_config,
+    list_archs,
+    register,
+)
+
+# registration side effects
+from repro.configs import (  # noqa: F401
+    codeqwen15_7b,
+    granite_moe_3b,
+    internlm2_20b,
+    minitron_4b,
+    mistral_large_123b,
+    paper_lmms,
+    pixtral_12b,
+    qwen3_moe_30b,
+    rwkv6_1p6b,
+    whisper_large_v3,
+    zamba2_7b,
+)
+
+ASSIGNED = [
+    "zamba2-7b",
+    "rwkv6-1.6b",
+    "pixtral-12b",
+    "granite-moe-3b-a800m",
+    "mistral-large-123b",
+    "internlm2-20b",
+    "codeqwen1.5-7b",
+    "whisper-large-v3",
+    "qwen3-moe-30b-a3b",
+    "minitron-4b",
+]
+
+PAPER_LMMS = ["minicpm-v-2.6", "internvl2-8b", "internvl2-26b", "ultravox-v0_3"]
+
+__all__ = [
+    "ASSIGNED",
+    "INPUT_SHAPES",
+    "PAPER_LMMS",
+    "ArchConfig",
+    "InputShape",
+    "ModalitySpec",
+    "MoESpec",
+    "RWKVSpec",
+    "SSMSpec",
+    "get_config",
+    "list_archs",
+    "register",
+]

@@ -1,0 +1,303 @@
+"""Architecture config system.
+
+Every assigned architecture (and the paper's own LMMs) is an ``ArchConfig``
+registered under its public id, selectable via ``--arch <id>`` in the
+launchers. Full configs are exercised only through the dry-run
+(ShapeDtypeStruct, no allocation); ``reduced()`` yields the CPU-smoke variant
+(<=2 layers, d_model<=512, <=4 experts) used by tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    """Mixture-of-experts spec. ``d_ff`` in the parent is per-expert."""
+    n_experts: int
+    top_k: int
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+    # >0: dispatch per data-parallel group (beyond-paper §Perf optimization:
+    # keeps the sort/scatter local to a data shard; see models/moe.py)
+    dispatch_groups: int = 0
+    # >0: pad expert weights to this count so the expert dim divides the
+    # model axis (e.g. granite's 40 -> 48 on a 16-wide mesh). Padded experts
+    # receive no routes; only their weight memory is spent.
+    pad_experts: int = 0
+    # shard_map expert-parallel path with explicit all-to-alls on the
+    # dispatch/return (beyond-paper §Perf iteration A4). Requires a mesh in
+    # repro.launch.context and batch % data-axis == 0; falls back otherwise.
+    use_shard_map: bool = False
+
+    @property
+    def n_experts_padded(self) -> int:
+        return max(self.n_experts, self.pad_experts)
+
+
+@dataclass(frozen=True)
+class SSMSpec:
+    """Mamba2-style SSD spec."""
+    d_state: int = 64
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def n_heads(self, d_model: int) -> int:
+        return (self.expand * d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class RWKVSpec:
+    """RWKV6 (Finch) spec: data-dependent decay linear attention."""
+    head_dim: int = 64
+
+    def n_heads(self, d_model: int) -> int:
+        return d_model // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModalitySpec:
+    """Modality frontend description.
+
+    The frontend itself (mel+conv codec / ViT patchifier) is STUBBED:
+    ``input_specs`` hands the backbone precomputed embeddings of shape
+    ``(B, n_items * tokens_per_item, d_frontend)``. The projector
+    (d_frontend -> d_model) and everything downstream is real. ``enc_layers``
+    / ``enc_d_model`` describe the encoder transformer for the E-stage cost
+    model (and, for whisper, the *real* encoder transformer).
+    """
+    kind: str                      # "vision" | "audio"
+    d_frontend: int
+    enc_layers: int
+    enc_d_model: int
+    enc_heads: int
+    enc_d_ff: int
+    tokens_per_item: int           # OUTPUT mm tokens per image-patch / clip
+    # tokens the encoder itself processes per patch (pre-compression; e.g.
+    # (448/14)^2 = 1024 ViT tokens vs 64 output tokens after MiniCPM's
+    # resampler). Drives the E-stage compute cost.
+    enc_tokens_per_item: int = 0   # 0 -> same as tokens_per_item
+    preprocess_s: float = 0.0      # host preprocessing per patch (resize etc.)
+    # InternVL-style dynamic tiling divides a fixed tile budget across the
+    # images of a request (0 = unlimited, MiniCPM-style per-image slicing)
+    tile_budget: int = 0
+    # patches per image at the paper's three eval resolutions (W,H)
+    patches_at_res: dict[tuple[int, int], int] = field(
+        default_factory=lambda: {(313, 234): 1, (787, 444): 3, (4032, 3024): 10}
+    )
+
+    @property
+    def enc_tokens(self) -> int:
+        return self.enc_tokens_per_item or self.tokens_per_item
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                   # query heads; 0 => attention-free
+    n_kv_heads: int
+    d_ff: int                      # per-expert if moe is set
+    vocab: int
+    source: str = ""
+    moe: Optional[MoESpec] = None
+    ssm: Optional[SSMSpec] = None
+    rwkv: Optional[RWKVSpec] = None
+    modality: Optional[ModalitySpec] = None
+    attn_every: int = 0            # hybrid: a shared attn block every N layers
+    n_enc_layers: int = 0          # enc-dec (whisper): encoder depth
+    sliding_window: int = 0        # 0 = full attention
+    long_context_window: int = 8192   # SW used for the long_500k dense variant
+    max_context: int = 131_072     # OOCL limit (paper App. A.2)
+    rope_theta: float = 1e6
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------- derived
+    @property
+    def head_dim(self) -> int:
+        if self.n_heads == 0:
+            return 0
+        return self.d_model // self.n_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.n_heads == 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def has_encoder_stage(self) -> bool:
+        """True if the arch has a multimodal E stage (EPD applies fully)."""
+        return self.modality is not None
+
+    def attn_layer_ids(self) -> list[int]:
+        """For hybrid archs: indices of (shared) attention layers."""
+        if self.attn_every <= 0:
+            return [] if self.family in ("ssm",) else list(range(self.n_layers))
+        return [i for i in range(self.n_layers) if (i + 1) % self.attn_every == 0]
+
+    # ------------------------------------------------------- param counting
+    def param_count(self) -> int:
+        """Approximate parameter count (used by the cost/memory model)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        n = emb
+        attn_ids = set(self.attn_layer_ids())
+        hd = self.head_dim
+        attn_p = d * (self.n_heads * hd) + 2 * d * (self.n_kv_heads * hd) \
+            + (self.n_heads * hd) * d if self.n_heads else 0
+        if self.moe is not None:
+            ffn_p = self.moe.n_experts * 3 * d * f + d * self.moe.n_experts
+        else:
+            ffn_p = 3 * d * f
+        if self.family == "hybrid":
+            ssm_p = self._ssm_params()
+            n_attn = len(attn_ids)
+            n_ssm = self.n_layers - n_attn
+            # shared attention block: ONE set of weights reused
+            n += n_ssm * ssm_p + (attn_p + ffn_p) + self.n_layers * 2 * d
+        elif self.family == "ssm" and self.rwkv is not None:
+            n += self.n_layers * (self._rwkv_params() + ffn_p + 2 * d)
+        elif self.family == "ssm":
+            n += self.n_layers * (self._ssm_params() + 2 * d)
+        elif self.is_encdec:
+            # decoder: self-attn + cross-attn + ffn; encoder: self-attn + ffn
+            n += self.n_layers * (2 * attn_p + ffn_p + 3 * d)
+            m = self.modality
+            if m:
+                ea = m.enc_d_model * m.enc_d_model * 4
+                ef = 3 * m.enc_d_model * m.enc_d_ff
+                n += m.enc_layers * (ea + ef)
+        else:
+            n += self.n_layers * (attn_p + ffn_p + 2 * d)
+            if self.modality is not None:
+                m = self.modality
+                ea = m.enc_d_model * m.enc_d_model * 4
+                ef = 3 * m.enc_d_model * m.enc_d_ff
+                n += m.enc_layers * (ea + ef) + m.d_frontend * self.d_model
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full_ffn = self.moe.n_experts * 3 * d * f
+        act_ffn = self.moe.top_k * 3 * d * f
+        return int(self.param_count() - self.n_layers * (full_ffn - act_ffn))
+
+    def encoder_param_count(self) -> int:
+        """Params of the multimodal encoder only (E-stage memory model)."""
+        m = self.modality
+        if m is None:
+            return 0
+        ea = m.enc_d_model * m.enc_d_model * 4
+        ef = 3 * m.enc_d_model * m.enc_d_ff
+        return int(m.enc_layers * (ea + ef) + m.d_frontend * self.d_model)
+
+    def _ssm_params(self) -> int:
+        s = self.ssm or SSMSpec()
+        d = self.d_model
+        di = s.expand * d
+        nh = s.n_heads(d)
+        # in_proj -> (z, x, B, C, dt) with n_groups=1; conv over x,B,C; out_proj
+        in_proj = d * (2 * di + 2 * s.d_state + nh)
+        conv = (di + 2 * s.d_state) * s.d_conv
+        out_proj = di * d
+        return in_proj + conv + out_proj + 3 * nh + di
+
+    def _rwkv_params(self) -> int:
+        d = self.d_model
+        # time-mix: r,k,v,g,w projections + output + lora decays (approx)
+        return 6 * d * d + 4 * d * 64
+
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> int:
+        """KV-cache bytes per sequence token (across all caching layers)."""
+        hd = self.head_dim
+        n_attn = len(self.attn_layer_ids())
+        kv = 2 * self.n_kv_heads * hd * dtype_bytes
+        if self.is_encdec:
+            return self.n_layers * kv  # decoder self-attn
+        return n_attn * kv
+
+    # ------------------------------------------------------------- reduced
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: <=2 layers, d_model<=512, <=4 experts."""
+        d = 256
+        heads = 0 if self.attention_free else 4
+        kv = 0 if self.attention_free else max(1, min(self.n_kv_heads, 2))
+        kw = dict(
+            name=self.name + "-reduced",
+            n_layers=2,
+            d_model=d,
+            n_heads=heads,
+            n_kv_heads=kv,
+            d_ff=128 if self.moe else 512,
+            vocab=512,
+            attn_every=2 if self.attn_every else 0,
+            n_enc_layers=2 if self.n_enc_layers else 0,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+        )
+        if self.moe is not None:
+            # generous capacity so reduced-model smoke tests are drop-free
+            kw["moe"] = replace(self.moe, n_experts=4, top_k=2,
+                                capacity_factor=4.0)
+        if self.ssm is not None:
+            kw["ssm"] = replace(self.ssm, d_state=16, head_dim=64, chunk=32)
+        if self.rwkv is not None:
+            kw["rwkv"] = replace(self.rwkv, head_dim=64)
+        if self.modality is not None:
+            kw["modality"] = replace(
+                self.modality, d_frontend=128, enc_layers=2, enc_d_model=128,
+                enc_heads=4, enc_d_ff=256, tokens_per_item=16)
+        return replace(self, **kw)
+
+
+# ---------------------------------------------------------------- registry
+_REGISTRY: dict[str, ArchConfig] = {}
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate arch config: {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ArchConfig:
+    from repro import configs as _pkg  # ensure registration side-effects ran
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    from repro import configs as _pkg
+    return sorted(_REGISTRY)
+
+
+# ------------------------------------------------------------- input shapes
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,18 @@
+"""CodeQwen1.5-7B — qwen1.5 arch (MHA: kv == q heads).
+
+[hf:Qwen/CodeQwen1.5-7B] 32L d_model=4096 32H (GQA kv=32) d_ff=13440
+vocab=92416.
+"""
+from repro.configs.base import ArchConfig, register
+
+CODEQWEN15_7B = register(ArchConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=13440,
+    vocab=92416,
+    source="hf:Qwen/CodeQwen1.5-7B",
+))

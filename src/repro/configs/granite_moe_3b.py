@@ -1,0 +1,20 @@
+"""Granite-MoE 3B-a800m — 40 experts, top-8 routing.
+
+[hf:ibm-granite/granite-3.0-1b-a400m-base] 32L d_model=1536 24H (GQA kv=8)
+d_ff=512 (per expert) vocab=49155, MoE 40e top-8.
+"""
+from repro.configs.base import ArchConfig, MoESpec, register
+
+GRANITE_MOE_3B = register(ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    moe=MoESpec(n_experts=40, top_k=8),
+    tie_embeddings=True,
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+))

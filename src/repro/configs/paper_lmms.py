@@ -1,0 +1,116 @@
+"""The paper's own evaluation LMMs (Appendix E.2).
+
+These drive the EPD reproduction benchmarks (SLO attainment, TTFT, memory
+tables). Backbone dims follow the public model cards:
+
+- MiniCPM-V 2.6 = SigLip-400M encoder + Qwen2-7B LLM  [arXiv:2408.01800]
+- InternVL2-8B  = InternViT-300M-448px + internlm2_5-7b-chat [CVPR'24]
+- InternVL2-26B = InternViT-6B-448px-V1-5 + internlm2-chat-20b
+- ultravox-v0_3 = whisper-style audio encoder + LLaMA3.1-8B (Appendix A.1)
+
+``tokens_per_item`` encodes the paper's observation that MiniCPM produces far
+fewer image tokens per patch (64) than InternVL (256) — this asymmetry drives
+the prefill-heaviness differences in Figure 5.
+"""
+from repro.configs.base import ArchConfig, ModalitySpec, register
+
+MINICPM_V_2_6 = register(ArchConfig(
+    name="minicpm-v-2.6",
+    family="vlm",
+    n_layers=28,                 # Qwen2-7B backbone
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab=151646,
+    max_context=32_768,
+    modality=ModalitySpec(
+        kind="vision",
+        d_frontend=1152,         # SigLip-400M
+        enc_layers=27,
+        enc_d_model=1152,
+        enc_heads=16,
+        enc_d_ff=4304,
+        tokens_per_item=64,      # MiniCPM's compressed image tokens per slice
+        enc_tokens_per_item=1024,  # (448/14)^2 SigLip tokens pre-resampler
+        preprocess_s=0.02,
+        patches_at_res={(313, 234): 1, (787, 444): 3, (4032, 3024): 10},
+    ),
+    source="arXiv:2408.01800",
+))
+
+INTERNVL2_8B = register(ArchConfig(
+    name="internvl2-8b",
+    family="vlm",
+    n_layers=32,                 # internlm2_5-7b-chat backbone
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=92544,
+    max_context=8_192,
+    modality=ModalitySpec(
+        kind="vision",
+        d_frontend=1024,         # InternViT-300M-448px
+        enc_layers=24,
+        enc_d_model=1024,
+        enc_heads=16,
+        enc_d_ff=4096,
+        tokens_per_item=256,
+        enc_tokens_per_item=1024,
+        preprocess_s=0.02,
+        tile_budget=12,
+        patches_at_res={(313, 234): 1, (787, 444): 3, (4032, 3024): 13},
+    ),
+    source="hf:OpenGVLab/InternVL2-8B",
+))
+
+INTERNVL2_26B = register(ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,                 # internlm2-chat-20b backbone
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    max_context=8_192,
+    modality=ModalitySpec(
+        kind="vision",
+        d_frontend=3200,         # InternViT-6B-448px-V1-5
+        enc_layers=45,
+        enc_d_model=3200,
+        enc_heads=25,
+        enc_d_ff=12800,
+        tokens_per_item=256,
+        enc_tokens_per_item=1024,
+        preprocess_s=0.02,
+        tile_budget=12,
+        patches_at_res={(313, 234): 1, (787, 444): 3, (4032, 3024): 13},
+    ),
+    source="hf:OpenGVLab/InternVL2-26B",
+))
+
+ULTRAVOX_V0_3 = register(ArchConfig(
+    name="ultravox-v0_3",
+    family="vlm",                # audio-frontend LLM (decoder-only, not encdec)
+    n_layers=32,                 # LLaMA3.1-8B backbone
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    modality=ModalitySpec(
+        kind="audio",
+        d_frontend=1280,         # whisper-medium-style encoder
+        enc_layers=24,
+        enc_d_model=1024,
+        enc_heads=16,
+        enc_d_ff=4096,
+        tokens_per_item=188,     # ~6s audio clip -> tokens after stacking
+        enc_tokens_per_item=750,
+        preprocess_s=0.01,
+        patches_at_res={(313, 234): 1, (787, 444): 1, (4032, 3024): 1},
+    ),
+    source="hf:fixie-ai/ultravox-v0_3",
+))

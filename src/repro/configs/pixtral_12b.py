@@ -1,0 +1,33 @@
+"""Pixtral-12B — pixtral-ViT frontend (stub) + mistral-nemo style decoder.
+
+[hf:mistralai/Pixtral-12B-2409] 40L d_model=5120 32H (GQA kv=8) d_ff=14336
+vocab=131072. Vision: 1024-dim ViT, 16x16 patches; the ViT is a STUB —
+``input_specs`` provides precomputed patch embeddings; the projector and the
+decoder are real. EPD's E stage applies fully (IRP shards patches).
+"""
+from repro.configs.base import ArchConfig, ModalitySpec, register
+
+PIXTRAL_12B = register(ArchConfig(
+    name="pixtral-12b",
+    family="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=131072,
+    modality=ModalitySpec(
+        kind="vision",
+        d_frontend=1024,
+        enc_layers=24,
+        enc_d_model=1024,
+        enc_heads=16,
+        enc_d_ff=4096,
+        tokens_per_item=256,        # tokens per image patch-group
+        enc_tokens_per_item=1024,
+        preprocess_s=0.02,
+        patches_at_res={(313, 234): 1, (787, 444): 4, (4032, 3024): 16},
+    ),
+    rope_theta=1e9,
+    source="hf:mistralai/Pixtral-12B-2409",
+))

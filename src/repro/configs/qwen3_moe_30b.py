@@ -1,0 +1,19 @@
+"""Qwen3-30B-A3B — 128 experts, top-8 routing.
+
+[hf:Qwen/Qwen3-30B-A3B] 48L d_model=2048 32H (GQA kv=4) d_ff=768 (per expert)
+vocab=151936, MoE 128e top-8.
+"""
+from repro.configs.base import ArchConfig, MoESpec, register
+
+QWEN3_MOE_30B = register(ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=768,
+    vocab=151936,
+    moe=MoESpec(n_experts=128, top_k=8),
+    source="hf:Qwen/Qwen3-30B-A3B",
+))

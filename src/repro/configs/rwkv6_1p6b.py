@@ -1,0 +1,18 @@
+"""RWKV6 "Finch" 1.6B — attention-free, data-dependent decay linear attention.
+
+[arXiv:2404.05892] 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536.
+"""
+from repro.configs.base import ArchConfig, RWKVSpec, register
+
+RWKV6_1P6B = register(ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=7168,
+    vocab=65536,
+    rwkv=RWKVSpec(head_dim=64),
+    source="arXiv:2404.05892",
+))

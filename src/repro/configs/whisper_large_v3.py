@@ -1,0 +1,31 @@
+"""Whisper-large-v3 — encoder-decoder audio model. [arXiv:2212.04356]
+
+32L (enc) + 32L (dec), d_model=1280 20H (kv=20) d_ff=5120 vocab=51866.
+The mel-spectrogram + conv frontend is a STUB (``input_specs`` provides
+precomputed frame embeddings); the transformer encoder IS implemented and is
+the EPD E stage; the decoder runs P (prefill w/ cross-attn cache) and D.
+"""
+from repro.configs.base import ArchConfig, ModalitySpec, register
+
+WHISPER_LARGE_V3 = register(ArchConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab=51866,
+    modality=ModalitySpec(
+        kind="audio",
+        d_frontend=1280,
+        enc_layers=32,
+        enc_d_model=1280,
+        enc_heads=20,
+        enc_d_ff=5120,
+        tokens_per_item=1500,       # frames per 30s clip after conv stub
+        patches_at_res={(313, 234): 1, (787, 444): 1, (4032, 3024): 1},
+    ),
+    source="arXiv:2212.04356",
+))

@@ -1,0 +1,22 @@
+"""Zamba2-7B — Mamba2 backbone with a SHARED attention block every 6th layer.
+
+[arXiv:2411.15242] 81L d_model=3584 32H (GQA kv=32) d_ff=14336 vocab=32000,
+ssm_state=64. The attention+MLP block weights are shared across all its
+occurrences (Zamba's signature trick), which ``param_count`` reflects.
+"""
+from repro.configs.base import ArchConfig, SSMSpec, register
+
+ZAMBA2_7B = register(ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    ssm=SSMSpec(d_state=64, d_conv=4, expand=2, head_dim=64, chunk=256),
+    attn_every=6,
+    rope_theta=1e4,
+    source="arXiv:2411.15242",
+))

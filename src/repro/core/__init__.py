@@ -1,0 +1,24 @@
+# The paper's primary contribution: EPD disaggregation.
+# - request.py        request lifecycle + SLO metrics
+# - block_manager.py  MM / KV paged caches (paper §3.2.1)
+# - instance.py       E/P/D stage instances (+ aggregated baselines)
+# - scheduler.py      assignment + queue-ordering policies (App. D)
+# - simulator.py      discrete-event cluster sim: IRP, migrations, switching
+# - costmodel.py      roofline stage costs, A100/910B3/TPUv5e profiles
+# - cluster.py        "5E2P1D"-style specs, metrics, goodput
+# - allocator.py      black-box (GP-EI) resource allocation (§3.2.3)
+from repro.core.block_manager import (BlockManager, KVBlockManager,
+                                      MMBlockManager, OutOfBlocks)
+from repro.core.cluster import ClusterSpec, Summary, goodput, simulate, summarize
+from repro.core.costmodel import (A100_80G, NPU_910B3, PROFILES, TPU_V5E,
+                                  HardwareProfile)
+from repro.core.instance import Instance
+from repro.core.request import SLO, Request
+from repro.core.simulator import Simulator
+
+__all__ = [
+    "A100_80G", "NPU_910B3", "PROFILES", "TPU_V5E", "BlockManager",
+    "ClusterSpec", "HardwareProfile", "Instance", "KVBlockManager",
+    "MMBlockManager", "OutOfBlocks", "Request", "SLO", "Simulator",
+    "Summary", "goodput", "simulate", "summarize",
+]

@@ -1,0 +1,201 @@
+"""Optimized resource allocation (paper §3.2.3, Appendix D).
+
+Solves   max_{(p, b, s) in X}  f(p, b, s) − β·cost(p)
+where p = instances-per-stage (+ IRP on/off), b = per-stage max batch sizes,
+s = scheduling policies — evaluated on the discrete-event simulator, exactly
+as the paper does ("we rely on a simulator extended from DistServe").
+
+The optimizer is Bayesian: a small numpy Gaussian process (RBF kernel) over
+normalized config vectors with expected-improvement acquisition on a random
+candidate pool, seeded by random search. No external dependencies.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+from repro.core.cluster import ClusterSpec, simulate, summarize
+from repro.core.request import SLO, Request
+from repro.core.scheduler import FCFS, LEAST_LOADED, ROUND_ROBIN, SJF
+
+BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+@dataclass(frozen=True)
+class AllocConfig:
+    """One point in the search space X."""
+    n_e: int
+    n_p: int
+    n_d: int
+    batch_e: int
+    batch_p: int
+    batch_d: int
+    irp: bool
+    queue_policy: str = FCFS
+    assign_policy: str = LEAST_LOADED
+
+    def spec(self) -> ClusterSpec:
+        parts = []
+        if self.n_e:
+            parts.append(f"{self.n_e}E")
+        parts.append(f"{self.n_p}P")
+        parts.append(f"{self.n_d}D")
+        return ClusterSpec("".join(parts),
+                           max_batch=max(self.batch_e, self.batch_p),
+                           decode_batch=self.batch_d, irp=self.irp,
+                           queue_policy=self.queue_policy,
+                           assign_policy=self.assign_policy)
+
+    @property
+    def n_gpus(self) -> int:
+        return self.n_e + self.n_p + self.n_d
+
+    def vector(self) -> np.ndarray:
+        return np.array([
+            self.n_e, self.n_p, self.n_d,
+            math.log2(self.batch_e), math.log2(self.batch_p),
+            math.log2(self.batch_d), float(self.irp),
+            float(self.queue_policy == SJF),
+            float(self.assign_policy == LEAST_LOADED),
+        ], dtype=np.float64)
+
+
+def sample_configs(rng: np.random.Generator, n: int, *, n_gpus: int = 8,
+                   exact_gpus: bool = True,
+                   require_encode: bool = True) -> list[AllocConfig]:
+    """Rejection-sample X under the GPU-budget constraint (Appendix D)."""
+    out: list[AllocConfig] = []
+    while len(out) < n:
+        if require_encode:
+            n_e = int(rng.integers(1, n_gpus - 1))
+            n_p = int(rng.integers(1, n_gpus - n_e))
+        else:
+            n_e = 0
+            n_p = int(rng.integers(1, n_gpus))
+        n_d = (n_gpus - n_e - n_p) if exact_gpus \
+            else int(rng.integers(1, n_gpus - n_e - n_p + 1))
+        if n_d < 1:
+            continue
+        cfgc = AllocConfig(
+            n_e=n_e, n_p=n_p, n_d=n_d,
+            batch_e=int(rng.choice(BATCH_CHOICES[:6])),
+            batch_p=int(rng.choice(BATCH_CHOICES[:6])),
+            batch_d=int(rng.choice(BATCH_CHOICES[4:])),
+            irp=bool(rng.integers(0, 2)),
+            queue_policy=str(rng.choice([FCFS, SJF])),
+            assign_policy=str(rng.choice([ROUND_ROBIN, LEAST_LOADED])),
+        )
+        out.append(cfgc)
+    return out
+
+
+# ------------------------------------------------------------ GP + EI (BO)
+class _GP:
+    def __init__(self, noise: float = 1e-3):
+        self.noise = noise
+        self.X: Optional[np.ndarray] = None
+
+    def fit(self, X: np.ndarray, y: np.ndarray):
+        self.mu = y.mean()
+        self.sig = y.std() + 1e-9
+        self.X = X
+        self.scale = X.std(axis=0) + 1e-9
+        Xn = X / self.scale
+        self.yn = (y - self.mu) / self.sig
+        K = self._k(Xn, Xn) + self.noise * np.eye(len(X))
+        self.L = np.linalg.cholesky(K)
+        self.alpha = np.linalg.solve(
+            self.L.T, np.linalg.solve(self.L, self.yn))
+        self.Xn = Xn
+
+    def _k(self, A, B):
+        d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+        return np.exp(-0.5 * d2 / max(A.shape[1], 1))
+
+    def predict(self, X: np.ndarray):
+        Xn = X / self.scale
+        Ks = self._k(Xn, self.Xn)
+        mean = Ks @ self.alpha
+        v = np.linalg.solve(self.L, Ks.T)
+        var = np.clip(1.0 - (v ** 2).sum(0), 1e-9, None)
+        return mean * self.sig + self.mu, np.sqrt(var) * self.sig
+
+
+def _ei(mean, std, best):
+    z = (mean - best) / std
+    phi = np.exp(-0.5 * z ** 2) / math.sqrt(2 * math.pi)
+    Phi = 0.5 * (1 + np.vectorize(math.erf)(z / math.sqrt(2)))
+    return (mean - best) * Phi + std * phi
+
+
+@dataclass
+class BOResult:
+    best: AllocConfig
+    best_score: float
+    history: list = field(default_factory=list)
+
+
+def optimize_allocation(eval_fn: Callable[[AllocConfig], float], *,
+                        n_gpus: int = 8, n_init: int = 8, n_iter: int = 16,
+                        require_encode: bool = True, seed: int = 0,
+                        beta: float = 0.0, gpu_cost: float = 1.0) -> BOResult:
+    """Maximize eval_fn(cfg) − β·cost over X via GP-EI Bayesian optimization."""
+    rng = np.random.default_rng(seed)
+
+    def objective(c: AllocConfig) -> float:
+        return eval_fn(c) - beta * gpu_cost * c.n_gpus
+
+    tried: dict = {}
+
+    def run(c: AllocConfig) -> float:
+        if c not in tried:
+            tried[c] = objective(c)
+        return tried[c]
+
+    configs = sample_configs(rng, n_init, n_gpus=n_gpus,
+                             require_encode=require_encode)
+    scores = [run(c) for c in configs]
+    history = list(zip(configs, scores))
+
+    gp = _GP()
+    for _ in range(n_iter):
+        X = np.stack([c.vector() for c, _ in history])
+        y = np.array([s for _, s in history])
+        gp.fit(X, y)
+        pool = sample_configs(rng, 256, n_gpus=n_gpus,
+                              require_encode=require_encode)
+        Xp = np.stack([c.vector() for c in pool])
+        mean, std = gp.predict(Xp)
+        cand = pool[int(np.argmax(_ei(mean, std, y.max())))]
+        history.append((cand, run(cand)))
+
+    best, best_score = max(history, key=lambda t: t[1])
+    return BOResult(best=best, best_score=best_score, history=history)
+
+
+# --------------------------------------------------- canned objective: goodput
+def goodput_objective(cfg: ArchConfig, hw: cm.HardwareProfile,
+                      make_requests: Callable[[float], list[Request]],
+                      slo: SLO, rates: Sequence[float]):
+    """eval_fn measuring goodput (max rate with >=90% SLO attainment)."""
+    def eval_fn(alloc: AllocConfig) -> float:
+        best = 0.0
+        for rate in sorted(rates):
+            reqs = make_requests(rate)
+            try:
+                out = simulate(alloc.spec(), cfg, hw, reqs)
+                s = summarize(out, slo)
+            except Exception:
+                break
+            if s.slo_attainment >= 0.9:
+                best = rate
+            else:
+                break
+        return best
+    return eval_fn

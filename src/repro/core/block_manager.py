@@ -1,0 +1,99 @@
+"""Paged cache block managers.
+
+``BlockManager`` is the shared paging engine; ``MMBlockManager`` (paper
+§3.2.1) manages multimodal-token blocks on E and P workers and pre-allocates
+blocks per request; ``KVBlockManager`` manages paged KV blocks on P and D
+workers and supports appending blocks as decode grows the sequence.
+
+Invariants (property-tested):
+  * a block is owned by at most one request,
+  * used + free == capacity,
+  * freeing a request returns exactly the blocks it held.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class OutOfBlocks(Exception):
+    pass
+
+
+@dataclass
+class BlockManager:
+    n_blocks: int
+    block_size: int                       # tokens per block
+    name: str = "cache"
+    _free: list[int] = field(default_factory=list)
+    _owned: dict[int, list[int]] = field(default_factory=dict)
+
+    def __post_init__(self):
+        self._free = list(range(self.n_blocks))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return self.blocks_for(n_tokens) <= self.free_blocks
+
+    def owner_blocks(self, req_id: int) -> list[int]:
+        return list(self._owned.get(req_id, ()))
+
+    # ---------------------------------------------------------- mutations
+    def allocate(self, req_id: int, n_tokens: int) -> list[int]:
+        """Pre-allocate blocks for a request (paper: MMBlockManager
+        'pre-allocates cache blocks based on each request's needs')."""
+        need = self.blocks_for(n_tokens)
+        if need > len(self._free):
+            raise OutOfBlocks(
+                f"{self.name}: need {need} blocks, have {len(self._free)}")
+        blocks = [self._free.pop() for _ in range(need)]
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def append(self, req_id: int, n_new_tokens: int,
+               current_tokens: int) -> list[int]:
+        """Grow a request's allocation (decode). Only allocates blocks the
+        growth actually crosses into."""
+        have = len(self._owned.get(req_id, ()))
+        need_total = self.blocks_for(current_tokens + n_new_tokens)
+        extra = max(0, need_total - have)
+        if extra > len(self._free):
+            raise OutOfBlocks(f"{self.name}: append needs {extra}")
+        blocks = [self._free.pop() for _ in range(extra)]
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def free(self, req_id: int) -> int:
+        """Release all blocks of a request (e.g. after EP-migration confirms
+        the transfer — 'encoding cache entries are cleared to free memory')."""
+        blocks = self._owned.pop(req_id, [])
+        self._free.extend(blocks)
+        return len(blocks)
+
+    def reset(self) -> None:
+        self._owned.clear()
+        self._free = list(range(self.n_blocks))
+
+
+class MMBlockManager(BlockManager):
+    """Multimodal-token cache (paper §3.2.1)."""
+
+    def __init__(self, n_blocks: int, block_size: int = 16):
+        super().__init__(n_blocks=n_blocks, block_size=block_size, name="mm")
+
+
+class KVBlockManager(BlockManager):
+    """Paged KV cache (vLLM-style)."""
+
+    def __init__(self, n_blocks: int, block_size: int = 16):
+        super().__init__(n_blocks=n_blocks, block_size=block_size, name="kv")

@@ -1,0 +1,133 @@
+"""Cluster construction + serving metrics.
+
+``build_cluster`` turns a config string like "5E2P1D" (paper notation:
+5 encode, 2 prefill, 1 decode instances) into instances; vLLM / DistServe
+baselines use "8EPD" / "7EP1D"-style specs. ``simulate`` wires a Simulator;
+``summarize`` computes the paper's metrics (TTFT / TPOT / SLO attainment),
+and ``goodput`` sweeps request rates for the max rate with >=90% attainment.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+from repro.core.instance import Instance
+from repro.core.request import SLO, Request
+from repro.core.scheduler import FCFS, LEAST_LOADED
+from repro.core.simulator import Simulator
+
+_SPEC_RE = re.compile(r"(\d+)(EPD|EP|E|P|D)")
+
+
+@dataclass
+class ClusterSpec:
+    spec: str                            # e.g. "5E2P1D", "8EPD", "7EP1D"
+    chips_per_instance: int = 1
+    max_batch: int = 8
+    decode_batch: int = 128
+    kv_frac: float = 0.5                 # paper E.1: KV utilization 50%
+    irp: bool = True
+    irp_degree: int = 0
+    role_switch: bool = False
+    assign_policy: str = LEAST_LOADED
+    queue_policy: str = FCFS
+    # heterogeneous clusters (paper App. A.3): one HardwareProfile per
+    # instance, aligned with roles(); None = homogeneous
+    hw_mix: Optional[list] = None
+
+    def roles(self) -> list[str]:
+        out = []
+        for count, role in _SPEC_RE.findall(self.spec):
+            out.extend([role] * int(count))
+        if not out:
+            raise ValueError(f"bad cluster spec {self.spec!r}")
+        return out
+
+    @property
+    def n_chips(self) -> int:
+        return len(self.roles()) * self.chips_per_instance
+
+
+def build_cluster(spec: ClusterSpec, cfg: ArchConfig,
+                  hw: cm.HardwareProfile) -> list[Instance]:
+    roles = spec.roles()
+    mix = spec.hw_mix or [hw] * len(roles)
+    if len(mix) != len(roles):
+        raise ValueError(f"hw_mix has {len(mix)} entries for "
+                         f"{len(roles)} instances")
+    return [Instance(role, spec.chips_per_instance, cfg, h,
+                     max_batch=spec.max_batch, decode_batch=spec.decode_batch,
+                     kv_frac=spec.kv_frac)
+            for role, h in zip(roles, mix)]
+
+
+def simulate(spec: ClusterSpec, cfg: ArchConfig, hw: cm.HardwareProfile,
+             requests: Sequence[Request], **sim_kw) -> list[Request]:
+    instances = build_cluster(spec, cfg, hw)
+    sim = Simulator(cfg, hw, instances,
+                    assign_policy=spec.assign_policy,
+                    queue_policy=spec.queue_policy,
+                    irp=spec.irp, irp_degree=spec.irp_degree,
+                    role_switch=spec.role_switch, **sim_kw)
+    return sim.run([_clone(r) for r in requests])
+
+
+def _clone(r: Request) -> Request:
+    return Request(req_id=r.req_id, arrival=r.arrival,
+                   prompt_len=r.prompt_len, n_items=r.n_items,
+                   patches_per_item=r.patches_per_item,
+                   tokens_per_patch=r.tokens_per_patch,
+                   output_len=r.output_len, slo=r.slo)
+
+
+# ------------------------------------------------------------------ metrics
+@dataclass
+class Summary:
+    n: int
+    ttft_mean: float
+    ttft_p50: float
+    ttft_p99: float
+    tpot_mean: float
+    latency_mean: float
+    slo_attainment: float
+
+    def row(self) -> dict:
+        return self.__dict__.copy()
+
+
+def summarize(requests: Sequence[Request],
+              slo: Optional[SLO] = None) -> Summary:
+    done = [r for r in requests if r.done()]
+    assert done, "no request finished"
+    ttfts = np.array([r.ttft for r in done])
+    tpots = np.array([r.tpot for r in done])
+    lats = np.array([r.e2e_latency for r in done])
+    att = float(np.mean([r.attains(slo) for r in done])) if (
+        slo or all(r.slo for r in done)) else float("nan")
+    return Summary(
+        n=len(done),
+        ttft_mean=float(ttfts.mean()),
+        ttft_p50=float(np.percentile(ttfts, 50)),
+        ttft_p99=float(np.percentile(ttfts, 99)),
+        tpot_mean=float(tpots.mean()),
+        latency_mean=float(lats.mean()),
+        slo_attainment=att,
+    )
+
+
+def goodput(make_requests, spec: ClusterSpec, cfg: ArchConfig,
+            hw: cm.HardwareProfile, *, rates: Sequence[float],
+            slo: SLO, threshold: float = 0.9) -> float:
+    """Paper metric: highest rate with >= 90% SLO attainment."""
+    best = 0.0
+    for rate in sorted(rates):
+        reqs = make_requests(rate)
+        out = simulate(spec, cfg, hw, reqs)
+        if summarize(out, slo).slo_attainment >= threshold:
+            best = rate
+    return best

@@ -1,0 +1,170 @@
+"""Stage instances.
+
+An instance = a group of ``chips`` accelerators running ONE pipeline role:
+  'E'   multimodal encoder            (MM cache, encoder weights only)
+  'P'   prefill                       (LLM weights, MM + KV cache)
+  'D'   decode                        (LLM weights, KV cache)
+  'EP'  aggregated encode+prefill     (DistServe baseline)
+  'EPD' fully aggregated              (vLLM baseline)
+
+Jobs of every stage the role serves go through ONE serialized executor —
+which is precisely how the aggregated baselines exhibit the encode/prefill
+interference of paper Fig. 1, and how EPD avoids it.
+
+On a real TPU deployment an instance is a submesh; here the same object
+carries the simulator's queue/cache state. Dynamic role switching
+(paper §3.2.4) swaps ``role`` and block managers in-place.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+from repro.core.block_manager import KVBlockManager, MMBlockManager
+
+E_ROLES = {"E", "EP", "EPD"}
+P_ROLES = {"P", "EP", "EPD"}
+D_ROLES = {"D", "EPD"}
+
+# paper §3.2.4: role switch < 0.7 s when E involved (model + cache swap),
+# much shorter between P and D (LLM + KV cache reused).
+SWITCH_LATENCY_E = 0.65
+SWITCH_LATENCY_PD = 0.15
+
+
+@dataclass
+class EncodeJob:
+    req_id: int
+    n_patches: int              # patches in THIS shard (IRP may split)
+    shard_id: int = 0
+    n_shards: int = 1
+
+
+@dataclass
+class PrefillJob:
+    req_id: int
+    seq_len: int                # prompt + multimodal tokens
+
+
+@dataclass
+class DecodeSlot:
+    req_id: int
+    context: int                # current context length
+    remaining: int              # tokens still to emit
+
+
+class Instance:
+    _ids = itertools.count()
+
+    def __init__(self, role: str, chips: int, cfg: ArchConfig,
+                 hw: cm.HardwareProfile, *, max_batch: int = 8,
+                 decode_batch: int = 128, kv_frac: float = 0.8,
+                 mm_blocks: int = 3000, block_size: int = 16):
+        self.id = next(Instance._ids)
+        self.role = role
+        self.chips = chips
+        self.cfg = cfg
+        self.hw = hw
+        self.max_batch = max_batch
+        self.decode_batch = decode_batch
+        self.kv_frac = kv_frac
+        self.block_size = block_size
+        self.mm_blocks = mm_blocks
+
+        self.queue: list = []            # Encode/Prefill jobs
+        self.decode_slots: list[DecodeSlot] = []
+        self.busy_until: float = 0.0
+        self.accepting: bool = True
+        self.cooldown_until: float = 0.0  # anti-thrash for role switching
+        self._init_caches()
+
+    # ------------------------------------------------------------- memory
+    def weights_bytes(self) -> float:
+        return cm.weights_bytes(self.cfg,
+                                include_encoder=self.role in E_ROLES,
+                                include_llm=self.role in P_ROLES | D_ROLES)
+
+    def free_memory(self) -> float:
+        return self.chips * self.hw.mem_bytes - self.weights_bytes()
+
+    def _init_caches(self) -> None:
+        self.mm_cache: Optional[MMBlockManager] = None
+        self.kv_cache: Optional[KVBlockManager] = None
+        free = max(0.0, self.free_memory())
+        # paper §3.2: E workers hold an MM cache; P workers hold BOTH the MM
+        # cache (receiving ψ_EP transfers) and the KV cache; D only KV.
+        if self.role in E_ROLES or self.role == "P":
+            self.mm_cache = MMBlockManager(self.mm_blocks, self.block_size)
+        if self.role in P_ROLES | D_ROLES:
+            kv_tok = self.cfg.kv_bytes_per_token(cm.DTYPE_BYTES)
+            budget = free * self.kv_frac
+            n_blocks = max(1, int(budget / max(kv_tok, 1) / self.block_size))
+            self.kv_cache = KVBlockManager(n_blocks, self.block_size)
+
+    # ---------------------------------------------------------------- load
+    def load(self) -> float:
+        """Queued work in estimated seconds (least-loaded routing and the
+        role-switch monitor both read this)."""
+        q = sum(self.estimate(j) for j in self.queue)
+        if self.decode_slots:
+            n = len(self.decode_slots)
+            steps = sum(s.remaining for s in self.decode_slots) / n
+            waves = -(-n // self.decode_batch)
+            q += self.decode_step_time() * steps * waves
+        return q
+
+    def estimate(self, job) -> float:
+        if isinstance(job, EncodeJob):
+            return cm.encode_time(self.cfg, self.hw, job.n_patches,
+                                  chips=self.chips)
+        if isinstance(job, PrefillJob):
+            return cm.prefill_time(self.cfg, self.hw, job.seq_len,
+                                   chips=self.chips)
+        raise TypeError(job)
+
+    def _units(self, job) -> int:
+        """Occupancy units a job brings to a batch (batch_eff argument)."""
+        if isinstance(job, EncodeJob):
+            return max(1, min(job.n_patches, 8))
+        return max(1, job.seq_len // 512)
+
+    def batched_time(self, jobs: list) -> float:
+        """Service time of a co-scheduled batch: per-job compute normalized
+        to full utilization, re-divided by the batch's joint utilization,
+        one shared launch overhead."""
+        tot_u = sum(self._units(j) for j in jobs)
+        eff_tot = cm.batch_eff(tot_u)
+        t = 0.0
+        for j in jobs:
+            base = self.estimate(j) - self.hw.step_overhead
+            t += base * cm.batch_eff(self._units(j)) / eff_tot
+        return t + self.hw.step_overhead
+
+    def decode_step_time(self) -> float:
+        n = len(self.decode_slots)
+        if n == 0:
+            return 0.0
+        ctx = sum(s.context for s in self.decode_slots) / n
+        return cm.decode_step_time(self.cfg, self.hw, int(ctx),
+                                   chips=self.chips, batch=n)
+
+    # -------------------------------------------------------- role switch
+    def switch_role(self, new_role: str) -> float:
+        """Returns the switch latency; offloading queued work is the
+        cluster's job (paper: offload -> migrate -> onload)."""
+        if new_role == self.role:
+            return 0.0
+        e_involved = ("E" in (self.role, new_role)
+                      or self.role in ("EP", "EPD")
+                      or new_role in ("EP", "EPD"))
+        lat = SWITCH_LATENCY_E if e_involved else SWITCH_LATENCY_PD
+        self.role = new_role
+        self._init_caches()
+        return lat
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Instance(id={self.id}, role={self.role}, chips={self.chips},"
+                f" q={len(self.queue)}, d={len(self.decode_slots)})")

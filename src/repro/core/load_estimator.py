@@ -1,0 +1,85 @@
+"""Load estimation (paper App. E: "a load estimation module ensures
+efficient GPU allocation across these phases, adapting to changing workload
+demands in real time").
+
+Tracks an exponentially-weighted profile of the arriving workload (rate,
+patches/request, prefill tokens, output length) and converts it into
+per-stage demand in device-seconds/second — the signal the role-switching
+monitor and the allocator consume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+from repro.core.request import Request
+
+
+@dataclass
+class LoadEstimator:
+    cfg: ArchConfig
+    hw: cm.HardwareProfile
+    halflife_s: float = 30.0
+    # EWMA state
+    _rate: float = 0.0
+    _patches: float = 0.0
+    _prefill_tokens: float = 0.0
+    _output_len: float = 0.0
+    _last_t: float = -1.0
+    _n: int = 0
+
+    def observe(self, req: Request, now: float) -> None:
+        if self._last_t >= 0:
+            dt = max(now - self._last_t, 1e-6)
+            inst_rate = 1.0 / dt
+            a = self._alpha(dt)
+            self._rate = (1 - a) * self._rate + a * inst_rate
+        self._last_t = now
+        a = 0.2 if self._n >= 5 else 1.0 / (self._n + 1)
+        self._patches = (1 - a) * self._patches + a * req.n_patches
+        self._prefill_tokens = ((1 - a) * self._prefill_tokens
+                                + a * req.prefill_tokens)
+        self._output_len = (1 - a) * self._output_len + a * req.output_len
+        self._n += 1
+
+    def _alpha(self, dt: float) -> float:
+        return 1.0 - 0.5 ** (dt / self.halflife_s)
+
+    # ------------------------------------------------------------- demand
+    def stage_demand(self) -> dict[str, float]:
+        """Device-seconds of work arriving per second, per stage."""
+        if self._n == 0:
+            return {"E": 0.0, "P": 0.0, "D": 0.0}
+        r = self._rate
+        t_e = cm.encode_time(self.cfg, self.hw, max(1, int(self._patches))) \
+            if self.cfg.modality and self._patches >= 0.5 else 0.0
+        t_p = cm.prefill_time(self.cfg, self.hw,
+                              max(1, int(self._prefill_tokens)))
+        t_d = self._output_len * cm.decode_step_time(
+            self.cfg, self.hw, int(self._prefill_tokens + self._output_len))
+        return {"E": r * t_e, "P": r * t_p, "D": r * t_d}
+
+    def suggest_allocation(self, n_instances: int) -> dict[str, int]:
+        """Proportional-demand instance split (floor 1 per needed stage)."""
+        demand = self.stage_demand()
+        stages = [s for s, d in demand.items() if d > 0]
+        if not stages:
+            return {"E": 0, "P": max(1, n_instances - 1), "D": 1}
+        total = sum(demand[s] for s in stages)
+        out = {s: 0 for s in "EPD"}
+        left = n_instances
+        for s in stages:
+            out[s] = max(1, round(n_instances * demand[s] / total))
+        # normalize to exactly n_instances
+        while sum(out.values()) > n_instances:
+            hot = max((s for s in stages if out[s] > 1),
+                      key=lambda s: out[s] / max(demand[s], 1e-9),
+                      default=None)
+            if hot is None:
+                break
+            out[hot] -= 1
+        while sum(out.values()) < n_instances:
+            hot = max(stages, key=lambda s: demand[s] / max(out[s], 1))
+            out[hot] += 1
+        return out

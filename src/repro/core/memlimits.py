@@ -1,0 +1,111 @@
+"""Memory-limit calculators behind Tables 2, 3 and 8 (and Fig 2).
+
+Mechanistic model: a worker's device memory holds
+  weights(role) + KV-cache reservation + encode activations + MM tokens.
+Max-images / max-batch / max-KV%-questions solve that budget for one
+unknown. OOM = even the minimum doesn't fit; OOCL = the token count
+exceeds the model's context limit (paper App. A.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Union
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+
+OOM = "OOM"
+OOCL = "OOCL"
+Result = Union[int, str]
+
+
+def _budget(cfg: ArchConfig, hw: cm.HardwareProfile, role: str,
+            kv_frac: float, kv_context: int = 0) -> float:
+    """Free bytes for encode/prefill payloads after weights + KV budget."""
+    w = cm.weights_bytes(cfg,
+                         include_encoder=role in ("E", "EP", "EPD"),
+                         include_llm=role != "E")
+    free = hw.mem_bytes - w
+    if role != "E":
+        free -= kv_frac * max(free, 0.0)
+    return free
+
+
+def _per_patch_bytes(cfg: ArchConfig) -> float:
+    m = cfg.modality
+    return (cm.encode_activation_bytes(cfg, 1)
+            + cm.mm_token_bytes(cfg, m.tokens_per_item))
+
+
+def effective_patches(cfg: ArchConfig, resolution, n_images: int) -> int:
+    """Patches per image: InternVL-style tiling divides a fixed tile budget
+    across a request's images; MiniCPM slices every image independently."""
+    m = cfg.modality
+    patches = m.patches_at_res[resolution]
+    if m.tile_budget and n_images > 0:
+        patches = min(patches, max(1, m.tile_budget // n_images))
+    return patches
+
+
+def max_images_per_request(cfg: ArchConfig, hw: cm.HardwareProfile,
+                           role: str, resolution: tuple[int, int], *,
+                           kv_frac: float = 0.8) -> Result:
+    """Table 2: max #images in ONE request (batch 1)."""
+    m = cfg.modality
+    free = _budget(cfg, hw, role, kv_frac)
+    best: Result = OOM
+    n = 1
+    while True:
+        patches = effective_patches(cfg, resolution, n)
+        tokens = n * patches * m.tokens_per_item
+        if tokens + 64 > cfg.max_context:
+            return best if best != OOM else OOCL
+        if n * patches * _per_patch_bytes(cfg) > free:
+            return best
+        best = n
+        n += 1
+
+
+def max_batch(cfg: ArchConfig, hw: cm.HardwareProfile, role: str,
+              resolution: tuple[int, int], *, images_per_req: int = 10,
+              kv_frac: float = 0.8) -> Result:
+    """Table 3: max concurrent requests in the E / P stage."""
+    m = cfg.modality
+    patches = effective_patches(cfg, resolution, images_per_req)
+    free = _budget(cfg, hw, role, kv_frac)
+    if role in ("P", "EP", "EPD"):
+        # prefill must also hold each request's KV for prompt+mm tokens
+        tokens = images_per_req * patches * m.tokens_per_item + 64
+        per_req = images_per_req * patches * _per_patch_bytes(cfg) \
+            + cm.kv_bytes(cfg, tokens)
+        if role == "P":
+            # disaggregated P has no encoder: only mm tokens + KV
+            per_req = (images_per_req * patches
+                       * cm.mm_token_bytes(cfg, m.tokens_per_item)
+                       + cm.kv_bytes(cfg, tokens))
+    else:
+        per_req = images_per_req * patches * _per_patch_bytes(cfg)
+    n = int(free / per_req)
+    return n if n >= 1 else OOM
+
+
+def max_kv_percent(cfg: ArchConfig, hw: cm.HardwareProfile, role: str, *,
+                   images_per_req: int, resolution=(4032, 3024)) -> Result:
+    """Table 8: largest KV-cache fraction (of free memory) on the prefill
+    node that still fits one request of ``images_per_req`` 4K images."""
+    m = cfg.modality
+    patches = effective_patches(cfg, resolution, images_per_req)
+    tokens = images_per_req * patches * m.tokens_per_item + 64
+    if tokens > cfg.max_context:
+        return OOCL
+    w = cm.weights_bytes(cfg, include_encoder=role in ("EP", "EPD"),
+                         include_llm=True)
+    free = hw.mem_bytes - w
+    payload = images_per_req * patches * (
+        _per_patch_bytes(cfg) if role in ("EP", "EPD")
+        else cm.mm_token_bytes(cfg, m.tokens_per_item))
+    payload += cm.kv_bytes(cfg, tokens)  # the request's own KV
+    pct = (free - payload) / free * 100.0
+    if pct <= 0:
+        return OOM
+    return int(round(min(pct, 99.0)))

@@ -1,0 +1,87 @@
+"""Request lifecycle for the EPD pipeline.
+
+A multimodal request flows  E -> (EP-migration) -> P -> (PD-migration) -> D.
+``Request`` carries workload description + per-stage timestamps; SLO
+attainment and the TTFT/TPOT metrics are derived properties (paper §4,
+Evaluation Metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class SLO:
+    ttft: float          # seconds
+    tpot: float          # seconds/token
+
+
+@dataclass
+class Request:
+    req_id: int
+    arrival: float                       # seconds
+    prompt_len: int                      # text tokens
+    n_items: int                         # images / audio clips / video frames
+    patches_per_item: int                # encoder jobs per item
+    tokens_per_patch: int                # mm tokens produced per patch
+    output_len: int                      # tokens to decode
+    slo: Optional[SLO] = None
+
+    # ---- per-stage timestamps (filled by the runtime / simulator)
+    enc_start: float = -1.0
+    enc_end: float = -1.0
+    ep_transfer_end: float = -1.0
+    prefill_start: float = -1.0
+    prefill_end: float = -1.0            # == first token emitted
+    pd_transfer_end: float = -1.0
+    decode_start: float = -1.0
+    finish: float = -1.0
+
+    # IRP bookkeeping: per-shard completion times
+    shard_done: list = field(default_factory=list)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def n_patches(self) -> int:
+        return self.n_items * self.patches_per_item
+
+    @property
+    def mm_tokens(self) -> int:
+        """Multimodal tokens entering prefill (the paper's token inflation)."""
+        return self.n_patches * self.tokens_per_patch
+
+    @property
+    def prefill_tokens(self) -> int:
+        return self.prompt_len + self.mm_tokens
+
+    @property
+    def total_context(self) -> int:
+        return self.prefill_tokens + self.output_len
+
+    # --------------------------------------------------------------- SLOs
+    @property
+    def ttft(self) -> float:
+        assert self.prefill_end >= 0, "request has not produced a token"
+        return self.prefill_end - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        if self.output_len <= 1:
+            return 0.0
+        assert self.finish >= 0
+        return (self.finish - self.prefill_end) / (self.output_len - 1)
+
+    @property
+    def e2e_latency(self) -> float:
+        assert self.finish >= 0
+        return self.finish - self.arrival
+
+    def attains(self, slo: Optional[SLO] = None) -> bool:
+        slo = slo or self.slo
+        assert slo is not None
+        return self.ttft <= slo.ttft and self.tpot <= slo.tpot
+
+    def done(self) -> bool:
+        return self.finish >= 0

@@ -1,0 +1,43 @@
+"""Scheduling policies (paper Appendix D, "Scheduling").
+
+Two decisions: (1) which instance gets a request — Round-Robin or
+Least-Loaded-First across the instances of a stage; (2) ordering within an
+instance queue — FCFS or Shortest-Job-First (by estimated service time).
+All instances within a stage share one strategy, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+FCFS = "fcfs"
+SJF = "sjf"
+ROUND_ROBIN = "round_robin"
+LEAST_LOADED = "least_loaded"
+
+
+class Assigner:
+    """Routes jobs to one of a stage's instances."""
+
+    def __init__(self, policy: str = ROUND_ROBIN):
+        if policy not in (ROUND_ROBIN, LEAST_LOADED):
+            raise ValueError(policy)
+        self.policy = policy
+        self._rr = 0
+
+    def pick(self, instances: Sequence) -> int:
+        alive = [i for i, inst in enumerate(instances) if inst.accepting]
+        if not alive:
+            raise RuntimeError("no accepting instance in stage")
+        if self.policy == ROUND_ROBIN:
+            self._rr += 1
+            return alive[self._rr % len(alive)]
+        return min(alive, key=lambda i: instances[i].load())
+
+
+def order_queue(queue: list, policy: str, est: Callable) -> list:
+    """Return the queue in service order. ``est(job)`` = predicted time."""
+    if policy == FCFS:
+        return queue
+    if policy == SJF:
+        return sorted(queue, key=est)
+    raise ValueError(policy)

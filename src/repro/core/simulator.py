@@ -1,0 +1,370 @@
+"""Discrete-event simulator of the disaggregated serving cluster.
+
+The paper's own resource allocator runs on "a simulator extended from
+DistServe" (§3.2.3); this module is that simulator, extended to the full
+EPD pipeline: IRP sharding, MM/KV block-manager gating, asynchronous EP/PD
+migrations, continuous-batching decode, and dynamic role switching. The
+aggregated baselines fall out as degenerate role sets:
+
+  vLLM       -> every instance 'EPD' (one serialized executor: encode,
+                prefill and decode steps interfere, Fig. 1 top)
+  DistServe  -> 'EP' + 'D' instances (prefill-decode disaggregation only)
+  EPD (ours) -> 'E' + 'P' + 'D' instances (+ IRP + role switching)
+
+Scheduler, block managers and migration logic are the *real* framework code
+paths; only stage service times come from the analytical cost model.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+from repro.configs.base import ArchConfig
+from repro.core import costmodel as cm
+from repro.core.block_manager import OutOfBlocks
+from repro.core.instance import (DecodeSlot, EncodeJob, Instance, PrefillJob,
+                                 D_ROLES, E_ROLES, P_ROLES)
+from repro.core.request import Request
+from repro.core.scheduler import (FCFS, LEAST_LOADED, ROUND_ROBIN, Assigner,
+                                  order_queue)
+
+ARRIVAL = "arrival"
+JOB_DONE = "job_done"
+DECODE_STEP = "decode_step"
+EP_DONE = "ep_transfer_done"
+PD_DONE = "pd_transfer_done"
+MONITOR = "monitor"
+ONLOAD = "onload"
+
+
+@dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = field(compare=False)
+    payload: Any = field(compare=False, default=None)
+
+
+class Simulator:
+    def __init__(self, cfg: ArchConfig, hw: cm.HardwareProfile,
+                 instances: list[Instance], *,
+                 assign_policy: str = LEAST_LOADED,
+                 queue_policy: str = FCFS,
+                 irp: bool = True,
+                 irp_degree: int = 0,           # 0 = all E instances
+                 role_switch: bool = False,
+                 monitor_interval: float = 2.0,
+                 switch_threshold: float = 3.0,
+                 transfer_links: int = 1,
+                 verbose: bool = False):
+        self.cfg = cfg
+        self.hw = hw
+        self.instances = instances
+        self.assigner = Assigner(assign_policy)
+        self.queue_policy = queue_policy
+        self.irp = irp
+        self.irp_degree = irp_degree
+        self.role_switch = role_switch
+        self.monitor_interval = monitor_interval
+        self.switch_threshold = switch_threshold
+        self.transfer_links = transfer_links
+        self.verbose = verbose
+
+        self._events: list[Event] = []
+        self._seq = itertools.count()
+        self.requests: dict[int, Request] = {}
+        self.now = 0.0
+        self.switch_log: list[tuple[float, int, str, str]] = []
+
+    # ------------------------------------------------------------ helpers
+    def _push(self, t: float, kind: str, payload=None) -> None:
+        heapq.heappush(self._events, Event(t, next(self._seq), kind, payload))
+
+    def stage(self, letter: str) -> list[Instance]:
+        roles = {"E": E_ROLES, "P": P_ROLES, "D": D_ROLES}[letter]
+        return [i for i in self.instances if i.role in roles and i.accepting]
+
+    def _assign(self, letter: str) -> Instance:
+        insts = self.stage(letter)
+        return insts[self.assigner.pick(insts)]
+
+    # ---------------------------------------------------------------- run
+    def run(self, requests: list[Request]) -> list[Request]:
+        for r in requests:
+            self.requests[r.req_id] = r
+            self._push(r.arrival, ARRIVAL, r.req_id)
+        if self.role_switch:
+            self._push(self.monitor_interval, MONITOR)
+
+        while self._events:
+            ev = heapq.heappop(self._events)
+            self.now = ev.time
+            if ev.kind == MONITOR and not self._pending_work():
+                continue  # drain: no more monitoring once work is done
+            getattr(self, "_on_" + ev.kind)(ev)
+        return list(self.requests.values())
+
+    def _pending_work(self) -> bool:
+        if any(not r.done() for r in self.requests.values()):
+            return True
+        return False
+
+    # -------------------------------------------------------------- events
+    def _on_arrival(self, ev: Event) -> None:
+        req = self.requests[ev.payload]
+        if req.n_patches > 0 and self.stage("E"):
+            e_insts = self.stage("E")
+            shards = 1
+            if self.irp:
+                cap = self.irp_degree or len(e_insts)
+                shards = max(1, min(cap, req.n_patches))
+            base, rem = divmod(req.n_patches, shards)
+            req.enc_start = self.now
+            req.shard_done = [False] * shards
+            for s in range(shards):
+                n = base + (1 if s < rem else 0)
+                inst = self._assign("E")
+                job = EncodeJob(req.req_id, n, s, shards)
+                self._admit_encode(inst, job)
+        else:
+            req.enc_start = req.enc_end = req.ep_transfer_end = self.now
+            self._enqueue_prefill(req)
+
+    def _admit_encode(self, inst: Instance, job: EncodeJob) -> None:
+        req = self.requests[job.req_id]
+        tokens = job.n_patches * req.tokens_per_patch
+        if inst.mm_cache is not None:
+            try:
+                inst.mm_cache.allocate(req.req_id, max(1, tokens))
+            except OutOfBlocks:
+                pass  # queue anyway; blocks are rechecked at service time
+        inst.queue.append(job)
+        self._kick(inst)
+
+    def _enqueue_prefill(self, req: Request) -> None:
+        inst = self._assign("P")
+        inst.queue.append(PrefillJob(req.req_id, req.prefill_tokens))
+        self._kick(inst)
+
+    # ---------------------------------------------------- instance engine
+    def _kick(self, inst: Instance) -> None:
+        """Start the next batch on an idle instance."""
+        if inst.busy_until > self.now or not inst.accepting:
+            return
+        if inst.queue:
+            ordered = order_queue(inst.queue, self.queue_policy, inst.estimate)
+            head = ordered[0]
+            kind = type(head)
+            batch = [j for j in ordered if isinstance(j, kind)][:inst.max_batch]
+            if isinstance(head, PrefillJob):
+                batch = self._admit_prefill_batch(inst, batch)
+                if not batch:
+                    # KV blocks exhausted: wait for a decode to finish
+                    self._maybe_decode(inst)
+                    return
+            for j in batch:
+                inst.queue.remove(j)
+            service = self._service_time(inst, batch)
+            inst.busy_until = self.now + service
+            self._push(inst.busy_until, JOB_DONE, (inst.id, batch))
+            return
+        self._maybe_decode(inst)
+
+    def _admit_prefill_batch(self, inst: Instance, batch: list) -> list:
+        """Admit prefill jobs whose KV allocation fits (paged gating)."""
+        admitted = []
+        for j in batch:
+            req = self.requests[j.req_id]
+            need = req.prefill_tokens + req.output_len
+            if inst.kv_cache is None or inst.kv_cache.can_allocate(need):
+                if inst.kv_cache is not None:
+                    inst.kv_cache.allocate(req.req_id, need)
+                admitted.append(j)
+            elif inst.kv_cache.blocks_for(need) > inst.kv_cache.n_blocks \
+                    and not inst.decode_slots and not admitted:
+                # can NEVER fit: admit degraded instead of deadlocking
+                admitted.append(j)
+        return admitted
+
+    def _service_time(self, inst: Instance, batch: list) -> float:
+        return inst.batched_time(batch)
+
+    def _maybe_decode(self, inst: Instance) -> None:
+        if inst.role not in D_ROLES or not inst.decode_slots:
+            return
+        if inst.busy_until > self.now:
+            return
+        step = inst.decode_step_time()
+        inst.busy_until = self.now + step
+        n = min(len(inst.decode_slots), inst.decode_batch)
+        batch = inst.decode_slots[:n]
+        self._push(inst.busy_until, DECODE_STEP, (inst.id, [s.req_id for s in batch]))
+
+    def _inst(self, iid: int) -> Instance:
+        return next(i for i in self.instances if i.id == iid)
+
+    def _on_job_done(self, ev: Event) -> None:
+        iid, batch = ev.payload
+        inst = self._inst(iid)
+        for job in batch:
+            req = self.requests[job.req_id]
+            if isinstance(job, EncodeJob):
+                req.shard_done[job.shard_id] = True
+                if all(req.shard_done):
+                    req.enc_end = self.now
+                    by = cm.ep_transfer_bytes(self.cfg, req.mm_tokens)
+                    if inst.role == "E":  # disaggregated: real EP migration
+                        t = cm.transfer_time(by, self.hw,
+                                             links=self.transfer_links)
+                    else:                 # aggregated: tokens already local
+                        t = 0.0
+                    self._push(self.now + t, EP_DONE, (inst.id, req.req_id))
+            elif isinstance(job, PrefillJob):
+                req.prefill_end = self.now  # first token
+                if inst.role in ("P", "EP"):
+                    # disaggregated decode: the KV cache migrates
+                    by = cm.pd_transfer_bytes(self.cfg, req.prefill_tokens)
+                    t = cm.transfer_time(by, self.hw,
+                                         links=self.transfer_links)
+                    self._push(self.now + t, PD_DONE, (inst.id, req.req_id))
+                else:
+                    self._push(self.now, PD_DONE, (inst.id, req.req_id))
+        self._kick(inst)
+
+    def _on_ep_transfer_done(self, ev: Event) -> None:
+        iid, rid = ev.payload
+        inst = self._inst(iid)
+        req = self.requests[rid]
+        req.ep_transfer_end = self.now
+        # clear encode-side MM blocks (paper §3.2.1)
+        for i in self.instances:
+            if i.mm_cache is not None and i.role == "E":
+                i.mm_cache.free(rid)
+        if inst.role in ("EP", "EPD"):
+            # aggregated: prefill runs on the same instance
+            inst.queue.append(PrefillJob(rid, req.prefill_tokens))
+            self._kick(inst)
+        else:
+            self._enqueue_prefill(req)
+
+    def _on_pd_transfer_done(self, ev: Event) -> None:
+        iid, rid = ev.payload
+        src = self._inst(iid)
+        req = self.requests[rid]
+        req.pd_transfer_end = self.now
+        req.decode_start = self.now
+        if src.role in ("EPD",):
+            dst = src                   # decode in place
+        else:
+            dst = self._assign("D")
+        if dst is not src and src.kv_cache is not None:
+            src.kv_cache.free(rid)      # KV left the prefill worker
+            self._kick(src)             # blocked prefills may now admit
+        if dst is not src and dst.kv_cache is not None:
+            try:
+                dst.kv_cache.allocate(rid, req.total_context)
+            except OutOfBlocks:
+                pass  # decode proceeds degraded; real system would retry
+        if req.output_len <= 1:
+            req.finish = self.now
+            if dst.kv_cache is not None:
+                dst.kv_cache.free(rid)
+            return
+        dst.decode_slots.append(
+            DecodeSlot(rid, req.prefill_tokens + 1, req.output_len - 1))
+        self._maybe_decode(dst)
+        self._kick(dst)
+
+    def _on_decode_step(self, ev: Event) -> None:
+        iid, rids = ev.payload
+        inst = self._inst(iid)
+        done_ids = []
+        for slot in list(inst.decode_slots):
+            if slot.req_id not in rids:
+                continue
+            slot.context += 1
+            slot.remaining -= 1
+            if slot.remaining <= 0:
+                req = self.requests[slot.req_id]
+                req.finish = self.now
+                inst.decode_slots.remove(slot)
+                if inst.kv_cache is not None:
+                    inst.kv_cache.free(slot.req_id)
+                done_ids.append(slot.req_id)
+        # aggregated roles: queued encode/prefill work may preempt decode
+        self._kick(inst)
+        self._maybe_decode(inst)
+
+    # -------------------------------------------------------- role switch
+    def _stage_pressure(self, letter: str) -> float:
+        insts = self.stage(letter)
+        if not insts:
+            return 0.0
+        return sum(i.load() for i in insts) / len(insts)
+
+    def _on_monitor(self, ev: Event) -> None:
+        self._push(self.now + self.monitor_interval, MONITOR)
+        stages = [s for s in "EPD" if self.stage(s)]
+        if len(stages) < 2:
+            return
+        pressures = {s: self._stage_pressure(s) for s in stages}
+        hot = max(pressures, key=pressures.get)
+        # candidate donors: stages with >1 instance and low pressure
+        donors = [s for s in stages
+                  if s != hot and len(self.stage(s)) > 1
+                  and pressures[s] * self.switch_threshold <= pressures[hot] + 1e-9
+                  and pressures[hot] > 0.0]
+        if not donors:
+            return
+        cold = min(donors, key=pressures.get)
+        ready = [i for i in self.stage(cold)
+                 if i.cooldown_until <= self.now]
+        if not ready:
+            return
+        donor = min(ready, key=lambda i: i.load())
+        donor.cooldown_until = self.now + 4 * self.monitor_interval
+        self._do_switch(donor, hot)
+
+    def _do_switch(self, inst: Instance, new_role: str) -> None:
+        """Offload -> migrate -> onload (paper §3.2.4)."""
+        old_role = inst.role
+        inst.accepting = False
+        # offload queued jobs to siblings of the old stage
+        jobs, inst.queue = inst.queue, []
+        for job in jobs:
+            letter = "E" if isinstance(job, EncodeJob) else "P"
+            siblings = self.stage(letter)
+            if siblings:
+                tgt = siblings[self.assigner.pick(siblings)]
+                tgt.queue.append(job)
+                self._kick(tgt)
+        # in-flight decode slots migrate to a sibling D instance (their KV
+        # moves with them); without a sibling the switch is aborted
+        if inst.decode_slots and new_role not in D_ROLES:
+            sibs = [i for i in self.stage("D") if i is not inst]
+            if not sibs:
+                inst.accepting = True
+                return
+            slots, inst.decode_slots = inst.decode_slots, []
+            for slot in slots:
+                tgt = sibs[self.assigner.pick(sibs)]
+                tgt.decode_slots.append(slot)
+                if inst.kv_cache is not None:
+                    inst.kv_cache.free(slot.req_id)
+                if tgt.kv_cache is not None:
+                    try:
+                        tgt.kv_cache.allocate(
+                            slot.req_id, slot.context + slot.remaining)
+                    except OutOfBlocks:
+                        pass
+                self._maybe_decode(tgt)
+        lat = inst.switch_role(new_role)
+        self.switch_log.append((self.now, inst.id, old_role, new_role))
+        self._push(self.now + lat, ONLOAD, inst.id)
+
+    def _on_onload(self, ev: Event) -> None:
+        inst = self._inst(ev.payload)
+        inst.accepting = True
+        self._kick(inst)

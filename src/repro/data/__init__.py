@@ -1,0 +1,6 @@
+from repro.data.workload import (WorkloadSpec, nextqa_like, poisson_requests,
+                                 videomme_like)
+from repro.data.pipeline import TokenPipeline, synthetic_token_batches
+
+__all__ = ["WorkloadSpec", "nextqa_like", "poisson_requests", "videomme_like",
+           "TokenPipeline", "synthetic_token_batches"]

@@ -1,0 +1,66 @@
+"""Training data pipeline: deterministic synthetic token streams.
+
+A real deployment would read tokenized shards; offline, the pipeline
+generates reproducible batches (seeded per step) shaped exactly like the
+training input_specs, including multimodal embedding payloads for VLM/audio
+archs. Supports host-side sharding for multi-process data parallelism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.api import mm_token_budget
+
+
+@dataclass
+class TokenPipeline:
+    cfg: ArchConfig
+    batch: int
+    seq_len: int
+    seed: int = 0
+    shard_id: int = 0
+    n_shards: int = 1
+
+    def __post_init__(self):
+        if self.batch % self.n_shards:
+            raise ValueError("batch must divide host shards")
+        self._local = self.batch // self.n_shards
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            (self.seed, step, self.shard_id))
+        B, S = self._local, self.seq_len
+        toks = rng.integers(0, self.cfg.vocab, (B, S + 1), dtype=np.int32)
+        out = {"tokens": jnp.asarray(toks[:, :-1]),
+               "labels": jnp.asarray(toks[:, 1:])}
+        if self.cfg.family == "audio":
+            out["enc_frames"] = jnp.asarray(
+                rng.standard_normal((B, S, self.cfg.d_model), np.float32)
+                * 0.1, dtype=jnp.bfloat16)
+        elif self.cfg.modality is not None:
+            M = mm_token_budget(self.cfg, S)
+            out["mm_embeds"] = jnp.asarray(
+                rng.standard_normal((B, M, self.cfg.modality.enc_d_model),
+                                    np.float32) * 0.1, dtype=jnp.bfloat16)
+            out["mm_positions"] = jnp.broadcast_to(
+                jnp.arange(1, M + 1, dtype=jnp.int32)[None], (B, M))
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def synthetic_token_batches(cfg: ArchConfig, batch: int, seq_len: int,
+                            n_steps: int, seed: int = 0):
+    pipe = TokenPipeline(cfg, batch, seq_len, seed)
+    for step in range(n_steps):
+        yield pipe.batch_at(step)

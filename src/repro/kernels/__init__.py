@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the serving hot-spots.
+
+Each kernel subpackage ships ``kernel.py`` (pl.pallas_call + BlockSpec VMEM
+tiling), ``ops.py`` (jit'd wrapper; interpret-mode off-TPU), and ``ref.py``
+(pure-jnp oracle — the model substrate's own implementation, so kernels and
+models are validated against identical semantics).
+
+- flash_prefill: causal/full GQA flash attention (P stage, encoder)
+- decode_attn:   flash-decoding over (ring) KV caches (D stage)
+- mamba2_scan:   chunked SSD scan (zamba2 backbone)
+- rwkv6_scan:    chunked data-dependent-decay WKV (rwkv6)
+- paged_attn:    decode attention over vLLM-style block-table paged KV pools
+"""
+from repro.kernels.decode_attn import decode_attention_op
+from repro.kernels.paged_attn import paged_decode_attention_op
+from repro.kernels.flash_prefill import flash_attention
+from repro.kernels.mamba2_scan import mamba2_ssd_op
+from repro.kernels.rwkv6_scan import rwkv6_wkv_op
+
+__all__ = ["decode_attention_op", "flash_attention", "mamba2_ssd_op",
+           "paged_decode_attention_op", "rwkv6_wkv_op"]

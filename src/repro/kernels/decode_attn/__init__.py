@@ -1,0 +1,5 @@
+from repro.kernels.decode_attn.kernel import decode_attn
+from repro.kernels.decode_attn.ops import decode_attention_op
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+__all__ = ["decode_attn", "decode_attention_op", "decode_attn_ref"]

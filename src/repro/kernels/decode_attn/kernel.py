@@ -1,0 +1,104 @@
+"""GQA decode attention (flash-decoding style) Pallas TPU kernel.
+
+One new query token per sequence attends over a (ring-buffer) KV cache.
+Grid ``(B, K, n_w_blocks)`` — the cache-window dim is 'arbitrary'
+(sequential) with fp32 online-softmax scratch carried across steps, so the
+cache streams HBM->VMEM once. The G = H//K query rows of a kv group ride
+along the sublane dim of one tile (padded to 8 on real TPUs — the MXU/VPU
+tile is (8,128); interpret mode is shape-agnostic).
+
+Layouts: q (B, K, G, hd); k/v cache (B, K, W, hd); length (B, 1) int32.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, w_block: int, n_w: int, sm_scale: float):
+    wi = pl.program_id(2)
+
+    @pl.when(wi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = len_ref[0, 0]
+    # skip blocks entirely beyond the valid region
+    @pl.when(wi * w_block < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                   # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (wb, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (G, wb)
+        k_pos = wi * w_block + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(wi == n_w - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                length: jnp.ndarray, *, w_block: int = 256,
+                interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,hd); caches (B,W,K,hd); length (B,) -> out (B,H,hd)."""
+    B, W, K, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // K
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    w_block = min(w_block, W)
+    nw = -(-W // w_block)
+    pw = nw * w_block - W
+    kc = k_cache.transpose(0, 2, 1, 3)                         # (B,K,W,hd)
+    vc = v_cache.transpose(0, 2, 1, 3)
+    if pw:
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pw), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pw), (0, 0)))
+    qg = q.reshape(B, K, G, hd)
+    len2d = jnp.minimum(length, W).astype(jnp.int32).reshape(B, 1)
+
+    kern = functools.partial(_decode_kernel, w_block=w_block, n_w=nw,
+                             sm_scale=sm_scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, K, nw),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, k, wi: (b, 0)),
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, wi: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, w_block, hd), lambda b, k, wi: (b, k, wi, 0)),
+            pl.BlockSpec((1, 1, w_block, hd), lambda b, k, wi: (b, k, wi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, k, wi: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len2d, qg, kc, vc)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,20 @@
+"""jit'd public wrapper for decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attn.kernel import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+@partial(jax.jit, static_argnames=("force_ref",))
+def decode_attention_op(q: jnp.ndarray, k_cache: jnp.ndarray,
+                        v_cache: jnp.ndarray, length: jnp.ndarray, *,
+                        force_ref: bool = False) -> jnp.ndarray:
+    if force_ref:
+        return decode_attn_ref(q, k_cache, v_cache, length)
+    return decode_attn(q, k_cache, v_cache, length,
+                       interpret=jax.default_backend() != "tpu")

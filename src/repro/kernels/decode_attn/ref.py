@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the decode-attention kernel (the model substrate's
+own decode path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def decode_attn_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, length: jnp.ndarray) -> jnp.ndarray:
+    """q (B,H,hd); caches (B,W,K,hd); length (B,) -> (B,H,hd)."""
+    return decode_attention(q, k_cache, v_cache, length)

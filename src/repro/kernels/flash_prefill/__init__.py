@@ -1,0 +1,5 @@
+from repro.kernels.flash_prefill.kernel import flash_prefill
+from repro.kernels.flash_prefill.ops import flash_attention
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+__all__ = ["flash_prefill", "flash_attention", "flash_prefill_ref"]

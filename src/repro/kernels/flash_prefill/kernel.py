@@ -1,0 +1,125 @@
+"""Flash attention (prefill) Pallas TPU kernel.
+
+Canonical TPU flash shape: 3-D grid ``(batch*q_heads, n_q_blocks,
+n_kv_blocks)`` with the kv dim 'arbitrary' (sequential) so fp32
+running-max/denominator/accumulator scratch in VMEM persists across kv
+steps. Tiles are MXU-aligned (q_block x head_dim and kv_block x head_dim,
+128-multiples for full-size heads). GQA is handled by mapping q head
+``h`` to kv head ``h // G`` in the kv BlockSpec index_map — the repeated
+KV is never materialized in HBM.
+
+Kernel layouts: q (B, H, Sq, hd); k/v (B, K, Sk, hd); out (B, H, Sq, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal: bool, window: int, sm_scale: float,
+                  q_block: int, kv_block: int, n_kv: int, sk: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = qi * q_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+    k_pos = ki * kv_block + jax.lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                     # (qb, hd)
+        k = k_ref[0].astype(jnp.float32)                     # (kb, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        mask = k_pos < sk
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # whole kv block above the diagonal contributes nothing: skip
+        pl.when((ki * kv_block) <= (qi * q_block + q_block - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_prefill(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0,
+                  q_block: int = 128, kv_block: int = 128,
+                  interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,Sq,hd); k/v (B,K,Sk,hd) -> (B,H,Sq,hd)."""
+    B, H, Sq, hd = q.shape
+    _, K, Sk, _ = k.shape
+    G = H // K
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    nq = -(-Sq // q_block)
+    nk = -(-Sk // kv_block)
+    pq, pk = nq * q_block - Sq, nk * kv_block - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    grid = (B * H, nq, nk)
+    kern = functools.partial(
+        _flash_kernel, causal=causal, window=window, sm_scale=sm_scale,
+        q_block=q_block, kv_block=kv_block, n_kv=nk, sk=Sk)
+
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd),
+                         lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd),
+                               lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, nq * q_block, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, 1), jnp.float32),   # running max
+            pltpu.VMEM((q_block, 1), jnp.float32),   # denominator
+            pltpu.VMEM((q_block, hd), jnp.float32),  # accumulator
+        ],
+        interpret=interpret,
+    )(q.reshape(B * H, nq * q_block, hd),
+      k.reshape(B * K, nk * kv_block, hd),
+      v.reshape(B * K, nk * kv_block, hd))
+    return out.reshape(B, H, nq * q_block, hd)[:, :, :Sq]

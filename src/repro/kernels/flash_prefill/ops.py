@@ -1,0 +1,30 @@
+"""jit'd public wrapper for flash prefill attention.
+
+On TPU backends the Pallas kernel runs compiled; elsewhere it runs in
+``interpret=True`` mode (or falls back to the jnp oracle when
+``force_ref``), so the same call site works everywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_prefill.kernel import flash_prefill
+from repro.kernels.flash_prefill.ref import flash_prefill_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "force_ref"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    force_ref: bool = False) -> jnp.ndarray:
+    """q (B,H,Sq,hd); k/v (B,K,Sk,hd) -> (B,H,Sq,hd)."""
+    if force_ref:
+        return flash_prefill_ref(q, k, v, causal=causal, window=window)
+    return flash_prefill(q, k, v, causal=causal, window=window,
+                         interpret=not _on_tpu())

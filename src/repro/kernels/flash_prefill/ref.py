@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the flash prefill kernel.
+
+Delegates to the model substrate's chunked attention (layout-adapted), so
+the kernel and the model path are validated against the same semantics.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention
+
+
+def flash_prefill_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q (B,H,Sq,hd); k/v (B,K,Sk,hd) -> (B,H,Sq,hd)."""
+    o = chunked_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window)
+    return o.transpose(0, 2, 1, 3)

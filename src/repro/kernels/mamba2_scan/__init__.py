@@ -1,0 +1,5 @@
+from repro.kernels.mamba2_scan.kernel import mamba2_ssd
+from repro.kernels.mamba2_scan.ops import mamba2_ssd_op
+from repro.kernels.mamba2_scan.ref import mamba2_ssd_ref
+
+__all__ = ["mamba2_ssd", "mamba2_ssd_op", "mamba2_ssd_ref"]

@@ -1,0 +1,103 @@
+"""Mamba2 chunked-SSD Pallas TPU kernel.
+
+Grid ``(B, H, n_chunks)`` — chunk dim 'arbitrary' (sequential) with the
+per-head SSM state (P, N) carried in fp32 VMEM scratch. Each step does the
+SSD chunk math on MXU-shaped matmuls: (Q,N)x(N,Q) scores, (Q,Q)x(Q,P)
+intra-chunk output, (P,Q)x(Q,N) state update. Q=chunk, P=head_dim, N=d_state
+(64..256 — all VMEM-friendly tiles).
+
+Inputs: x (B,H,S,P); dt,a (B,H,S,1); Bm,Cm (B,S,N) (shared across heads).
+Outputs: y (B,H,S,P) fp32; final_state (B,H,P,N) fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, state_scr,
+                *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)                       # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)                     # (Q, 1)
+    a = a_ref[0, 0].astype(jnp.float32)                       # (Q, 1)
+    bm = b_ref[0].astype(jnp.float32)                         # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                         # (Q, N)
+    state = state_scr[...]                                    # (P, N)
+
+    cum = jnp.cumsum(a, axis=0)                               # (Q, 1)
+    # inter-chunk: y_inter[q,p] = exp(cum_q) * C_q · state[p,:]
+    y_inter = jax.lax.dot_general(cm, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(cum)                          # (Q, P)
+    # intra-chunk
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    diff = cum - cum.reshape(1, chunk)                        # (Q, Q) q-k
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    diff = jnp.where(q_idx >= k_idx, diff, -jnp.inf)
+    m = scores * jnp.exp(diff) * dt.reshape(1, chunk)
+    y_intra = jax.lax.dot_general(m, x, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+    # state update: state = exp(cum_Q)*state + x^T @ (B * tail * dt)
+    tail = jnp.exp(cum[chunk - 1:chunk] - cum)                # (Q, 1)
+    contrib = jax.lax.dot_general(x, bm * (tail * dt),
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(cum[chunk - 1, 0]) + contrib
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        st_ref[0, 0] = state_scr[...]
+
+
+def mamba2_ssd(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+               bm: jnp.ndarray, cm: jnp.ndarray, *, chunk: int = 256,
+               interpret: bool = True):
+    """x (B,S,H,P); dt,a (B,S,H); bm,cm (B,S,N).
+    Returns (y (B,S,H,P) fp32, final_state (B,H,P,N) fp32)."""
+    B, S, H, P = x.shape
+    N = bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    xt = x.transpose(0, 2, 1, 3)                               # (B,H,S,P)
+    dtt = dt.transpose(0, 2, 1)[..., None]                     # (B,H,S,1)
+    at = a.transpose(0, 2, 1)[..., None]
+
+    kern = functools.partial(_ssd_kernel, chunk=Q, n_chunks=nc)
+    y, st = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, ci: (b, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, at, bm, cm)
+    return y.transpose(0, 2, 1, 3), st

@@ -1,0 +1,18 @@
+"""jit'd public wrapper for the Mamba2 SSD scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba2_scan.kernel import mamba2_ssd
+from repro.kernels.mamba2_scan.ref import mamba2_ssd_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "force_ref"))
+def mamba2_ssd_op(x, dt, a, bm, cm, *, chunk: int = 256,
+                  force_ref: bool = False):
+    if force_ref:
+        return mamba2_ssd_ref(x, dt, a, bm, cm, chunk=chunk)
+    return mamba2_ssd(x, dt, a, bm, cm, chunk=chunk,
+                      interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel — the model substrate's own
+chunked scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def mamba2_ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                   bm: jnp.ndarray, cm: jnp.ndarray, *, chunk: int = 256):
+    """Same contract as kernel.mamba2_ssd."""
+    return ssd_chunked(x, dt, a, bm, cm, chunk)

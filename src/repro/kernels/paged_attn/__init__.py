@@ -1,0 +1,6 @@
+from repro.kernels.paged_attn.kernel import paged_decode_attn
+from repro.kernels.paged_attn.ops import paged_decode_attention_op
+from repro.kernels.paged_attn.ref import paged_decode_attn_ref
+
+__all__ = ["paged_decode_attn", "paged_decode_attention_op",
+           "paged_decode_attn_ref"]

@@ -1,0 +1,112 @@
+"""Paged decode attention Pallas TPU kernel (vLLM-style block tables).
+
+The paper's orchestration layer manages "paged multimodal caches" with
+custom kernels (App. E); this is the TPU-native equivalent for the KV side:
+the cache lives as a global pool of fixed-size blocks ``(N_blocks, bs, K,
+hd)`` and each sequence owns a list of block ids (its block table). One new
+query token attends over the sequence's blocks WITHOUT materializing a
+contiguous cache.
+
+Grid ``(B, K, max_blocks)`` — the block dim is 'arbitrary' (sequential) with
+online-softmax scratch carried across steps. The per-sequence block table
+rides in scalar-prefetch memory (SMEM) so the kv BlockSpec index_map can
+look up the physical block id per grid step: HBM->VMEM streams exactly the
+blocks the sequence owns (TPU's answer to the GPU gather — the index_map IS
+the page table walk).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, block_size: int, n_blocks: int,
+                  sm_scale: float):
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = pl.program_id(0)
+    length = len_ref[b]
+
+    @pl.when(bi * block_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                   # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale                                      # (G, bs)
+        pos = bi * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(bi == n_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attn(q: jnp.ndarray, k_pool: jnp.ndarray,
+                      v_pool: jnp.ndarray, block_tables: jnp.ndarray,
+                      lengths: jnp.ndarray, *,
+                      interpret: bool = True) -> jnp.ndarray:
+    """q (B,H,hd); pools (N_blocks, bs, K, hd); block_tables (B, max_blocks)
+    int32 physical block ids; lengths (B,). Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    N, bs, K, _ = k_pool.shape
+    G = H // K
+    max_blocks = block_tables.shape[1]
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    qg = q.reshape(B, K, G, hd)
+    kp = k_pool.transpose(0, 2, 1, 3)                         # (N, K, bs, hd)
+    vp = v_pool.transpose(0, 2, 1, 3)
+
+    kern = functools.partial(_paged_kernel, block_size=bs,
+                             n_blocks=max_blocks, sm_scale=sm_scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,       # block_tables, lengths
+        grid=(B, K, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, bi, tables, lens: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, k, bi, tables, lens: (tables[b, bi], k, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, k, bi, tables, lens: (tables[b, bi], k, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, k, bi, tables, lens: (b, k, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg, kp, vp)
+    return out.reshape(B, H, hd)

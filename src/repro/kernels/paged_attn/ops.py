@@ -1,0 +1,18 @@
+"""jit'd public wrapper for paged decode attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attn.kernel import paged_decode_attn
+from repro.kernels.paged_attn.ref import paged_decode_attn_ref
+
+
+@partial(jax.jit, static_argnames=("force_ref",))
+def paged_decode_attention_op(q, k_pool, v_pool, block_tables, lengths, *,
+                              force_ref: bool = False):
+    if force_ref:
+        return paged_decode_attn_ref(q, k_pool, v_pool, block_tables, lengths)
+    return paged_decode_attn(q, k_pool, v_pool, block_tables, lengths,
+                             interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for paged decode attention: gather the sequence's blocks
+into a contiguous cache, then run the substrate's decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention
+
+
+def paged_decode_attn_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Same contract as kernel.paged_decode_attn."""
+    B = q.shape[0]
+    N, bs, K, hd = k_pool.shape
+    # (B, max_blocks, bs, K, hd) -> (B, W, K, hd)
+    kc = k_pool[block_tables].reshape(B, -1, K, hd)
+    vc = v_pool[block_tables].reshape(B, -1, K, hd)
+    return decode_attention(q, kc, vc, lengths)

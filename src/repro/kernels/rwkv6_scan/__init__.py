@@ -1,0 +1,5 @@
+from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+from repro.kernels.rwkv6_scan.ops import rwkv6_wkv_op
+from repro.kernels.rwkv6_scan.ref import rwkv6_wkv_ref
+
+__all__ = ["rwkv6_wkv", "rwkv6_wkv_op", "rwkv6_wkv_ref"]

@@ -1,0 +1,113 @@
+"""RWKV6 (Finch) chunked-WKV Pallas TPU kernel.
+
+Recurrence (per head, state S in R^{PxP}, data-dependent per-channel decay
+w_t in (0,1)):   y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+                 S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Chunked formulation in log-decay space (lw = log w, cumulative ``cum``):
+  y_inter_t = (r_t ⊙ exp(cum_{t-1})) · S_chunk_start
+  y_intra_t = Σ_{j<t} [Σ_p r_tp k_jp exp(cum_{t-1,p} − cum_{j,p})] v_j
+              + (r_t ⊙ u) · k_t · v_t                (current-token bonus)
+  S_new     = diag(exp(cum_Q)) S + (k ⊙ exp(cum_Q − cum))^T V
+
+All exponents are differences of later-minus-earlier cumulative decays, so
+every factor is ≤ 1 — no overflow for arbitrarily strong decay (this is why
+the kernel does NOT use the naive k·exp(−cum) factorization).
+
+Grid ``(B, H, n_chunks)``, chunk dim sequential, state in fp32 VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, st_ref, state_scr,
+                 *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)                        # (Q, P)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)                      # (Q, P) log w
+    u = u_ref[0].astype(jnp.float32)                           # (1? P,) -> (P,)
+    state = state_scr[...]                                     # (P, P) k x v
+
+    cum = jnp.cumsum(lw, axis=0)                               # (Q, P)
+    cpre = cum - lw                                            # exclusive
+
+    # inter-chunk: (r ⊙ exp(cpre)) @ state
+    y_inter = jax.lax.dot_general(r * jnp.exp(cpre), state,
+                                  (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # intra-chunk scores[t,j] = Σ_p r_tp k_jp exp(cpre_t,p - cum_j,p), j<t
+    diff = cpre[:, None, :] - cum[None, :, :]                  # (Q, Q, P)
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    j_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    strict = (t_idx > j_idx)[:, :, None]
+    prod = r[:, None, :] * k[None, :, :] * jnp.exp(
+        jnp.where(strict, diff, -jnp.inf))                     # (Q, Q, P)
+    scores = prod.sum(axis=2)                                  # (Q, Q)
+    # current-token bonus on the diagonal
+    bonus = (r * u[None, :] * k).sum(axis=1)                   # (Q,)
+    scores = scores + jnp.where(
+        t_idx == j_idx, bonus[:, None], 0.0)
+    y_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_inter + y_intra).astype(y_ref.dtype)
+
+    # state update
+    tail = jnp.exp(cum[chunk - 1:chunk, :] - cum)              # (Q, P)
+    knew = jax.lax.dot_general(k * tail, v, (((0,), (0,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+    state_scr[...] = state * jnp.exp(cum[chunk - 1])[:, None] + knew
+
+    @pl.when(ci == n_chunks - 1)
+    def _finalize():
+        st_ref[0, 0] = state_scr[...]
+
+
+def rwkv6_wkv(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, w: jnp.ndarray,
+              u: jnp.ndarray, *, chunk: int = 64, interpret: bool = True):
+    """r,k,v,w (B,S,H,P) with w = decay in (0,1); u (H,P).
+    Returns (y (B,S,H,P) fp32, final state (B,H,P,P) fp32)."""
+    B, S, H, P = r.shape
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    tr = lambda t: t.transpose(0, 2, 1, 3)                     # (B,H,S,P)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-30))
+
+    kern = functools.partial(_rwkv_kernel, chunk=Q, n_chunks=nc)
+    y, st = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, P), lambda b, h, ci: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, P), lambda b, h, ci: (b, h, ci, 0)),
+            pl.BlockSpec((1, 1, P, P), lambda b, h, ci: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(lw), u)
+    return y.transpose(0, 2, 1, 3), st

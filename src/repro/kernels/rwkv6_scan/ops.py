@@ -1,0 +1,17 @@
+"""jit'd public wrapper for the RWKV6 WKV scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_wkv
+from repro.kernels.rwkv6_scan.ref import rwkv6_wkv_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "force_ref"))
+def rwkv6_wkv_op(r, k, v, w, u, *, chunk: int = 64, force_ref: bool = False):
+    if force_ref:
+        return rwkv6_wkv_ref(r, k, v, w, u, chunk=chunk)
+    return rwkv6_wkv(r, k, v, w, u, chunk=chunk,
+                     interpret=jax.default_backend() != "tpu")

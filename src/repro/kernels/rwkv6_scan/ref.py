@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel — the model substrate's own
+sequential scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.rwkv6 import wkv_scan
+
+
+def rwkv6_wkv_ref(r, k, v, w, u, *, chunk: int = 64):
+    """Same contract as kernel.rwkv6_wkv (chunk is ignored — exact scan)."""
+    B, S, H, P = r.shape
+    state0 = jnp.zeros((B, H, P, P), jnp.float32)
+    y, st = wkv_scan(r, k, v, w, u, state0)
+    return y, st

@@ -1,0 +1,29 @@
+"""Mesh context: lets model-layer code (e.g. the shard_map MoE path) reach
+the concrete mesh the launcher is driving, without threading it through
+every function signature."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+from jax.sharding import Mesh
+
+_CURRENT: list[Optional[Mesh]] = [None]
+
+
+def set_current_mesh(mesh: Optional[Mesh]) -> None:
+    _CURRENT[0] = mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CURRENT[0]
+
+
+@contextmanager
+def mesh_context(mesh: Mesh):
+    prev = _CURRENT[0]
+    _CURRENT[0] = mesh
+    try:
+        yield mesh
+    finally:
+        _CURRENT[0] = prev

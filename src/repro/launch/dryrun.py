@@ -1,0 +1,298 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape) this lowers + compiles the exact
+production step function — train_step / prefill_step / serve_step — against
+ShapeDtypeStruct stand-ins (zero device allocation) on the 16x16 single-pod
+mesh and the 2x16x16 multi-pod mesh, prints memory_analysis / cost_analysis,
+and extracts the roofline terms (compute / memory / collective) from the
+compiled artifact. Results append to a JSONL consumed by EXPERIMENTS.md and
+``benchmarks/roofline.py``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-4b \
+      --shape train_4k [--multi-pod] [--out runs/dryrun.jsonl]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import (batch_shardings, opt_state_shardings,
+                                   param_shardings)
+from repro.models import build_model, input_specs, uses_sliding_window_variant
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+# TPU v5e constants (roofline denominators)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+ICI_LINKS = 4                # v5e 2D torus: 4 links/chip
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_DEF_RE = re.compile(r"^\s*(%[\w\.\-]+|[\w\.\-]+) = ([\w\(\)]*)")
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in the (partitioned) HLO."""
+    sizes: dict[str, int] = {}
+    per_op: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(%?[\w\.\-]+) = ", line)
+        if not m:
+            continue
+        name = m.group(1).lstrip("%")
+        rest = line[m.end():]
+        tm = _TYPE_RE.match(rest.lstrip("(").strip())
+        if tm:
+            sizes[name] = _shape_bytes(tm.group(1), tm.group(2))
+        opm = re.search(r"\)?\s([a-z\-]+)\(", rest)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\s{c}(-start)?\(", rest):
+                op = c
+                break
+        if op is None:
+            continue
+        # operand names inside the call parens
+        args = re.search(rf"{op}(?:-start)?\((.*?)\)", rest)
+        total = 0
+        if args:
+            for token in args.group(1).split(","):
+                token = token.strip().lstrip("%")
+                total += sizes.get(token, 0)
+        if total == 0:
+            # fall back to result size
+            tm2 = _TYPE_RE.search(rest)
+            if tm2:
+                total = _shape_bytes(tm2.group(1), tm2.group(2))
+        per_op[op] += total
+    per_op["total"] = sum(per_op.values())
+    return per_op
+
+
+# ------------------------------------------------------------- step builder
+def make_step(cfg: ArchConfig, shape: InputShape, *,
+              block_causal_skip: bool = False):
+    """Returns (fn, arg_specs) for the step the shape exercises."""
+    model = build_model(cfg, block_causal_skip=block_causal_skip)
+    batch_spec = input_specs(cfg, shape)
+    params_spec = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+    if shape.mode == "train":
+        acfg = AdamWConfig()
+        opt_spec = jax.eval_shape(lambda: adamw_init(params_spec))
+
+        def train_step(params, opt_state, batch):
+            def lf(p):
+                loss, metrics = model.loss_fn(p, batch=batch)
+                return loss
+            loss, grads = jax.value_and_grad(lf)(params)
+            params, opt_state, om = adamw_update(params, grads, opt_state, acfg)
+            return params, opt_state, loss
+
+        return train_step, (params_spec, opt_spec, batch_spec)
+
+    if shape.mode == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch=batch)
+        return prefill_step, (params_spec, batch_spec)
+
+    def serve_step(params, batch):
+        return model.decode_step(params, batch=batch)
+    return serve_step, (params_spec, batch_spec)
+
+
+def arg_shardings(arg_specs, mesh):
+    out = []
+    for spec in arg_specs:
+        leaves = jax.tree.leaves(spec)
+        if leaves and any(
+                getattr(p[-1], "key", None) in ("mu", "nu", "step")
+                for p, _ in jax.tree_util.tree_flatten_with_path(spec)[0][:1]):
+            out.append(opt_state_shardings(spec, mesh))
+        else:
+            out.append(None)
+    return out
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            block_causal_skip: bool = False, moe_groups: int = 0,
+            pad_experts: int = 0, moe_a2a: bool = False,
+            tag: str = "baseline",
+            out_path: str | None = None, print_hlo_to: str | None = None):
+    cfg = get_config(arch)
+    if (moe_groups or pad_experts or moe_a2a) and cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe,
+                dispatch_groups=moe_groups or cfg.moe.dispatch_groups,
+                pad_experts=pad_experts or cfg.moe.pad_experts,
+                use_shard_map=moe_a2a or cfg.moe.use_shard_map))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    fn, arg_specs = make_step(cfg, shape,
+                              block_causal_skip=block_causal_skip)
+
+    shardings = []
+    for i, spec in enumerate(arg_specs):
+        if shape.mode == "train" and i == 0:
+            shardings.append(param_shardings(spec, mesh))
+        elif shape.mode == "train" and i == 1:
+            shardings.append(opt_state_shardings(spec, mesh))
+        elif i == 0 and shape.mode != "train":
+            shardings.append(param_shardings(spec, mesh))
+        else:
+            shardings.append(batch_shardings(spec, mesh))
+
+    from repro.launch.context import mesh_context
+    t0 = time.time()
+    with mesh, mesh_context(mesh):
+        jitted = jax.jit(fn, in_shardings=tuple(shardings))
+        lowered = jitted.lower(*arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        hlo = compiled.as_text()
+
+    # trip-count-aware static analysis (XLA's cost_analysis counts while
+    # bodies once — see hlo_analysis.py); XLA numbers kept for reference.
+    ana = analyze_hlo(hlo)
+    coll = ana["collectives"]
+    flops = float(ana["flops"])
+
+    # HBM-traffic proxy: compiled buffer sizes (args read + outputs written
+    # + temps written&read). Per-op sums over CPU-optimized HLO grossly
+    # overcount for the TPU target (CPU barely fuses), so the analyzer's
+    # per-op figure is kept only as an upper bound.
+    mem_fields_early = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            try:
+                mem_fields_early[f] = int(getattr(mem, f))
+            except Exception:
+                pass
+    if {"argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes"} <= mem_fields_early.keys():
+        byts = float(mem_fields_early["argument_size_in_bytes"]
+                     + mem_fields_early["output_size_in_bytes"]
+                     + 2 * mem_fields_early["temp_size_in_bytes"])
+    else:
+        byts = float(ana["traffic"])
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = byts / HBM_BW
+    t_coll = coll["total"] / (ICI_LINKS * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N_active·D per trained token; decode/prefill use 2·N·D
+    D_tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    model_flops = mult * cfg.active_param_count() * D_tokens / n_chips
+    useful = model_flops / flops if flops else 0.0
+
+    mem_fields = mem_fields_early
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mode": shape.mode,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": int(n_chips),
+        "tag": tag,
+        "sw_variant": uses_sliding_window_variant(cfg, shape),
+        "block_causal_skip": block_causal_skip,
+        "flops_per_device": flops, "bytes_per_device": byts,
+        "traffic_upper_bound": float(ana["traffic"]),
+        "collective_bytes": coll, "memory_analysis": mem_fields,
+        "xla_cost_analysis": {k: float(v) for k, v in cost.items()
+                              if k in ("flops", "bytes accessed")},
+        "roofline_s": terms, "dominant": dominant,
+        "model_flops_per_device": model_flops, "useful_flop_ratio": useful,
+        "top_dots": ana["top_dots"][:6],
+        "top_collectives": ana["top_collectives"][:6],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+    }
+    print(json.dumps(rec))
+    print(f"[dryrun] {arch} x {shape_name} mesh={rec['mesh']} OK | "
+          f"compute={t_compute*1e3:.2f}ms memory={t_memory*1e3:.2f}ms "
+          f"collective={t_coll*1e3:.2f}ms dominant={dominant} "
+          f"useful={useful:.2f}", file=sys.stderr)
+    if mem is not None:
+        print(f"[dryrun] memory_analysis: {mem_fields}", file=sys.stderr)
+    if out_path:
+        with open(out_path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    if print_hlo_to:
+        with open(print_hlo_to, "w") as f:
+            f.write(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ASSIGNED + ["all"])
+    ap.add_argument("--shape", required=True,
+                    choices=list(INPUT_SHAPES) + ["all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--block-causal-skip", action="store_true",
+                    help="beyond-paper causal-block skip optimization")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="beyond-paper grouped MoE dispatch (per-data-shard)")
+    ap.add_argument("--pad-experts", type=int, default=0,
+                    help="pad expert count for clean expert-parallel sharding")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="shard_map expert-parallel MoE with explicit "
+                         "all-to-alls (§Perf A4)")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--dump-hlo", default=None)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    for a in archs:
+        for s in shapes:
+            run_one(a, s, multi_pod=args.multi_pod,
+                    block_causal_skip=args.block_causal_skip,
+                    moe_groups=args.moe_groups,
+                    pad_experts=args.pad_experts,
+                    moe_a2a=args.moe_a2a,
+                    tag=args.tag, out_path=args.out,
+                    print_hlo_to=args.dump_hlo)
+
+
+if __name__ == "__main__":
+    main()

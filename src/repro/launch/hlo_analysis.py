@@ -1,0 +1,278 @@
+"""Trip-count-aware static analysis of optimized (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of
+trip count, which makes it useless for scan-over-layers models (an 88-layer
+stack reports 1/88th of its FLOPs). This analyzer walks the computation
+graph, multiplies while bodies by their ``known_trip_count`` backend config,
+and produces:
+
+  flops        — dot FLOPs (2·M·N·K), trip-count aware
+  traffic      — approximate HBM bytes: operand+result bytes of schedulable
+                 (non-fused) ops; fusion internals are VMEM/register traffic
+                 and excluded — this matches the TPU memory hierarchy
+  collectives  — per-kind operand bytes of every collective, trip-aware
+  top_dots / top_collectives — largest contributors with op metadata
+                 (the §Perf hillclimbing reads these)
+
+All quantities are PER DEVICE: the input is the per-partition module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_TYPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START = re.compile(r"^(ENTRY\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_OP_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w\.\-]+|[\w\.\-]+)\s*=\s*(.*)$")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body)=(%[\w\.\-]+|[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+|[\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "iota", "after-all", "partition-id", "replica-id"}
+
+
+def _parse_types(text: str):
+    """All array types in a type expression -> list of (dtype, dims)."""
+    return [(m.group(1), m.group(2)) for m in _TYPE_RE.finditer(text)]
+
+
+def _type_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_types(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _dims(text: str) -> list[int]:
+    m = _TYPE_RE.search(text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    traffic: float = 0.0
+    collectives: dict = field(default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic += other.traffic * mult
+        for k, v in other.collectives.items():
+            self.collectives[k] += v * mult
+
+
+def _split_rhs(rhs: str):
+    """rhs after '=': returns (result_type_str, opcode, args_str, attrs)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        rtype, rest = rhs[:i + 1], rhs[i + 1:].strip()
+    else:
+        sp = rhs.index(" ")
+        rtype, rest = rhs[:sp], rhs[sp + 1:].strip()
+    m = re.match(r"([\w\-\.]+)\(", rest)
+    if not m:
+        return rtype, "", "", rest
+    opcode = m.group(1)
+    depth, start = 0, m.end() - 1
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    args = rest[start + 1:i]
+    attrs = rest[i + 1:]
+    return rtype, opcode, args, attrs
+
+
+class HloAnalysis:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Op]] = {}
+        self.shapes: dict[str, dict[str, str]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._memo_sched: dict[str, Cost] = {}
+        self._memo_fused: dict[str, Cost] = {}
+        self.top_dots: list = []
+        self.top_collectives: list = []
+        self._dot_sites: dict[str, tuple[float, str]] = {}
+        self._coll_sites: dict[str, tuple[float, str]] = {}
+
+    # -------------------------------------------------------------- parse
+    def _parse(self, text: str) -> None:
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            ms = _COMP_START.match(line)
+            if ms:
+                cur = ms.group(2).lstrip("%")
+                self.comps[cur] = []
+                self.shapes[cur] = {}
+                if ms.group(1):
+                    self.entry = cur
+                continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            name = mo.group(2).lstrip("%")
+            rtype, opcode, args, attrs = _split_rhs(mo.group(3))
+            operands = [a.strip().lstrip("%") for a in _split_args(args)]
+            op = Op(name, opcode, rtype, operands, attrs, line)
+            self.comps[cur].append(op)
+            self.shapes[cur][name] = rtype
+
+    # ------------------------------------------------------------- costing
+    def _dot_flops(self, comp: str, op: Op) -> float:
+        res = _dims(op.result_type)
+        lhs_name = op.operands[0] if op.operands else ""
+        lhs_type = self.shapes[comp].get(lhs_name, "")
+        lhs = _dims(lhs_type)
+        mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        k = 1
+        if mc and lhs:
+            for d in mc.group(1).split(","):
+                if d:
+                    k *= lhs[int(d)]
+        n = 1
+        for d in res:
+            n *= d
+        return 2.0 * n * k
+
+    def comp_cost(self, name: str, fused: bool) -> Cost:
+        memo = self._memo_fused if fused else self._memo_sched
+        if name in memo:
+            return memo[name]
+        cost = Cost()
+        memo[name] = cost  # guard against cycles
+        for op in self.comps.get(name, ()):
+            if op.opcode == "dot":
+                fl = self._dot_flops(name, op)
+                cost.flops += fl
+                meta = _meta(op.line)
+                prev = self._dot_sites.get(meta, (0.0, meta))
+                self._dot_sites[meta] = (prev[0] + fl, meta)
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES:
+                by = sum(_type_bytes(self.shapes[name].get(o, ""))
+                         for o in op.operands)
+                if by == 0:
+                    by = _type_bytes(op.result_type)
+                cost.collectives[base] += by
+                meta = _meta(op.line)
+                prev = self._coll_sites.get((base, meta), (0.0, meta))
+                self._coll_sites[(base, meta)] = (prev[0] + by, meta)
+            if op.opcode == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.attrs)
+                if mt:
+                    trip = int(mt.group(1))
+                body = _CALLS_RE.search(op.attrs)
+                cond = _COND_RE.search(op.attrs)
+                if body:
+                    cost.add(self.comp_cost(body.group(1).lstrip("%"), fused),
+                             trip)
+                if cond:
+                    cost.add(self.comp_cost(cond.group(1).lstrip("%"), fused),
+                             trip)
+            elif op.opcode == "conditional":
+                mb = _BRANCHES_RE.search(op.attrs)
+                if mb:
+                    branches = [b.strip().lstrip("%")
+                                for b in mb.group(1).split(",")]
+                    costs = [self.comp_cost(b, fused) for b in branches]
+                    if costs:
+                        best = max(costs, key=lambda c: c.flops + c.traffic)
+                        cost.add(best)
+            elif op.opcode in ("fusion",):
+                mcall = _CALLS_RE.search(op.attrs)
+                if mcall:
+                    cost.add(self.comp_cost(mcall.group(1).lstrip("%"), True))
+            elif op.opcode in ("call", "async-start", "custom-call"):
+                mcall = _CALLS_RE.search(op.attrs)
+                if mcall:
+                    cost.add(self.comp_cost(mcall.group(1).lstrip("%"), fused))
+            # traffic: schedulable ops move operands+results through HBM
+            if not fused and op.opcode not in _NO_TRAFFIC:
+                by = _type_bytes(op.result_type)
+                for o in op.operands:
+                    by += _type_bytes(self.shapes[name].get(o, ""))
+                cost.traffic += by
+        memo[name] = cost
+        return cost
+
+    def analyze(self) -> dict:
+        assert self.entry, "no ENTRY computation found"
+        cost = self.comp_cost(self.entry, False)
+        self.top_dots = sorted(self._dot_sites.values(), reverse=True)[:12]
+        self.top_collectives = sorted(
+            ((v, k[0], k[1]) for k, (v, _) in self._coll_sites.items()),
+            reverse=True)[:12]
+        coll = dict(cost.collectives)
+        coll["total"] = sum(cost.collectives.values())
+        return {
+            "flops": cost.flops,
+            "traffic": cost.traffic,
+            "collectives": coll,
+            "top_dots": [(f, m) for f, m in self.top_dots],
+            "top_collectives": self.top_collectives,
+        }
+
+
+def _split_args(args: str) -> list[str]:
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+            continue
+        depth += ch in "([{"
+        depth -= ch in ")]}"
+        cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [a for a in (s.strip() for s in out) if a]
+
+
+def _meta(line: str) -> str:
+    m = re.search(r'op_name="([^"]*)"', line)
+    return m.group(1) if m else "?"
+
+
+def analyze_hlo(hlo_text: str) -> dict:
+    return HloAnalysis(hlo_text).analyze()

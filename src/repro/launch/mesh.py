@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+Target: TPU v5e pods — 16x16 = 256 chips per pod; multi-pod = 2 pods = 512.
+Functions (not module-level constants) so importing never touches jax
+device state; the dry-run sets XLA_FLAGS before calling these.
+"""
+from __future__ import annotations
+
+import jax
+
+POD_SHAPE = (16, 16)
+MULTI_POD_SHAPE = (2, 16, 16)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = MULTI_POD_SHAPE if multi_pod else POD_SHAPE
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,86 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs real steps on the local devices (reduced configs on CPU; full configs
+on a TPU slice — same code path, the mesh just grows). Wires the data
+pipeline, AdamW, checkpointing, and per-step metrics.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config, list_archs
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_debug_mesh
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    acfg = AdamWConfig(lr=args.lr, warmup_steps=10, total_steps=args.steps)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    opt_state = adamw_init(params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.2f}M "
+          f"devices={len(jax.devices())}")
+
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), start = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        print(f"[train] restored step {start} from {args.ckpt_dir}")
+
+    @jax.jit
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            loss, metrics = model.loss_fn(p, batch=batch)
+            return loss, metrics
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, acfg)
+        return params, opt_state, loss, {**metrics, **om}
+
+    pipe = TokenPipeline(cfg, args.batch, args.seq_len)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = pipe.batch_at(step)
+        params, opt_state, loss, metrics = train_step(params, opt_state, batch)
+        if step % args.log_every == 0:
+            loss_f = float(loss)
+            assert loss_f == loss_f, f"NaN loss at step {step}"
+            print(f"[train] step={step:5d} loss={loss_f:8.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} "
+                  f"({time.time()-t0:.1f}s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, (params, opt_state))
+    if args.ckpt_dir:
+        save_checkpoint(args.ckpt_dir, args.steps, (params, opt_state))
+    print(f"[train] done: final loss {float(loss):.4f}")
+    return float(loss)
+
+
+if __name__ == "__main__":
+    main()

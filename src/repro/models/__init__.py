@@ -1,0 +1,6 @@
+from repro.models.api import (Model, build_model, input_specs,
+                              make_concrete_batch, mm_token_budget,
+                              uses_sliding_window_variant)
+
+__all__ = ["Model", "build_model", "input_specs", "make_concrete_batch",
+           "mm_token_budget", "uses_sliding_window_variant"]

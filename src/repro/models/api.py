@@ -1,0 +1,168 @@
+"""Model facade: one uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a ``Model`` whose members are pure functions:
+
+  init(key)                      -> params
+  loss_fn(params, batch)         -> (loss, metrics)          [train]
+  prefill(params, batch)         -> (last_logits, cache)     [P stage]
+  decode_step(params, batch)     -> (logits, new_cache)      [D stage]
+  init_cache(batch, max_len)     -> cache pytree
+  encode(params, mm_embeds)      -> mm tokens                [E stage; mm archs]
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for every
+input of the step function the shape exercises — the dry-run lowers against
+these with zero device allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import dense, encdec, hybrid, rwkv_stack
+
+Batch = dict[str, Any]
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    encode: Optional[Callable] = None
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def build_model(cfg: ArchConfig, *, block_causal_skip: bool = False) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=partial(dense.init_params, cfg=cfg),
+            loss_fn=partial(dense.loss_fn, cfg=cfg,
+                            block_causal_skip=block_causal_skip),
+            prefill=partial(dense.prefill, cfg=cfg,
+                            block_causal_skip=block_causal_skip),
+            decode_step=partial(dense.decode_step, cfg=cfg),
+            init_cache=partial(dense.init_cache, cfg),
+            encode=((lambda params, mm_embeds:
+                     dense.encode_mm(params, cfg, mm_embeds))
+                    if cfg.modality is not None else None),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=partial(hybrid.init_params, cfg=cfg),
+            loss_fn=partial(hybrid.loss_fn, cfg=cfg),
+            prefill=partial(hybrid.prefill, cfg=cfg),
+            decode_step=partial(hybrid.decode_step, cfg=cfg),
+            init_cache=partial(hybrid.init_cache, cfg),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=partial(rwkv_stack.init_params, cfg=cfg),
+            loss_fn=partial(rwkv_stack.loss_fn, cfg=cfg),
+            prefill=partial(rwkv_stack.prefill, cfg=cfg),
+            decode_step=partial(rwkv_stack.decode_step, cfg=cfg),
+            init_cache=partial(rwkv_stack.init_cache, cfg),
+        )
+    if fam == "audio":
+        return Model(
+            cfg=cfg,
+            init=partial(encdec.init_params, cfg=cfg),
+            loss_fn=partial(encdec.loss_fn, cfg=cfg),
+            prefill=partial(encdec.prefill, cfg=cfg,
+                            block_causal_skip=block_causal_skip),
+            decode_step=partial(encdec.decode_step, cfg=cfg),
+            init_cache=partial(encdec.init_cache, cfg),
+            encode=lambda params, frames: encdec.encode(params, cfg, frames),
+        )
+    raise ValueError(f"unknown family {fam}")
+
+
+# -------------------------------------------------------------- input specs
+def uses_sliding_window_variant(cfg: ArchConfig, shape: InputShape) -> bool:
+    """long_500k on full-attention archs runs the sliding-window variant."""
+    if shape.name != "long_500k":
+        return False
+    return cfg.family in ("dense", "moe", "vlm", "audio")
+
+
+def mm_token_budget(cfg: ArchConfig, seq_len: int) -> int:
+    """# multimodal token positions inside a seq (VLM/ultravox batches)."""
+    m = cfg.modality
+    if m is None:
+        return 0
+    return min(seq_len // 2, 2 * m.tokens_per_item)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *,
+                dtype=jnp.bfloat16) -> Batch:
+    """ShapeDtypeStruct stand-ins for the step the shape exercises."""
+    B, S = shape.global_batch, shape.seq_len
+    f32, i32 = jnp.float32, jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    def mm_specs() -> Batch:
+        m = cfg.modality
+        M = mm_token_budget(cfg, S)
+        return {"mm_embeds": sds((B, M, m.enc_d_model), dtype),
+                "mm_positions": sds((B, M), i32)}
+
+    if shape.mode == "train":
+        batch: Batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "audio":
+            batch["enc_frames"] = sds((B, S, cfg.d_model), dtype)
+        elif cfg.modality is not None:
+            batch.update(mm_specs())
+        return batch
+
+    if shape.mode == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "audio":
+            batch["enc_frames"] = sds((B, S, cfg.d_model), dtype)
+        elif cfg.modality is not None:
+            batch.update(mm_specs())
+        return batch
+
+    # decode: one token + a filled cache of length S
+    window = cfg.long_context_window if uses_sliding_window_variant(cfg, shape) else 0
+    model = build_model(cfg)
+    kwargs = dict(window=window)
+    if cfg.family == "audio":
+        kwargs["enc_len"] = min(S, 30_000)  # cross-attn cache (frames)
+        if shape.name == "long_500k":
+            kwargs["enc_len"] = S
+    cache = jax.eval_shape(lambda: model.init_cache(B, S, **kwargs))
+    return {"token": sds((B,), i32), "cache": cache}
+
+
+def make_concrete_batch(cfg: ArchConfig, shape: InputShape, key,
+                        dtype=jnp.bfloat16) -> Batch:
+    """Materialize a random batch matching ``input_specs`` (smoke tests)."""
+    specs = input_specs(cfg, shape, dtype=dtype)
+
+    def fill(path, s):
+        name = path[-1].key if path else ""
+        k = jax.random.fold_in(key, hash(str(path)) % (2 ** 31))
+        if s.dtype == jnp.int32:
+            if name == "mm_positions":
+                M = s.shape[-1]
+                base = jnp.arange(M, dtype=jnp.int32)[None]
+                return jnp.broadcast_to(1 + base, s.shape)
+            hi = cfg.vocab if name in ("tokens", "labels", "token") else 2
+            return jax.random.randint(k, s.shape, 0, hi, jnp.int32)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype) * 0.1
+
+    return jax.tree_util.tree_map_with_path(fill, specs)

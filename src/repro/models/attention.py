@@ -1,0 +1,188 @@
+"""Attention: GQA projections, flash-style chunked attention (pure-jnp path),
+decode attention over (optionally ring-buffer sliding-window) KV caches.
+
+The pure-jnp chunked implementation is the portable path used for CPU smoke
+tests and the dry-run lowering; on TPU the Pallas kernels in
+``repro.kernels`` implement the same contract (``repro.kernels.*.ref`` are
+thin wrappers over these functions).
+
+Layouts:
+  q:          (B, S, H, hd)
+  k, v:       (B, S, K, hd)         K = kv heads, G = H // K
+  kv cache:   (B, W, K, hd) per layer; stacked (L, B, W, K, hd) in the stack.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, d, n_heads * head_dim, dtype),
+        "wk": dense_init(k2, d, n_kv * head_dim, dtype),
+        "wv": dense_init(k3, d, n_kv * head_dim, dtype),
+        "wo": dense_init(k4, n_heads * head_dim, d, dtype),
+    }
+
+
+def qkv_project(p: Params, x: jnp.ndarray, n_heads: int, n_kv: int,
+                head_dim: int, positions: jnp.ndarray | None,
+                rope_theta: float):
+    """x: (B, S, d) -> q (B,S,H,hd), k/v (B,S,K,hd), rope applied if positions."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, n_heads, head_dim)
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"]).reshape(B, S, n_kv, head_dim)
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"]).reshape(B, S, n_kv, head_dim)
+    if positions is not None:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def out_project(p: Params, o: jnp.ndarray) -> jnp.ndarray:
+    B, S, H, hd = o.shape
+    return jnp.einsum("bsh,hd->bsd", o.reshape(B, S, H * hd), p["wo"])
+
+
+# ----------------------------------------------------------- full-seq attn
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      q_block: int = 512, kv_block: int = 512,
+                      block_causal_skip: bool = False) -> jnp.ndarray:
+    """Flash-style online-softmax attention, O(S * block) memory.
+
+    q (B,Sq,H,hd); k,v (B,Sk,K,hd). GQA handled without materializing the
+    repeated KV. ``window > 0`` = sliding-window causal attention.
+    ``block_causal_skip`` unrolls the query-block loop in Python and slices
+    KV to the causal prefix per block, halving HLO FLOPs for causal attention
+    (beyond-paper §Perf optimization; default off = paper-faithful scan).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    G = H // K
+    scale = 1.0 / math.sqrt(hd)
+
+    if block_causal_skip and causal and window == 0:
+        # the skip path unrolls in Python: cap the program at <=16x16 blocks
+        q_block = max(q_block, -(-Sq // 16))
+        kv_block = max(kv_block, -(-Sk // 16))
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    nq = -(-Sq // q_block)
+    pad_q = nq * q_block - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    nk = -(-Sk // kv_block)
+    pad_k = nk * kv_block - Sk
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    # (B, K, G, nq, qb, hd)
+    qg = q.reshape(B, nq, q_block, K, G, hd).transpose(0, 3, 4, 1, 2, 5)
+    kg = k.reshape(B, nk, kv_block, K, hd).transpose(0, 3, 1, 2, 4)
+    vg = v.reshape(B, nk, kv_block, K, hd).transpose(0, 3, 1, 2, 4)
+
+    q_pos_in_blk = jnp.arange(q_block)
+    k_pos_in_blk = jnp.arange(kv_block)
+
+    def q_block_body(qi: jnp.ndarray, qb: jnp.ndarray,
+                     kv_prefix_blocks: int | None):
+        """qb: (B,K,G,qb,hd); returns (B,K,G,qb,hd)."""
+        q_pos = qi * q_block + q_pos_in_blk                       # (qb,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, kb, vb = inp                                       # (B,K,kb,hd)
+            s = jnp.einsum("bkgqh,bkch->bkgqc", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32)) * scale
+            k_pos = kj * kv_block + k_pos_in_blk                   # (kb,)
+            mask = k_pos[None, :] < Sk                             # pad mask
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if window > 0:
+                mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkch->bkgqh", p, vb.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_block, hd), jnp.float32)
+        if kv_prefix_blocks is None:
+            ks = jnp.arange(nk)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (ks, kg.transpose(2, 0, 1, 3, 4), vg.transpose(2, 0, 1, 3, 4)))
+        else:
+            m, l, acc = m0, l0, a0
+            for j in range(kv_prefix_blocks):
+                (m, l, acc), _ = kv_step(
+                    (m, l, acc), (jnp.asarray(j), kg[:, :, j], vg[:, :, j]))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    if block_causal_skip and causal and window == 0:
+        outs = []
+        for i in range(nq):
+            # causal prefix: kv blocks fully above the diagonal are skipped
+            last_q = i * q_block + q_block - 1
+            n_need = min(nk, last_q // kv_block + 1)
+            outs.append(q_block_body(jnp.asarray(i), qg[:, :, :, i], n_need))
+        o = jnp.stack(outs, axis=3)                                # (B,K,G,nq,qb,hd)
+    else:
+        o = jax.lax.map(
+            lambda qi: q_block_body(qi, qg[:, :, :, qi], None), jnp.arange(nq))
+        o = o.transpose(1, 2, 3, 0, 4, 5)                          # (B,K,G,nq,qb,hd)
+
+    o = o.transpose(0, 3, 4, 1, 2, 5).reshape(B, nq * q_block, H, hd)
+    return o[:, :Sq].astype(q.dtype)
+
+
+# -------------------------------------------------------------- decode attn
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     length: jnp.ndarray) -> jnp.ndarray:
+    """One-token attention over the cache.
+
+    q: (B, H, hd); caches (B, W, K, hd); length (B,) = number of valid slots
+    (for ring-buffer sliding windows the whole buffer is valid once wrapped,
+    and ``length`` is clamped to W by the caller). Returns (B, H, hd).
+    """
+    B, W, K, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bwkh->bkgw", qg, k_cache.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    valid = jnp.arange(W)[None] < length[:, None]                  # (B, W)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgw,bwkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def cache_write(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                k_new: jnp.ndarray, v_new: jnp.ndarray,
+                pos: jnp.ndarray):
+    """Write one token's k/v (B, K, hd) at slot ``pos % W`` (ring buffer)."""
+    W = k_cache.shape[1]
+    slot = pos % W                                                  # (B,)
+    b_idx = jnp.arange(k_cache.shape[0])
+    k_cache = k_cache.at[b_idx, slot].set(k_new.astype(k_cache.dtype))
+    v_cache = v_cache.at[b_idx, slot].set(v_new.astype(v_cache.dtype))
+    return k_cache, v_cache

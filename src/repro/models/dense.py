@@ -1,0 +1,246 @@
+"""Decoder-only transformer stack: dense GQA, MoE, and VLM variants.
+
+All stacks ``lax.scan`` over layers with stacked params; the KV cache is
+``(L, B, W, K, hd)`` and decode threads it through the scan as xs/ys.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (attn_init, cache_write, chunked_attention,
+                                    decode_attention, out_project, qkv_project)
+from repro.models.encoder import encoder_apply, encoder_init
+from repro.models.layers import (Params, dense_init, embed_init, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init,
+                                 softmax_xent, stack_init)
+from repro.models.moe import moe_apply, moe_init
+
+Batch = dict[str, Any]
+
+
+def layer_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 5)
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_init(ks[1], cfg.n_layers, lambda k: layer_init(k, cfg, dtype)),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, dtype)
+    if cfg.modality is not None:
+        m = cfg.modality
+        p["mm_encoder"] = encoder_init(ks[3], m.enc_layers, m.enc_d_model,
+                                       m.enc_heads, m.enc_d_ff, dtype)
+        p["mm_proj"] = dense_init(ks[4], m.enc_d_model, cfg.d_model, dtype)
+    return p
+
+
+# ------------------------------------------------------------------ E stage
+def encode_mm(params: Params, cfg: ArchConfig, mm_embeds: jnp.ndarray) -> jnp.ndarray:
+    """The paper's E stage: stub patch/frame embeddings -> multimodal tokens.
+
+    mm_embeds: (B, M, enc_d_model) -> (B, M, d_model). Patches are
+    independent across the M dim, which is what IRP exploits.
+    """
+    m = cfg.modality
+    h = encoder_apply(params["mm_encoder"], mm_embeds, heads=m.enc_heads,
+                      norm_eps=cfg.norm_eps, segment=m.tokens_per_item)
+    return jnp.einsum("bmd,de->bme", h, params["mm_proj"])
+
+
+def embed_inputs(params: Params, cfg: ArchConfig, tokens: jnp.ndarray,
+                 mm_tokens: Optional[jnp.ndarray] = None,
+                 mm_positions: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = params["embed"][tokens]                                    # (B, S, d)
+    if mm_tokens is not None:
+        B = x.shape[0]
+        b_idx = jnp.arange(B)[:, None]
+        x = x.at[b_idx, mm_positions].set(mm_tokens.astype(x.dtype))
+    return x
+
+
+def _ffn(lp: Params, cfg: ArchConfig, h: jnp.ndarray):
+    if cfg.moe is not None:
+        if cfg.moe.use_shard_map:
+            from repro.launch.context import current_mesh
+            mesh = current_mesh()
+            if mesh is not None and "model" in mesh.axis_names:
+                M = mesh.shape["model"]
+                D = mesh.devices.size // M
+                B, S = h.shape[0], h.shape[1]
+                ok = (cfg.moe.n_experts_padded % M == 0 and B % D == 0
+                      and ((B // D) * S) % M == 0)
+                if ok:
+                    from repro.models.moe import moe_apply_shard_map
+                    return moe_apply_shard_map(lp["moe"], h, cfg, mesh)
+        return moe_apply(lp["moe"], h, cfg)
+    return mlp_apply(lp["mlp"], h), jnp.float32(0.0)
+
+
+# ------------------------------------------------------- full-seq forward
+def forward(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+            positions: jnp.ndarray, *, window: int = 0, return_kv: bool = False,
+            block_causal_skip: bool = False, remat: bool = False):
+    """x: (B, S, d) -> (hidden (B,S,d), kv (L,B,S,K,hd) x2 | None, aux)."""
+
+    def body(h, lp):
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                              positions, cfg.rope_theta)
+        o = chunked_attention(q, k, v, causal=True, window=window,
+                              block_causal_skip=block_causal_skip)
+        h = h + out_project(lp["attn"], o)
+        f, aux = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = h + f
+        ys = (k, v, aux) if return_kv else aux
+        return h, ys
+
+    if remat:
+        # recompute layer activations in backward (standard at this scale)
+        body = jax.checkpoint(body)
+    x, ys = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    if return_kv:
+        ks, vs, aux = ys
+        return x, (ks, vs), aux.mean()
+    return x, None, ys.mean()
+
+
+def lm_head(params: Params, cfg: ArchConfig, h: jnp.ndarray) -> jnp.ndarray:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return jnp.einsum("...d,dv->...v", h, w)
+
+
+def _xent_sum(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).sum()
+
+
+def chunked_loss(params: Params, cfg: ArchConfig, h: jnp.ndarray,
+                 labels: jnp.ndarray, chunk: int = 1024) -> jnp.ndarray:
+    """Cross-entropy without materializing (B, S, V) fp32 logits at once."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n = S // chunk
+    hc = h[:, :n * chunk].reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels[:, :n * chunk].reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        hh, ll = xs
+        return acc + _xent_sum(lm_head(params, cfg, hh), ll), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (hc, lc))
+    if S - n * chunk:
+        total = total + _xent_sum(lm_head(params, cfg, h[:, n * chunk:]),
+                                  labels[:, n * chunk:])
+    return total / (B * S)
+
+
+# ----------------------------------------------------------------- entries
+def loss_fn(params: Params, cfg: ArchConfig, batch: Batch, *,
+            block_causal_skip: bool = False) -> tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mm_tokens = None
+    if cfg.modality is not None and "mm_embeds" in batch:
+        mm_tokens = encode_mm(params, cfg, batch["mm_embeds"])
+    x = embed_inputs(params, cfg, tokens, mm_tokens, batch.get("mm_positions"))
+    positions = jnp.arange(S)[None, :]
+    h, _, aux = forward(params, cfg, x, positions, window=cfg.sliding_window,
+                        block_causal_skip=block_causal_skip, remat=True)
+    ce = chunked_loss(params, cfg, h, batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
+            window: int = 0, max_len: int | None = None,
+            block_causal_skip: bool = False) -> tuple[jnp.ndarray, Batch]:
+    """Returns (last-token logits (B, V), kv cache dict).
+
+    ``max_len`` adds decode headroom: the cache seq dim is padded to it so
+    subsequent ``decode_step`` writes don't wrap over the prompt."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mm_tokens = None
+    if cfg.modality is not None and "mm_embeds" in batch:
+        mm_tokens = encode_mm(params, cfg, batch["mm_embeds"])
+    x = embed_inputs(params, cfg, tokens, mm_tokens, batch.get("mm_positions"))
+    positions = jnp.arange(S)[None, :]
+    eff_window = window or cfg.sliding_window
+    h, (ks, vs), _ = forward(params, cfg, x, positions, window=eff_window,
+                             return_kv=True,
+                             block_causal_skip=block_causal_skip)
+    logits = lm_head(params, cfg, h[:, -1])
+    if eff_window and eff_window < S:
+        # keep only the last ``window`` positions, ring-aligned
+        W = eff_window
+        start = S - W
+        roll = start % W
+        ks = jnp.roll(ks[:, :, start:], shift=roll, axis=2)
+        vs = jnp.roll(vs[:, :, start:], shift=roll, axis=2)
+    elif max_len is not None and max_len > ks.shape[2]:
+        pad = max_len - ks.shape[2]
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs,
+             "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Batch:
+    W = min(window, max_len) if window else max_len
+    shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params: Params, cfg: ArchConfig, batch: Batch
+                ) -> tuple[jnp.ndarray, Batch]:
+    """One autoregressive step. batch: {"token": (B,), "cache": {...}}."""
+    cache = batch["cache"]
+    token = batch["token"]
+    pos = cache["pos"]                                             # (B,)
+    B = token.shape[0]
+    W = cache["k"].shape[2]
+    x = params["embed"][token][:, None, :]                         # (B,1,d)
+
+    def body(h, xs):
+        lp, kc, vc = xs
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                              pos[:, None], cfg.rope_theta)
+        kc, vc = cache_write(kc, vc, k[:, 0], v[:, 0], pos)
+        length = jnp.minimum(pos + 1, W)
+        o = decode_attention(q[:, 0], kc, vc, length)              # (B,H,hd)
+        h = h + out_project(lp["attn"], o[:, None])
+        f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = h + f
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = lm_head(params, cfg, h[:, 0])
+    new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+    return logits, new_cache

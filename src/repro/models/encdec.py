@@ -1,0 +1,192 @@
+"""Whisper-style encoder-decoder.
+
+The mel+conv frontend is a STUB: inputs are precomputed frame embeddings
+(B, S_enc, d_model). The transformer encoder (the EPD **E stage**) and the
+decoder (P/D stages) are real. Decoder layers: causal self-attn (cached) +
+cross-attn over encoder output (cross K/V computed once at prefill) + MLP.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (attn_init, cache_write, chunked_attention,
+                                    decode_attention, out_project, qkv_project)
+from repro.models.dense import chunked_loss, lm_head
+from repro.models.encoder import encoder_apply, encoder_init
+from repro.models.layers import (Params, dense_init, embed_init, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init, stack_init)
+
+Batch = dict
+
+
+def dec_layer_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "self_attn": attn_init(k1, d, H, K, hd, dtype),
+        "ln_x": rmsnorm_init(d, dtype),
+        "cross_attn": attn_init(k2, d, H, K, hd, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        "mlp": mlp_init(k3, d, cfg.d_ff, dtype),
+    }
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 4)
+    m = cfg.modality
+    return {
+        "encoder": encoder_init(ks[0], cfg.n_enc_layers, cfg.d_model,
+                                m.enc_heads if m else cfg.n_heads,
+                                m.enc_d_ff if m else cfg.d_ff, dtype),
+        "embed": embed_init(ks[1], cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_init(ks[2], cfg.n_layers,
+                             lambda k: dec_layer_init(k, cfg, dtype)),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, frames: jnp.ndarray) -> jnp.ndarray:
+    """E stage: (B, S_enc, d_model) stub frame embeds -> encoder output.
+
+    Attention is windowed per audio clip (``tokens_per_item`` frames = one
+    30s whisper window) — faithful to whisper's per-window encoder and the
+    independence IRP relies on."""
+    m = cfg.modality
+    return encoder_apply(params["encoder"], frames,
+                         heads=m.enc_heads if m else cfg.n_heads,
+                         norm_eps=cfg.norm_eps,
+                         segment=m.tokens_per_item if m else 0)
+
+
+def _cross_kv(lp: Params, cfg: ArchConfig, enc_out: jnp.ndarray):
+    B, S, _ = enc_out.shape
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross_attn"]["wk"]) \
+        .reshape(B, S, K, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross_attn"]["wv"]) \
+        .reshape(B, S, K, hd)
+    return k, v
+
+
+def _dec_layer_full(lp, cfg, h, enc_out, positions, window: int = 0,
+                    block_causal_skip: bool = False):
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q, k, v = qkv_project(lp["self_attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                          H, K, hd, positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=True, window=window,
+                          block_causal_skip=block_causal_skip)
+    h = h + out_project(lp["self_attn"], o)
+    xq = jnp.einsum("bsd,dh->bsh", rmsnorm(lp["ln_x"], h, cfg.norm_eps),
+                    lp["cross_attn"]["wq"])
+    B, S, _ = h.shape
+    xq = xq.reshape(B, S, H, hd)
+    ck, cv = _cross_kv(lp, cfg, enc_out)
+    xo = chunked_attention(xq, ck, cv, causal=False)
+    h = h + out_project(lp["cross_attn"], xo)
+    h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+    return h, (k, v, ck, cv)
+
+
+def _decoder(params, cfg, tokens, enc_out, *, window: int = 0,
+             return_kv: bool = False, remat: bool = False,
+             block_causal_skip: bool = False):
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+
+    def body(h, lp):
+        h, kv = _dec_layer_full(lp, cfg, h, enc_out, positions, window,
+                                block_causal_skip)
+        return h, kv if return_kv else None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, kvs = jax.lax.scan(body, x, params["layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, kvs
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Batch):
+    enc_out = encode(params, cfg, batch["enc_frames"])
+    h, _ = _decoder(params, cfg, batch["tokens"], enc_out, remat=True)
+    ce = chunked_loss(params, cfg, h, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Batch, *, window: int = 0,
+            max_len: int | None = None, block_causal_skip: bool = False):
+    # EPD path: the E stage already ran `encode` elsewhere and ψ_EP shipped
+    # its output — accept it via "enc_out" and skip re-encoding at P.
+    if "enc_out" in batch and batch["enc_out"] is not None:
+        enc_out = batch["enc_out"]
+    else:
+        enc_out = encode(params, cfg, batch["enc_frames"])
+    B, S = batch["tokens"].shape
+    h, (ks, vs, cks, cvs) = _decoder(params, cfg, batch["tokens"], enc_out,
+                                     window=window, return_kv=True,
+                                     block_causal_skip=block_causal_skip)
+    logits = lm_head(params, cfg, h[:, -1])
+    if window and window < S:
+        W, start = window, S - window
+        roll = start % window
+        ks = jnp.roll(ks[:, :, start:], shift=roll, axis=2)
+        vs = jnp.roll(vs[:, :, start:], shift=roll, axis=2)
+    elif max_len is not None and max_len > S:
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "cross_k": cks, "cross_v": cvs,
+             "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *, enc_len: int,
+               window: int = 0, dtype=jnp.bfloat16) -> Batch:
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    W = min(window, max_len) if window else max_len
+    return {
+        "k": jnp.zeros((L, batch, W, K, hd), dtype),
+        "v": jnp.zeros((L, batch, W, K, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, K, hd), dtype),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, batch: Batch):
+    cache = batch["cache"]
+    token = batch["token"]
+    pos = cache["pos"]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    x = params["embed"][token][:, None, :]
+    W = cache["k"].shape[2]
+    enc_len = cache["cross_k"].shape[2]
+
+    def body(h, xs):
+        lp, kc, vc, ck, cv = xs
+        q, k, v = qkv_project(lp["self_attn"],
+                              rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              H, K, hd, pos[:, None], cfg.rope_theta)
+        kc, vc = cache_write(kc, vc, k[:, 0], v[:, 0], pos)
+        o = decode_attention(q[:, 0], kc, vc, jnp.minimum(pos + 1, W))
+        h = h + out_project(lp["self_attn"], o[:, None])
+        xq = jnp.einsum("bsd,dh->bsh", rmsnorm(lp["ln_x"], h, cfg.norm_eps),
+                        lp["cross_attn"]["wq"]).reshape(-1, 1, H, hd)
+        B = h.shape[0]
+        xo = decode_attention(xq[:, 0], ck, cv,
+                              jnp.full((B,), enc_len, jnp.int32))
+        h = h + out_project(lp["cross_attn"], xo[:, None])
+        h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, x[:, 0])
+    new_cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+    return logits, new_cache

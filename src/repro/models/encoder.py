@@ -1,0 +1,76 @@
+"""Generic non-causal transformer encoder.
+
+Used for (a) the multimodal E-stage encoder that turns stub patch/frame
+embeddings into multimodal tokens (the paper's ``v_t^e = E(i_m)``), and
+(b) the whisper audio encoder. Patchify/conv frontends are stubbed per the
+brief; the transformer itself is real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (attn_init, chunked_attention, out_project,
+                                    qkv_project)
+from repro.models.layers import (Params, mlp_apply, mlp_init, rmsnorm,
+                                 rmsnorm_init, stack_init)
+
+
+def enc_layer_init(key, d: int, heads: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    hd = d // heads
+    return {
+        "ln1": rmsnorm_init(d, dtype),
+        "attn": attn_init(k1, d, heads, heads, hd, dtype),
+        "ln2": rmsnorm_init(d, dtype),
+        "mlp": mlp_init(k2, d, d_ff, dtype),
+    }
+
+
+def encoder_init(key, n_layers: int, d: int, heads: int, d_ff: int,
+                 dtype=jnp.bfloat16) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "layers": stack_init(k1, n_layers,
+                             lambda k: enc_layer_init(k, d, heads, d_ff, dtype)),
+        "ln_f": rmsnorm_init(d, dtype),
+    }
+
+
+def encoder_apply(p: Params, x: jnp.ndarray, *, heads: int,
+                  rope_theta: float = 1e4, norm_eps: float = 1e-5,
+                  segment: int = 0) -> jnp.ndarray:
+    """x: (B, S, d) frame/patch embeddings -> (B, S, d) encoded.
+
+    ``segment > 0`` makes attention BLOCK-DIAGONAL over groups of ``segment``
+    tokens: each image patch / 30s audio window is encoded independently —
+    faithful to per-patch ViTs and Whisper's windowing, and the property
+    that makes the paper's IRP (intra-request parallelism) lossless:
+    "since patches are encoded independently, they can be processed and
+    transferred concurrently" (§3.2.2). It also kills the O(S^2) cross-
+    segment attention that would otherwise dominate long-input encodes.
+    """
+    B, S, d = x.shape
+    hd = d // heads
+    pad = 0
+    if segment and segment < S:
+        pad = (-S) % segment
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        x = x.reshape(B * ((S + pad) // segment), segment, d)
+    Sx = x.shape[1]
+    positions = jnp.arange(Sx)[None, :]
+
+    def body(h, lp):
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, norm_eps),
+                              heads, heads, hd, positions, rope_theta)
+        o = chunked_attention(q, k, v, causal=False)
+        h = h + out_project(lp["attn"], o)
+        h = h + mlp_apply(lp["mlp"], rmsnorm(lp["ln2"], h, norm_eps))
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, p["layers"])
+    x = rmsnorm(p["ln_f"], x, norm_eps)
+    if segment and segment < S + pad:
+        x = x.reshape(B, S + pad, d)[:, :S]
+    return x

@@ -1,0 +1,212 @@
+"""Zamba2-style hybrid stack: Mamba2 backbone + a SHARED attention block
+every ``attn_every``-th layer.
+
+Layer plan for n_layers=81, attn_every=6:
+  13 groups of [5 mamba layers, 1 shared attn+MLP block] (78 layers)
+  + 3 trailing mamba layers.
+The attention block's weights are ONE set reused at every occurrence
+(Zamba's signature weight sharing); only its KV cache is per-occurrence.
+
+Caches: {"ssm"/"conv": grouped (G, 5, ...) + trailing (R, ...),
+         "k"/"v": (G, B, W, K, hd), "pos": (B,)}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.attention import (attn_init, cache_write, chunked_attention,
+                                    decode_attention, out_project, qkv_project)
+from repro.models.dense import chunked_loss, lm_head
+from repro.models.layers import (Params, dense_init, embed_init, mlp_apply,
+                                 mlp_init, rmsnorm, rmsnorm_init, stack_init)
+from repro.models.mamba2 import (mamba2_decode_step, mamba2_forward,
+                                 mamba2_init, mamba2_init_state)
+
+Batch = dict
+
+
+def plan(cfg: ArchConfig):
+    """(n_groups, per_group_mamba, trailing_mamba)."""
+    per = cfg.attn_every - 1
+    groups = cfg.n_layers // cfg.attn_every
+    trailing = cfg.n_layers - groups * cfg.attn_every
+    return groups, per, trailing
+
+
+def _mamba_layer_init(key, cfg: ArchConfig, dtype):
+    return {"ln": rmsnorm_init(cfg.d_model, dtype),
+            "mix": mamba2_init(key, cfg, dtype)}
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    G, per, R = plan(cfg)
+    ks = jax.random.split(key, 6)
+    shared_k1, shared_k2 = jax.random.split(ks[2])
+    p = {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "groups": stack_init(
+            ks[1], G,
+            lambda k: stack_init(k, per,
+                                 lambda k2: _mamba_layer_init(k2, cfg, dtype))),
+        "shared_attn": {
+            "ln1": rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(shared_k1, cfg.d_model, cfg.n_heads,
+                              cfg.n_kv_heads, cfg.head_dim, dtype),
+            "ln2": rmsnorm_init(cfg.d_model, dtype),
+            "mlp": mlp_init(shared_k2, cfg.d_model, cfg.d_ff, dtype),
+        },
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab, dtype),
+    }
+    if R:
+        p["trailing"] = stack_init(
+            ks[4], R, lambda k: _mamba_layer_init(k, cfg, dtype))
+    return p
+
+
+def _mamba_sublayer(lp, cfg, x, state=None, decode=False):
+    h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+    if decode:
+        y, new_state = mamba2_decode_step(lp["mix"], cfg, h, state)
+    else:
+        y, new_state = mamba2_forward(lp["mix"], cfg, h,
+                                      return_state=state is not None)
+    return x + y, new_state
+
+
+def _attn_block(sp, cfg, x, positions):
+    q, k, v = qkv_project(sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                          cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          positions, cfg.rope_theta)
+    o = chunked_attention(q, k, v, causal=True)
+    x = x + out_project(sp["attn"], o)
+    x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x, (k, v)
+
+
+def _attn_block_decode(sp, cfg, x, kc, vc, pos):
+    """x (B,1,d); kc/vc (B,W,K,hd)."""
+    W = kc.shape[1]
+    q, k, v = qkv_project(sp["attn"], rmsnorm(sp["ln1"], x, cfg.norm_eps),
+                          cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                          pos[:, None], cfg.rope_theta)
+    kc, vc = cache_write(kc, vc, k[:, 0], v[:, 0], pos)
+    o = decode_attention(q[:, 0], kc, vc, jnp.minimum(pos + 1, W))
+    x = x + out_project(sp["attn"], o[:, None])
+    x = x + mlp_apply(sp["mlp"], rmsnorm(sp["ln2"], x, cfg.norm_eps))
+    return x, kc, vc
+
+
+# --------------------------------------------------------------- full seq
+def _full_seq(params, cfg, x, positions, want_state: bool,
+              remat: bool = False):
+    G, per, R = plan(cfg)
+    sp = params["shared_attn"]
+
+    def group_body(h, gp):
+        def inner(h2, lp):
+            h2, st = _mamba_sublayer(lp, cfg, h2,
+                                     state=() if want_state else None)
+            return h2, st
+        h, states = jax.lax.scan(inner, h, gp)
+        h, (k, v) = _attn_block(sp, cfg, h, positions)
+        return h, (states, k, v)
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    x, (m_states, ks, vs) = jax.lax.scan(group_body, x, params["groups"])
+    t_states = None
+    if R:
+        def inner(h2, lp):
+            return _mamba_sublayer(lp, cfg, h2,
+                                   state=() if want_state else None)
+        x, t_states = jax.lax.scan(inner, x, params["trailing"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, (ks, vs), m_states, t_states
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    h, _, _, _ = _full_seq(params, cfg, x, positions, want_state=False,
+                           remat=True)
+    ce = chunked_loss(params, cfg, h, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
+            max_len: int | None = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    h, (ks, vs), m_states, t_states = _full_seq(params, cfg, x, positions,
+                                                want_state=True)
+    logits = lm_head(params, cfg, h[:, -1])
+    if max_len is not None and max_len > S:
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "ssm": m_states, "trailing_ssm": t_states,
+             "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
+               window: int = 0, dtype=jnp.bfloat16) -> Batch:
+    G, per, R = plan(cfg)
+    ssm0, conv0 = mamba2_init_state(cfg, batch)
+
+    def rep(t, n):
+        return jnp.broadcast_to(t[None], (n,) + t.shape)
+
+    def rep2(t):
+        return jnp.broadcast_to(t[None, None], (G, per) + t.shape)
+
+    W = min(window, max_len) if window else max_len
+    kv_shape = (G, batch, W, cfg.n_kv_heads, cfg.head_dim)
+    cache = {
+        "k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+        "ssm": (rep2(ssm0), rep2(conv0)),
+        "trailing_ssm": (rep(ssm0, R), rep(conv0, R)) if R else None,
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+    return cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, batch: Batch):
+    cache = batch["cache"]
+    token = batch["token"]
+    pos = cache["pos"]
+    G, per, R = plan(cfg)
+    sp = params["shared_attn"]
+    x = params["embed"][token][:, None, :]
+
+    def group_body(h, xs):
+        gp, g_ssm, kc, vc = xs
+
+        def inner(h2, xs2):
+            lp, st = xs2
+            h2, st = _mamba_sublayer(lp, cfg, h2, state=st, decode=True)
+            return h2, st
+        h, g_ssm = jax.lax.scan(inner, h, (gp, g_ssm))
+        h, kc, vc = _attn_block_decode(sp, cfg, h, kc, vc, pos)
+        return h, (g_ssm, kc, vc)
+
+    x, (m_states, ks, vs) = jax.lax.scan(
+        group_body, x, (params["groups"], cache["ssm"], cache["k"], cache["v"]))
+    t_states = cache["trailing_ssm"]
+    if R:
+        def inner(h2, xs2):
+            lp, st = xs2
+            return _mamba_sublayer(lp, cfg, h2, state=st, decode=True)
+        x, t_states = jax.lax.scan(inner, x, (params["trailing"], t_states))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = lm_head(params, cfg, x[:, 0])
+    new_cache = {"k": ks, "v": vs, "ssm": m_states, "trailing_ssm": t_states,
+                 "pos": pos + 1}
+    return logits, new_cache

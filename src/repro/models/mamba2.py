@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block: chunked scan for train/prefill, O(1) recurrent decode.
+
+Layout conventions:
+  d_inner = expand * d_model;  H = d_inner // head_dim;  P = head_dim;
+  N = d_state; n_groups = 1 (B/C shared across heads).
+State cache per layer: ssm (B, H, P, N) fp32, conv (B, d_conv-1, C_conv)
+with C_conv = d_inner + 2N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMSpec
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+
+def mamba2_dims(cfg: ArchConfig):
+    s = cfg.ssm or SSMSpec()
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    return s, d_inner, H, s.head_dim, s.d_state
+
+
+def mamba2_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    s, di, H, P, N = mamba2_dims(cfg)
+    d = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    c_conv = di + 2 * N
+    return {
+        "in_proj": dense_init(k1, d, 2 * di + 2 * N + H, dtype),
+        "conv_w": (jax.random.normal(k2, (s.d_conv, c_conv), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((c_conv,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": dense_init(k3, di, d, dtype),
+    }
+
+
+def _split_proj(p: Params, x: jnp.ndarray, di: int, N: int, H: int):
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N:]
+    return z, xbc, dt
+
+
+def _conv_full(p: Params, xbc: jnp.ndarray, d_conv: int) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * p["conv_w"][i]
+              for i in range(d_conv))
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(xs: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+                Bmat: jnp.ndarray, Cmat: jnp.ndarray, chunk: int,
+                state0: jnp.ndarray | None = None):
+    """Core chunked SSD scan (shared oracle with the Pallas kernel).
+
+    xs (B,S,H,P); dt,a (B,S,H); B/C (B,S,N) -> (y (B,S,H,P) fp32,
+    final state (B,H,P,N) fp32). ``a = dt * A`` (negative)."""
+    B, S, H, P = xs.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:  # largest divisor of S not exceeding the chunk setting
+        Q -= 1
+    nc = S // Q
+
+    xs_c = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    B_c = Bmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, H)
+    a_c = a.reshape(B, nc, Q, H)
+
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+
+    def chunk_step(state, inp):
+        xq, bq, cq, dtq, aq = inp                                  # (B,Q,...)
+        cum = jnp.cumsum(aq, axis=1)                               # (B,Q,H)
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, state) \
+            * jnp.exp(cum)[..., None]                              # decay to t
+        # intra-chunk
+        scores = jnp.einsum("bqn,bkn->bqk", cq, bq)                # (B,Q,Q)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]             # (B,Q,K,H)
+        diff = jnp.where(tri[None, :, :, None], diff, -jnp.inf)    # mask k>q
+        m = scores[..., None] * jnp.exp(diff) * dtq[:, None, :, :]
+        y_intra = jnp.einsum("bqkh,bkhp->bqhp", m, xq)
+        # state update
+        tail = jnp.exp(cum[:, -1:, :] - cum)                       # (B,Q,H)
+        contrib = jnp.einsum("bkh,bkn,bkhp->bhpn", tail * dtq, bq, xq)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+        return state, y_inter + y_intra
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs_t = (xs_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+            C_c.transpose(1, 0, 2, 3), dt_c.transpose(1, 0, 2, 3),
+            a_c.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(chunk_step, state0, xs_t)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    return y, state
+
+
+def mamba2_forward(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                   return_state: bool = False):
+    """Full-sequence chunked SSD. x: (B, S, d) -> (y (B, S, d), final_state?)."""
+    s, di, H, P, N = mamba2_dims(cfg)
+    B, S, d = x.shape
+
+    z, xbc, dt = _split_proj(p, x, di, N, H)
+    xbc = _conv_full(p, xbc, s.d_conv)
+    xs = xbc[..., :di].reshape(B, S, H, P)
+    Bmat = xbc[..., di:di + N]                                     # (B,S,N)
+    Cmat = xbc[..., di + N:]                                       # (B,S,N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                       # (H,)
+    a = dt * A                                                     # (B,S,H) <0
+
+    y, state = ssd_chunked(xs, dt, a, Bmat, Cmat, s.chunk)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    if return_state:
+        conv_state = xbc_raw_tail(p, x, di, N, H, s.d_conv)
+        return out, (state, conv_state)
+    return out, None
+
+
+def xbc_raw_tail(p: Params, x: jnp.ndarray, di: int, N: int, H: int,
+                 d_conv: int) -> jnp.ndarray:
+    """Last d_conv-1 pre-conv xbc inputs (for the decode conv state)."""
+    _, xbc, _ = _split_proj(p, x[:, -(d_conv - 1):], di, N, H)
+    return xbc.astype(jnp.bfloat16)
+
+
+def mamba2_init_state(cfg: ArchConfig, batch: int):
+    s, di, H, P, N = mamba2_dims(cfg)
+    return (jnp.zeros((batch, H, P, N), jnp.float32),
+            jnp.zeros((batch, s.d_conv - 1, di + 2 * N), jnp.bfloat16))
+
+
+def mamba2_decode_step(p: Params, cfg: ArchConfig, x: jnp.ndarray, state):
+    """x: (B, 1, d); state = (ssm (B,H,P,N), conv (B,d_conv-1,C))."""
+    s, di, H, P, N = mamba2_dims(cfg)
+    ssm, conv = state
+    B = x.shape[0]
+    z, xbc, dt = _split_proj(p, x, di, N, H)                       # (B,1,...)
+    xbc = xbc[:, 0]
+    # conv over the stored tail + current input
+    hist = jnp.concatenate([conv.astype(xbc.dtype), xbc[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_new = hist[:, 1:]
+    xbc_t = jax.nn.silu(conv_out.astype(jnp.float32))              # (B,C)
+    xt = xbc_t[:, :di].reshape(B, H, P)
+    bt = xbc_t[:, di:di + N]
+    ct = xbc_t[:, di + N:]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * A)                                      # (B,H)
+    ssm = ssm * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt_t, bt, xt)
+    y = jnp.einsum("bn,bhpn->bhp", ct, ssm)                        # (B,H,P)
+    y = y + p["D"][None, :, None] * xt
+    y = y.reshape(B, di).astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, p["out_proj"])[:, None]       # (B,1,d)
+    return out, (ssm, conv_new)

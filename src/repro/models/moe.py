@@ -1,0 +1,228 @@
+"""Mixture-of-Experts FFN: top-k routing with sort-based dispatch.
+
+Dispatch is the TPU-friendly sorted-scatter formulation (MegaBlocks/MaxText
+style): token->expert assignments are sorted, each token lands at a
+(expert, slot) coordinate within a fixed per-expert capacity ``C``, expert
+FFNs run as one grouped einsum over (E, C, d), and results scatter back with
+router weights. Tokens beyond capacity are dropped (standard capacity-factor
+semantics). Under expert-parallel sharding the (E, C, d) buffer is sharded on
+the expert dim, which GSPMD turns into an all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Params, dense_init
+
+
+def _constrain(x, axes: tuple):
+    """Best-effort sharding constraint (no-op without an active mesh)."""
+    try:
+        from jax.sharding import PartitionSpec as P
+        return jax.lax.with_sharding_constraint(x, P(*axes))
+    except Exception:
+        return x
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    assert cfg.moe is not None
+    E, d, f = cfg.moe.n_experts_padded, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    def ginit(k, shape, fan_in):
+        return (jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(
+            jnp.float32(fan_in))).astype(dtype)
+
+    return {
+        "router": dense_init(k1, d, cfg.moe.n_experts, jnp.float32),
+        "wi_gate": ginit(k2, (E, d, f), d),
+        "wi_up": ginit(k3, (E, d, f), d),
+        "wo": ginit(k4, (E, f, d), f),
+    }
+
+
+def _dispatch_one_group(xt, top_i, top_w, E: int, k: int, cap: int):
+    """Sort-based dispatch WITHIN one data-parallel group.
+
+    xt (T, d); top_i/top_w (T, k). Returns (buf (E, cap, d), dest, keep,
+    src_tok, w_sorted) for the combine step."""
+    T, d = xt.shape
+    Tk = T * k
+    flat_e = top_i.reshape(Tk)
+    flat_w = top_w.reshape(Tk)
+    order = jnp.argsort(flat_e, stable=True)                       # (Tk,)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=E)                        # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(Tk) - starts[sorted_e]
+    keep = pos_in_e < cap
+    dest = jnp.where(keep, sorted_e * cap + pos_in_e, E * cap)     # OOB drops
+    src_tok = order // k
+    buf = jnp.zeros((E * cap, d), xt.dtype).at[dest].set(
+        xt[src_tok], mode="drop").reshape(E, cap, d)
+    return buf, dest, keep, src_tok, flat_w[order].astype(xt.dtype)
+
+
+def _combine_one_group(out_flat, dest, keep, src_tok, w_sorted, T: int,
+                       d: int):
+    contrib = jnp.where(keep[:, None],
+                        out_flat[jnp.minimum(dest, out_flat.shape[0] - 1)],
+                        0.0)
+    return jnp.zeros((T, d), out_flat.dtype).at[src_tok].add(
+        contrib * w_sorted[:, None])
+
+
+def moe_apply(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+              capacity_factor: float | None = None, *,
+              dispatch_groups: int = 0):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar fp32).
+
+    ``dispatch_groups > 0`` splits tokens into G groups and dispatches each
+    group independently (vmap). With G = the data-axis size, every group's
+    sort/scatter is local to one data shard, so GSPMD keeps dispatch
+    on-device and only reshards the (G, E, cap, d) expert buffer across the
+    expert-parallel axis (all-to-all) instead of all-reducing a global
+    scatter — the §Perf hillclimb for the MoE architectures. G=0 reproduces
+    the single-group (paper-baseline) dispatch.
+    """
+    spec = cfg.moe
+    if capacity_factor is None:
+        capacity_factor = spec.capacity_factor
+    if not dispatch_groups:
+        dispatch_groups = spec.dispatch_groups
+    # routing over the REAL experts; dispatch buffers sized to the padded
+    # count so the expert dim shards cleanly (padded rows get no routes)
+    E, k = spec.n_experts_padded, spec.top_k
+    E_real = spec.n_experts
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                        # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, k)                         # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance aux loss (over REAL experts).
+    me = probs.mean(axis=0)                                        # (E_real,)
+    one_hot = jax.nn.one_hot(top_i, E_real, dtype=jnp.float32)
+    ce = one_hot.sum(axis=(0, 1)) / (T * k)                        # fraction
+    aux = E_real * jnp.sum(me * ce) * spec.router_aux_coef
+
+    G = dispatch_groups if (dispatch_groups and T % dispatch_groups == 0) \
+        else 1
+    Tg = T // G
+    cap = max(1, int(capacity_factor * Tg * k / E))
+    cap = -(-cap // 4) * 4                                         # pad to 4
+
+    xg = xt.reshape(G, Tg, d)
+    ig = top_i.reshape(G, Tg, k)
+    wg = top_w.reshape(G, Tg, k)
+    buf, dest, keep, src_tok, w_sorted = jax.vmap(
+        lambda a, b, c: _dispatch_one_group(a, b, c, E, k, cap))(xg, ig, wg)
+    # buf: (G, E, cap, d) — G rides the data axis, E the expert axis
+    if G > 1:
+        buf = _constrain(buf, ("data", "model", None, None))
+
+    g_ = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+    # silu stays in bf16: the fp32 round-trip made GSPMD all-reduce fp32
+    # activation grads in the backward (2x bytes) — §Perf iteration A3
+    h = jax.nn.silu(g_) * u
+    out = jnp.einsum("gecf,efd->gecd", h, p["wo"])                 # (G,E,cap,d)
+    if G > 1:
+        # bring every expert's outputs back to the token's data shard
+        out = _constrain(out, ("data", None, None, None))
+
+    y = jax.vmap(lambda o, de, ke, st, w: _combine_one_group(
+        o.reshape(E * cap, d), de, ke, st, w, Tg, d))(
+        out, dest, keep, src_tok, w_sorted)
+    y = y.reshape(B, S, d)
+    if G > 1:
+        # keep the result (and its cotangent) sharded like the activations
+        y = _constrain(y, ("data", None, None))
+    return y, aux
+
+
+# --------------------------------------------------- shard_map EP (A4 path)
+def moe_apply_shard_map(p: Params, x: jnp.ndarray, cfg: ArchConfig,
+                        mesh, capacity_factor: float | None = None):
+    """Expert-parallel MoE with EXPLICIT all-to-alls (§Perf iteration A4).
+
+    shard_map over ("data","model"): each data shard dispatches its own
+    tokens locally (same semantics as grouped dispatch with G = data size),
+    then ONE all-to-all ships each model peer the slots of its local
+    experts, expert FFNs run fully local, and the reverse all-to-all brings
+    outputs home for a local combine. GSPMD's inferred all-gathers/
+    all-reduces on the return path are replaced by the minimal token
+    movement top-k routing actually requires.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    spec = cfg.moe
+    cf = capacity_factor or spec.capacity_factor
+    E, k = spec.n_experts_padded, spec.top_k
+    E_real = spec.n_experts
+    B, S, d = x.shape
+    M = mesh.shape["model"]
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    D = 1
+    for a in dp:
+        D *= mesh.shape[a]
+    assert E % M == 0, "padded experts must divide the model axis"
+    Em = E // M
+    T_loc = (B // D) * S
+    assert T_loc % M == 0, "row tokens must divide the model axis"
+    cap = max(4, -(-int(cf * (T_loc // M) * k / E) // 4) * 4)
+
+    def block(xb, router, wi_g, wi_u, wo):
+        # xb (B/D, S, d) is replicated across the model axis within a data
+        # row — each model peer handles ITS 1/M slice of the row's tokens
+        # (otherwise all M peers would duplicate the dispatch 16x).
+        Tl = xb.shape[0] * xb.shape[1]
+        Tm = Tl // M
+        m_idx = jax.lax.axis_index("model")
+        xt = jax.lax.dynamic_slice_in_dim(xb.reshape(Tl, d), m_idx * Tm, Tm)
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        me = jax.lax.pmean(probs.mean(axis=0), (*dp, "model"))
+        one_hot = jax.nn.one_hot(top_i, E_real, dtype=jnp.float32)
+        ce = jax.lax.pmean(one_hot.sum(axis=(0, 1)) / (Tm * k),
+                           (*dp, "model"))
+        aux = E_real * jnp.sum(me * ce) * spec.router_aux_coef
+
+        buf, dest, keep, src_tok, w_sorted = _dispatch_one_group(
+            xt, top_i, top_w, E, k, cap)              # (E, cap, d)
+        # ship each model peer its Em experts' slots (self-inverse a2a:
+        # split==concat axis keeps the VJP layout trivial)
+        buf = buf.reshape(M, Em, cap, d)
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=0)
+        recv = recv.transpose(1, 0, 2, 3).reshape(Em, M * cap, d)
+        g_ = jnp.einsum("ecd,edf->ecf", recv, wi_g)
+        u = jnp.einsum("ecd,edf->ecf", recv, wi_u)
+        h = jax.nn.silu(g_) * u
+        out = jnp.einsum("ecf,efd->ecd", h, wo)        # (Em, M*cap, d)
+        # reverse all-to-all: outputs go home to their source data shard
+        out = out.reshape(Em, M, cap, d).transpose(1, 0, 2, 3)
+        out = jax.lax.all_to_all(out, "model", split_axis=0, concat_axis=0)
+        out_flat = out.reshape(E * cap, d)
+        y_m = _combine_one_group(out_flat, dest, keep, src_tok, w_sorted,
+                                 Tm, d)               # (Tm, d)
+        # reassemble the row's tokens (activations are model-replicated
+        # outside the MoE block)
+        y = jax.lax.all_gather(y_m, "model", tiled=True)   # (Tl, d)
+        return y.reshape(xb.shape), aux
+
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    fn = jax.shard_map(
+        block, mesh=mesh,
+        in_specs=(P(dp_spec, None, None), P(), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(P(dp_spec, None, None), P()),
+        check_vma=False)
+    return fn(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])

@@ -1,0 +1,157 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Per-head WKV state is (B, H, P, P) with P = head_dim. Train/prefill runs a
+time scan (the Pallas kernel in ``repro.kernels.rwkv6_scan`` is the TPU fast
+path); decode is a single recurrence step.
+State cache per layer: (wkv (B,H,P,P) fp32, shift_tm (B,d), shift_cm (B,d)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RWKVSpec
+from repro.models.layers import Params, dense_init, rmsnorm, rmsnorm_init
+
+DECAY_LORA = 64
+
+
+def rwkv6_dims(cfg: ArchConfig):
+    spec = cfg.rwkv or RWKVSpec()
+    H = spec.n_heads(cfg.d_model)
+    return spec, H, spec.head_dim
+
+
+def rwkv6_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    spec, H, P = rwkv6_dims(cfg)
+    ks = jax.random.split(key, 10)
+    return {
+        # time-mix
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),     # base decay (log-log)
+        "w_lora_a": dense_init(ks[6], d, DECAY_LORA, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[7], (DECAY_LORA, d), jnp.float32)
+                     * 0.01),
+        "u": jnp.zeros((H, P), jnp.float32),         # bonus for current token
+        "ln_x": rmsnorm_init(d, dtype),
+        # channel-mix
+        "mu_cm": (jax.random.uniform(ks[8], (2, d), jnp.float32)).astype(dtype),
+        "ck": dense_init(ks[9], d, cfg.d_ff, dtype),
+        "cv": dense_init(jax.random.fold_in(key, 99), cfg.d_ff, d, dtype),
+        "cr": dense_init(jax.random.fold_in(key, 98), d, d, dtype),
+    }
+
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token shift: x_{t-1}; prev supplies the t=-1 row for decode chaining."""
+    first = jnp.zeros_like(x[:, :1]) if prev is None else prev[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _decay(p: Params, xw: jnp.ndarray) -> jnp.ndarray:
+    """Data-dependent per-channel decay w_t in (0,1). xw: (..., d)."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"]) @ p["w_lora_b"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora))
+
+
+def _time_mix_inputs(p: Params, x: jnp.ndarray, shifted: jnp.ndarray):
+    mu = p["mu"].astype(x.dtype)                                   # (5, d)
+    mix = [x + mu[i] * (shifted - x) for i in range(5)]
+    r = mix[0] @ p["wr"]
+    k = mix[1] @ p["wk"]
+    v = mix[2] @ p["wv"]
+    g = jax.nn.silu((mix[3] @ p["wg"]).astype(jnp.float32)).astype(x.dtype)
+    w = _decay(p, mix[4])
+    return r, k, v, g, w
+
+
+def wkv_scan(r, k, v, w, u, state0):
+    """Sequential WKV. r,k,v: (B,S,H,P); w: (B,S,H,P); u: (H,P).
+    Returns y (B,S,H,P) fp32 and final state (B,H,P,P).
+    state[b,h,i,j] accumulates k_i ⊗ v_j."""
+    def step(state, inp):
+        rt, kt, vt, wt = inp                                       # (B,H,P)
+        kv = kt[..., :, None] * vt[..., None, :]                   # (B,H,P,P)
+        y = jnp.einsum("bhi,bhij->bhj", rt, state + u[None, :, :, None] * kv)
+        state = wt[..., :, None] * state + kv
+        return state, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3).astype(jnp.float32)
+               for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rwkv6_time_mix(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                   state0=None, prev_shift=None, return_state=False):
+    B, S, d = x.shape
+    spec, H, P = rwkv6_dims(cfg)
+    shifted = _shift(x, prev_shift)
+    r, k, v, g, w = _time_mix_inputs(p, x, shifted)
+    rh = r.reshape(B, S, H, P)
+    kh = k.reshape(B, S, H, P)
+    vh = v.reshape(B, S, H, P)
+    wh = w.reshape(B, S, H, P)
+    if state0 is None:
+        state0 = jnp.zeros((B, H, P, P), jnp.float32)
+    y, state = wkv_scan(rh, kh, vh, wh, p["u"], state0)
+    y = y.reshape(B, S, d).astype(x.dtype)
+    y = rmsnorm(p["ln_x"], y, cfg.norm_eps) * g
+    out = y @ p["wo"]
+    if return_state:
+        return out, (state, x[:, -1])
+    return out, None
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray, prev_shift=None,
+                      return_state=False):
+    shifted = _shift(x, prev_shift)
+    mu = p["mu_cm"].astype(x.dtype)
+    xk = x + mu[0] * (shifted - x)
+    xr = x + mu[1] * (shifted - x)
+    k = jnp.square(jax.nn.relu((xk @ p["ck"]).astype(jnp.float32))).astype(x.dtype)
+    out = jax.nn.sigmoid((xr @ p["cr"]).astype(jnp.float32)).astype(x.dtype) \
+        * (k @ p["cv"])
+    if return_state:
+        return out, x[:, -1]
+    return out, None
+
+
+# ------------------------------------------------------------ block + state
+def rwkv6_block_init(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    k1 = jax.random.split(key, 1)[0]
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "tm": rwkv6_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+    }
+
+
+def rwkv6_block(p: Params, cfg: ArchConfig, x: jnp.ndarray,
+                state=None, return_state=False):
+    """state = (wkv (B,H,P,P), shift_tm (B,d), shift_cm (B,d)) or None."""
+    wkv0, sh_tm, sh_cm = state if state is not None else (None, None, None)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    tm, tm_state = rwkv6_time_mix(p["tm"], cfg, h, wkv0, sh_tm, return_state)
+    x = x + tm
+    h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    cm, cm_state = rwkv6_channel_mix(p["tm"], h2, sh_cm, return_state)
+    x = x + cm
+    if return_state:
+        wkv, tm_shift = tm_state
+        return x, (wkv, tm_shift, cm_state)
+    return x, None
+
+
+def rwkv6_init_state(cfg: ArchConfig, batch: int):
+    spec, H, P = rwkv6_dims(cfg)
+    d = cfg.d_model
+    return (jnp.zeros((batch, H, P, P), jnp.float32),
+            jnp.zeros((batch, d), jnp.bfloat16),
+            jnp.zeros((batch, d), jnp.bfloat16))

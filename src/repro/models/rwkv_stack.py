@@ -1,0 +1,72 @@
+"""RWKV6 full model: embedding + scan over rwkv6 blocks + LM head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.dense import chunked_loss, lm_head
+from repro.models.layers import (Params, dense_init, embed_init, rmsnorm,
+                                 rmsnorm_init, stack_init)
+from repro.models.rwkv6 import rwkv6_block, rwkv6_block_init, rwkv6_init_state
+
+Batch = dict
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ks[0], cfg.vocab, cfg.d_model, dtype),
+        "layers": stack_init(ks[1], cfg.n_layers,
+                             lambda k: rwkv6_block_init(k, cfg, dtype)),
+        "ln_f": rmsnorm_init(cfg.d_model, dtype),
+        "head": dense_init(ks[2], cfg.d_model, cfg.vocab, dtype),
+    }
+
+
+def _run(params, cfg, tokens, states=None, want_state=False, remat=False):
+    x = params["embed"][tokens]
+
+    def body(h, xs):
+        if states is None:
+            lp, st = xs, None
+        else:
+            lp, st = xs
+        h, new_st = rwkv6_block(lp, cfg, h, state=st, return_state=want_state)
+        return h, new_st
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = params["layers"] if states is None else (params["layers"], states)
+    x, new_states = jax.lax.scan(body, x, xs)
+    return rmsnorm(params["ln_f"], x, cfg.norm_eps), new_states
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch: Batch):
+    h, _ = _run(params, cfg, batch["tokens"], remat=True)
+    ce = chunked_loss(params, cfg, h, batch["labels"])
+    return ce, {"ce": ce}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, **_) -> Batch:
+    st = rwkv6_init_state(cfg, batch)
+    stacked = jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (cfg.n_layers,) + t.shape), st)
+    return {"state": stacked, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: Batch):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    states = init_cache(cfg, B)["state"]
+    h, new_states = _run(params, cfg, tokens, states, want_state=True)
+    logits = lm_head(params, cfg, h[:, -1])
+    return logits, {"state": new_states, "pos": jnp.full((B,), S, jnp.int32)}
+
+
+def decode_step(params: Params, cfg: ArchConfig, batch: Batch):
+    cache = batch["cache"]
+    token = batch["token"][:, None]                                # (B,1)
+    h, new_states = _run(params, cfg, token, cache["state"], want_state=True)
+    logits = lm_head(params, cfg, h[:, 0])
+    return logits, {"state": new_states, "pos": cache["pos"] + 1}

@@ -1,0 +1,3 @@
+from repro.serving.engine import EPDEngine, EngineConfig, ServeRequest
+
+__all__ = ["EPDEngine", "EngineConfig", "ServeRequest"]

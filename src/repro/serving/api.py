@@ -1,0 +1,121 @@
+"""Request frontend: OpenAI-style multimodal chat-completions schema.
+
+Paper App. E: "The API interface adheres to OpenAI's multimodal
+specifications, enabling users to specify parameters such as output length,
+temperature, and multimodal data inputs." This module validates/normalizes
+such payloads into ``ServeRequest``s for the engine (and ``Request``s for
+the simulator) — no HTTP server is started in this offline container, but
+the schema layer is the real one a deployment would mount behind a router.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.request import Request, SLO
+from repro.serving.engine import ServeRequest
+
+
+class APIError(ValueError):
+    pass
+
+
+@dataclass
+class CompletionParams:
+    max_tokens: int = 16
+    temperature: float = 0.0
+    top_p: float = 1.0
+
+    def validate(self) -> None:
+        if not (1 <= self.max_tokens <= 8192):
+            raise APIError(f"max_tokens out of range: {self.max_tokens}")
+        if not (0.0 <= self.temperature <= 2.0):
+            raise APIError(f"temperature out of range: {self.temperature}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise APIError(f"top_p out of range: {self.top_p}")
+
+
+_IDS = itertools.count(1)
+
+
+def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
+    """OpenAI-style payload -> ServeRequest.
+
+    Expected shape (subset of the OpenAI multimodal spec):
+      {"messages": [{"role": "user", "content": [
+          {"type": "text", "text": "..."} |
+          {"type": "image_embedding", "embedding": [[...], ...]} ]}],
+       "max_tokens": 16, "temperature": 0.0}
+    Image/audio payloads arrive as PRECOMPUTED embeddings (the modality
+    frontend is stubbed per DESIGN.md); a deployment would put the
+    patchifier in front of this layer.
+    """
+    if "messages" not in payload or not payload["messages"]:
+        raise APIError("missing messages")
+    params = CompletionParams(
+        max_tokens=int(payload.get("max_tokens", 16)),
+        temperature=float(payload.get("temperature", 0.0)),
+        top_p=float(payload.get("top_p", 1.0)))
+    params.validate()
+
+    text_parts: list[str] = []
+    embeds: list[np.ndarray] = []
+    for msg in payload["messages"]:
+        content = msg.get("content", [])
+        if isinstance(content, str):
+            content = [{"type": "text", "text": content}]
+        for part in content:
+            kind = part.get("type")
+            if kind == "text":
+                text_parts.append(part["text"])
+            elif kind in ("image_embedding", "audio_embedding"):
+                if cfg.modality is None:
+                    raise APIError(
+                        f"{cfg.name} is text-only; got {kind}")
+                arr = np.asarray(part["embedding"], np.float32)
+                if arr.ndim != 2 or arr.shape[1] != cfg.modality.enc_d_model:
+                    raise APIError(
+                        f"embedding must be (tokens, {cfg.modality.enc_d_model})"
+                        f", got {arr.shape}")
+                embeds.append(arr)
+            else:
+                raise APIError(f"unknown content type {kind!r}")
+
+    prompt = _toy_tokenize(" ".join(text_parts), cfg.vocab)
+    mm = np.concatenate(embeds, axis=0) if embeds else None
+    pos = (np.arange(1, mm.shape[0] + 1, dtype=np.int32)
+           if mm is not None else None)
+    total = len(prompt) + (mm.shape[0] if mm is not None else 0) \
+        + params.max_tokens
+    if total > cfg.max_context:
+        raise APIError(f"request needs {total} tokens; context limit is "
+                       f"{cfg.max_context} (OOCL)")
+    return ServeRequest(req_id=next(_IDS), prompt=prompt, mm_embeds=mm,
+                        mm_positions=pos, max_new_tokens=params.max_tokens)
+
+
+def _toy_tokenize(text: str, vocab: int) -> np.ndarray:
+    """Deterministic stand-in tokenizer (hash per whitespace word)."""
+    words = text.split() or ["<empty>"]
+    return np.asarray([hash(w) % max(vocab - 3, 1) + 2 for w in words],
+                      np.int32)
+
+
+def to_sim_request(cfg: ArchConfig, payload: dict, arrival: float,
+                   slo: Optional[SLO] = None) -> Request:
+    """Same payload -> simulator Request (for capacity planning)."""
+    sreq = parse_chat_request(cfg, payload)
+    m = cfg.modality
+    n_tokens = 0 if sreq.mm_embeds is None else sreq.mm_embeds.shape[0]
+    tpi = m.tokens_per_item if m else 1
+    return Request(
+        req_id=sreq.req_id, arrival=arrival,
+        prompt_len=len(sreq.prompt),
+        n_items=-(-n_tokens // tpi) if n_tokens else 0,
+        patches_per_item=1,
+        tokens_per_patch=tpi,
+        output_len=sreq.max_new_tokens, slo=slo)

@@ -1,0 +1,240 @@
+"""Real-execution EPD serving engine.
+
+Runs the actual E / P / D stage functions (jitted JAX) on live threads with
+queues between stages — the same architecture the simulator models, but
+executing real tensors. On a TPU cluster each stage thread drives its own
+submesh; on this CPU container it serves reduced-config models end-to-end
+(examples/epd_serve.py).
+
+Pipeline (paper §3.1):
+  E thread:  mm_embeds --encode--> mm tokens  (IRP: patch-shards in parallel)
+  EP queue:  ψ_EP — tokens handed to P (device-to-device put on real HW)
+  P thread:  prefill -> first token + KV cache
+  PD queue:  ψ_PD — cache handed to D
+  D thread:  continuous-batching decode until EOS/length
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+
+
+@dataclass
+class ServeRequest:
+    req_id: int
+    prompt: np.ndarray                       # (S,) int32
+    mm_embeds: Optional[np.ndarray] = None   # (M, d_frontend)
+    mm_positions: Optional[np.ndarray] = None
+    max_new_tokens: int = 16
+    # timestamps
+    t_submit: float = 0.0
+    t_encoded: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    tokens: list[int] = field(default_factory=list)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot(self) -> float:
+        n = len(self.tokens)
+        if n <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n - 1)
+
+
+@dataclass
+class EngineConfig:
+    n_encode_workers: int = 2          # IRP degree
+    max_new_tokens: int = 16
+    decode_batch: int = 8
+    cache_headroom: int = 64
+
+
+class EPDEngine:
+    """Threaded EPD pipeline over a real model."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.ecfg = engine
+
+        self._eq: queue.Queue = queue.Queue()    # encode jobs
+        self._pq: queue.Queue = queue.Queue()    # prefill jobs (post ψ_EP)
+        self._dq: queue.Queue = queue.Queue()    # decode jobs  (post ψ_PD)
+        self._done: dict[int, ServeRequest] = {}
+        self._done_lock = threading.Lock()
+        self._shards: dict[int, list] = {}
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+
+        # jitted stage fns
+        self._encode = jax.jit(self.model.encode) if self.model.encode else None
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(
+                p, batch=b, max_len=None))
+        self._decode = jax.jit(
+            lambda p, b: self.model.decode_step(p, batch=b))
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for i in range(max(1, self.ecfg.n_encode_workers)):
+            t = threading.Thread(target=self._encode_loop, daemon=True,
+                                 name=f"E{i}")
+            t.start()
+            self._threads.append(t)
+        for name, loop in (("P0", self._prefill_loop), ("D0", self._decode_loop)):
+            t = threading.Thread(target=loop, daemon=True, name=name)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    # -------------------------------------------------------------- submit
+    def submit(self, req: ServeRequest) -> None:
+        req.t_submit = time.perf_counter()
+        has_mm = (req.mm_embeds is not None and self._encode is not None
+                  and req.mm_embeds.shape[0] > 0)
+        if has_mm:
+            # Intra-Request Parallelism: shard the PATCH GROUPS across E
+            # workers. Boundaries align to tokens_per_item so each shard is
+            # a whole number of independently-encoded patches (lossless
+            # merge, paper §3.2.2).
+            M = req.mm_embeds.shape[0]
+            tpi = (self.cfg.modality.tokens_per_item
+                   if self.cfg.modality else M)
+            n_groups = -(-M // tpi)
+            n = max(1, min(self.ecfg.n_encode_workers, n_groups))
+            group_ids = np.array_split(np.arange(n_groups), n)
+            self._shards[req.req_id] = [None] * n
+            for sid, gids in enumerate(group_ids):
+                idx = np.concatenate([
+                    np.arange(g * tpi, min((g + 1) * tpi, M)) for g in gids])
+                self._eq.put((req, sid, n, idx))
+        else:
+            req.t_encoded = time.perf_counter()
+            self._pq.put((req, None))
+
+    def result(self, req_id: int, timeout: float = 300.0) -> ServeRequest:
+        t0 = time.time()
+        while time.time() - t0 < timeout:
+            with self._done_lock:
+                if req_id in self._done:
+                    return self._done.pop(req_id)
+            time.sleep(0.005)
+        raise TimeoutError(f"request {req_id}")
+
+    # --------------------------------------------------------------- loops
+    def _encode_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                req, sid, n, idx = self._eq.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            shard = jnp.asarray(req.mm_embeds[idx])[None]       # (1, m, d)
+            tokens = np.asarray(self._encode(self.params, shard)[0])
+            shards = self._shards[req.req_id]
+            shards[sid] = (idx, tokens)
+            if all(s is not None for s in shards):
+                # ψ_EP: align + merge shard tokens (paper §3.2.2)
+                M = req.mm_embeds.shape[0]
+                d = tokens.shape[-1]
+                merged = np.zeros((M, d), tokens.dtype)
+                for s_idx, s_tok in shards:
+                    merged[s_idx] = s_tok
+                del self._shards[req.req_id]
+                req.t_encoded = time.perf_counter()
+                self._pq.put((req, merged))
+
+    def _prefill_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                req, mm_tokens = self._pq.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = {"tokens": jnp.asarray(req.prompt)[None]}
+            if mm_tokens is not None:
+                # tokens already encoded at E; hand P the merged mm tokens
+                batch["mm_embeds"] = None
+            if self.cfg.family == "audio":
+                batch["enc_frames"] = jnp.asarray(req.mm_embeds)[None]
+            logits, cache = self._prefill_with_mm(batch, mm_tokens, req)
+            tok = int(np.argmax(np.asarray(logits[0])))
+            req.tokens.append(tok)
+            req.t_first_token = time.perf_counter()
+            # ψ_PD: cache moves to the decode stage
+            self._dq.put((req, tok, cache))
+
+    def _prefill_with_mm(self, batch, mm_tokens, req):
+        S = int(batch["tokens"].shape[1])
+        max_len = S + req.max_new_tokens + self.ecfg.cache_headroom
+        if mm_tokens is not None:
+            x_batch = dict(batch)
+            x_batch.pop("mm_embeds", None)
+            x_batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
+            x_batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
+            return _prefill_premerged(self.model, self.cfg, self.params,
+                                      x_batch, max_len)
+        batch = {k: v for k, v in batch.items() if v is not None}
+        return self.model.prefill(self.params, batch=batch, max_len=max_len)
+
+    def _decode_loop(self) -> None:
+        # continuous batching over independent (cache, token) pairs; a TPU
+        # deployment would batch these into one jitted call with paged caches
+        active: list[tuple[ServeRequest, int, Any]] = []
+        while not self._stop.is_set():
+            while len(active) < self.ecfg.decode_batch:
+                try:
+                    active.append(self._dq.get_nowait())
+                except queue.Empty:
+                    break
+            if not active:
+                time.sleep(0.005)
+                continue
+            nxt = []
+            for req, tok, cache in active:
+                if len(req.tokens) >= req.max_new_tokens:
+                    req.t_done = time.perf_counter()
+                    with self._done_lock:
+                        self._done[req.req_id] = req
+                    continue
+                logits, cache = self._decode(
+                    self.params,
+                    {"token": jnp.asarray([tok], jnp.int32), "cache": cache})
+                tok = int(np.argmax(np.asarray(logits[0])))
+                req.tokens.append(tok)
+                nxt.append((req, tok, cache))
+            active = nxt
+
+
+def _prefill_premerged(model, cfg: ArchConfig, params, batch, max_len):
+    """Prefill that takes ALREADY-ENCODED mm tokens (EPD path: E ran
+    elsewhere). Uses the dense-stack internals with the merged embeddings."""
+    from repro.models import dense
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = dense.embed_inputs(params, cfg, tokens, batch["mm_tokens"],
+                           batch["mm_positions"])
+    positions = jnp.arange(S)[None, :]
+    h, (ks, vs), _ = dense.forward(params, cfg, x, positions, return_kv=True)
+    logits = dense.lm_head(params, cfg, h[:, -1])
+    if max_len > S:
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache

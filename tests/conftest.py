@@ -1,0 +1,10 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
+# smoke tests and benches must see the 1 real device; only the dry-run
+# (repro.launch.dryrun, run as its own process) forces 512 host devices.
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

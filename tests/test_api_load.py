@@ -1,0 +1,115 @@
+"""API frontend schema + load estimator tests."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core.load_estimator import LoadEstimator
+from repro.core.request import Request
+from repro.serving.api import APIError, parse_chat_request, to_sim_request
+
+PIXTRAL = get_config("pixtral-12b")
+TEXT = get_config("internlm2-20b")
+
+
+def _img(cfg, tokens=4):
+    return {"type": "image_embedding",
+            "embedding": np.zeros((tokens, cfg.modality.enc_d_model)).tolist()}
+
+
+def test_parse_text_and_image():
+    req = parse_chat_request(PIXTRAL, {
+        "messages": [{"role": "user", "content": [
+            {"type": "text", "text": "describe this image"},
+            _img(PIXTRAL)]}],
+        "max_tokens": 8})
+    assert req.max_new_tokens == 8
+    assert req.prompt.shape == (3,)
+    assert req.mm_embeds.shape == (4, PIXTRAL.modality.enc_d_model)
+    assert list(req.mm_positions) == [1, 2, 3, 4]
+
+
+def test_plain_string_content():
+    req = parse_chat_request(TEXT, {"messages": [
+        {"role": "user", "content": "hello world"}]})
+    assert req.prompt.shape == (2,) and req.mm_embeds is None
+
+
+@pytest.mark.parametrize("payload,msg", [
+    ({}, "missing messages"),
+    ({"messages": [{"role": "u", "content": [{"type": "bogus"}]}]}, "unknown"),
+    ({"messages": [{"role": "u", "content": "x"}], "max_tokens": 0}, "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "temperature": 9}, "range"),
+])
+def test_rejects_bad_payloads(payload, msg):
+    with pytest.raises(APIError, match=msg):
+        parse_chat_request(TEXT, payload)
+
+
+def test_rejects_image_for_text_model():
+    with pytest.raises(APIError, match="text-only"):
+        parse_chat_request(TEXT, {"messages": [
+            {"role": "u", "content": [_img(PIXTRAL)]}]})
+
+
+def test_rejects_wrong_embedding_width():
+    bad = {"type": "image_embedding", "embedding": [[0.0] * 7]}
+    with pytest.raises(APIError, match="embedding must be"):
+        parse_chat_request(PIXTRAL, {"messages": [
+            {"role": "u", "content": [bad]}]})
+
+
+def test_context_limit_oocl():
+    mini = get_config("minicpm-v-2.6")  # ctx 32768
+    with pytest.raises(APIError, match="OOCL"):
+        parse_chat_request(mini, {
+            "messages": [{"role": "u", "content": [
+                {"type": "text", "text": "q"},
+                _img(mini, tokens=40_000)]}]})
+
+
+def test_to_sim_request():
+    r = to_sim_request(PIXTRAL, {"messages": [
+        {"role": "u", "content": [
+            {"type": "text", "text": "a b c"},
+            _img(PIXTRAL, tokens=2 * PIXTRAL.modality.tokens_per_item)]}],
+        "max_tokens": 4}, arrival=1.5)
+    assert isinstance(r, Request)
+    assert r.prompt_len == 3 and r.n_items == 2 and r.output_len == 4
+
+
+# -------------------------------------------------------- load estimator
+def _mk(i, t, items=2, out=10):
+    return Request(req_id=i, arrival=t, prompt_len=22, n_items=items,
+                   patches_per_item=10, tokens_per_patch=64, output_len=out)
+
+
+def test_estimator_demand_tracks_stage_mix():
+    cfg = get_config("minicpm-v-2.6")
+    est = LoadEstimator(cfg, A100_80G)
+    t = 0.0
+    for i in range(20):
+        est.observe(_mk(i, t), t)
+        t += 0.5                      # 2 req/s
+    d = est.stage_demand()
+    assert d["E"] > 0 and d["P"] > 0 and d["D"] > 0
+    assert d["E"] > d["P"]            # 4K-image workload is encode-heavy
+
+
+def test_estimator_allocation_sums_and_shifts():
+    cfg = get_config("minicpm-v-2.6")
+    est = LoadEstimator(cfg, A100_80G)
+    t = 0.0
+    for i in range(20):
+        est.observe(_mk(i, t, out=10), t)
+        t += 0.5
+    alloc_short = est.suggest_allocation(8)
+    assert sum(alloc_short.values()) == 8
+    assert alloc_short["E"] >= alloc_short["D"]
+    # workload shifts to long outputs -> decode demand grows (Table 6 story)
+    for i in range(60):
+        est.observe(_mk(100 + i, t, out=800), t)
+        t += 0.5
+    alloc_long = est.suggest_allocation(8)
+    assert sum(alloc_long.values()) == 8
+    assert alloc_long["D"] > alloc_short["D"]

@@ -1,0 +1,77 @@
+"""Block-manager unit + property tests (hypothesis).
+
+Invariants: used + free == capacity; a block has at most one owner; free()
+returns exactly what allocate()/append() handed out; OutOfBlocks precisely
+when demand exceeds free blocks.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.block_manager import (BlockManager, KVBlockManager,
+                                      MMBlockManager, OutOfBlocks)
+
+
+def test_allocate_free_roundtrip():
+    bm = MMBlockManager(n_blocks=10, block_size=16)
+    blocks = bm.allocate(1, 33)          # 3 blocks
+    assert len(blocks) == 3
+    assert bm.used_blocks == 3 and bm.free_blocks == 7
+    assert bm.free(1) == 3
+    assert bm.free_blocks == 10
+
+
+def test_out_of_blocks():
+    bm = KVBlockManager(n_blocks=2, block_size=16)
+    bm.allocate(1, 16)
+    with pytest.raises(OutOfBlocks):
+        bm.allocate(2, 17)
+    assert bm.can_allocate(16)
+
+
+def test_append_grows_only_when_crossing():
+    bm = KVBlockManager(n_blocks=8, block_size=16)
+    bm.allocate(1, 20)                   # 2 blocks cover 32 tokens
+    assert bm.append(1, 5, 20) == []     # 25 tokens still fit
+    assert len(bm.append(1, 10, 25)) == 1  # 35 tokens -> 3rd block
+    assert bm.used_blocks == 3
+
+
+def test_free_unknown_request_is_noop():
+    bm = MMBlockManager(4)
+    assert bm.free(99) == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(1, 64),
+                          st.booleans()), max_size=60))
+def test_invariants_under_random_ops(ops):
+    bm = BlockManager(n_blocks=16, block_size=4)
+    live: dict[int, int] = {}
+    for rid, tokens, do_free in ops:
+        if do_free:
+            got = bm.free(rid)
+            assert got == live.pop(rid, 0)
+        else:
+            need = bm.blocks_for(tokens)
+            if need <= bm.free_blocks:
+                blocks = bm.allocate(rid, tokens)
+                assert len(blocks) == need
+                assert len(set(blocks)) == need          # no dup handouts
+                live[rid] = live.get(rid, 0) + need
+            else:
+                with pytest.raises(OutOfBlocks):
+                    bm.allocate(rid, tokens)
+        # conservation
+        assert bm.used_blocks + bm.free_blocks == bm.n_blocks
+        assert bm.used_blocks == sum(live.values())
+        owned = [b for r in live for b in bm.owner_blocks(r)]
+        assert len(owned) == len(set(owned))             # single ownership
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 1000), st.integers(1, 64))
+def test_blocks_for_ceiling(tokens, bs):
+    bm = BlockManager(n_blocks=1, block_size=bs)
+    n = bm.blocks_for(tokens)
+    assert (n - 1) * bs < tokens <= n * bs

@@ -1,0 +1,47 @@
+"""Dry-run integration: lower+compile one (arch x shape) per mesh in a
+subprocess (the 512-device XLA flag must not leak into this process), and
+validate the recorded roofline JSONLs cover all 40 x 2 combinations."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import ASSIGNED, INPUT_SHAPES
+
+RUNS = os.path.join(os.path.dirname(__file__), "..", "runs")
+
+
+@pytest.mark.parametrize("flags", [[], ["--multi-pod"]])
+def test_dryrun_single_combo_compiles(flags):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "minitron-4b", "--shape", "decode_32k", *flags]
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900,
+                         cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["dominant"] in ("compute", "memory", "collective")
+    assert rec["flops_per_device"] > 0
+    assert rec["chips"] == (512 if flags else 256)
+
+
+@pytest.mark.parametrize("fname,mesh", [
+    ("dryrun_baseline.jsonl", "16x16"),
+    ("dryrun_multipod.jsonl", "2x16x16"),
+])
+def test_sweep_covers_all_40_combinations(fname, mesh):
+    path = os.path.join(RUNS, fname)
+    if not os.path.exists(path):
+        pytest.skip(f"{fname} not generated yet (run runs/sweep.sh)")
+    recs = [json.loads(l) for l in open(path) if l.strip()]
+    combos = {(r["arch"], r["shape"]) for r in recs}
+    want = {(a, s) for a in ASSIGNED for s in INPUT_SHAPES}
+    assert combos == want, f"missing: {want - combos}"
+    assert all(r["mesh"] == mesh for r in recs)
+    for r in recs:
+        assert r["flops_per_device"] > 0
+        assert r["roofline_s"][r["dominant"]] >= max(
+            r["roofline_s"].values()) - 1e-12

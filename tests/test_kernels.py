@@ -1,0 +1,161 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+from repro.kernels.mamba2_scan import mamba2_ssd, mamba2_ssd_ref
+from repro.kernels.rwkv6_scan import rwkv6_wkv, rwkv6_wkv_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("B,H,K,Sq,Sk,hd", [
+    (2, 4, 2, 128, 128, 64),
+    (1, 4, 4, 100, 100, 64),     # ragged, MHA
+    (2, 8, 2, 256, 256, 128),
+    (1, 2, 1, 64, 192, 64),      # cross-attn shape (Sq != Sk)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_prefill(B, H, K, Sq, Sk, hd, dtype, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal requires square")
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, Sq, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, K, Sk, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, K, Sk, hd), jnp.float32).astype(dtype)
+    out = flash_prefill(q, k, v, causal=causal, interpret=True)
+    ref = flash_prefill_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), **_tol(dtype))
+
+
+def test_flash_prefill_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    out = flash_prefill(q, k, v, causal=True, window=64, interpret=True)
+    ref = flash_prefill_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,H,K,W,hd", [
+    (2, 4, 2, 300, 64),
+    (1, 8, 8, 512, 128),
+    (3, 16, 2, 1000, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attn(B, H, K, W, hd, dtype):
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (B, W, K, hd), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (B, W, K, hd), jnp.float32).astype(dtype)
+    length = jax.random.randint(ks[3], (B,), 1, W + 1, jnp.int32)
+    out = decode_attn(q, kc, vc, length, interpret=True)
+    ref = decode_attn_ref(q, kc, vc, length)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 128, 4, 64, 64, 32),
+    (1, 96, 2, 64, 32, 32),
+    (2, 256, 8, 64, 64, 64),
+])
+def test_mamba2_ssd(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H), jnp.float32))
+    a = -dt * jnp.exp(jax.random.normal(ks[2], (H,), jnp.float32))[None, None] * 0.5
+    bm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    cm = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    y, st = mamba2_ssd(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, sr = mamba2_ssd_ref(x, dt, a, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(y, yr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(st, sr, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,S,H,P,chunk", [
+    (2, 128, 4, 64, 32),
+    (1, 96, 2, 64, 32),
+    (2, 64, 8, 64, 64),
+])
+def test_rwkv6_wkv(B, S, H, P, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, P), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, P), jnp.float32)
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, H, P), jnp.float32)))
+    u = jax.random.normal(ks[4], (H, P), jnp.float32) * 0.5
+    y, st = rwkv6_wkv(r, k, v, w, u, chunk=chunk, interpret=True)
+    yr, sr = rwkv6_wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, yr, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(st, sr, rtol=3e-3, atol=3e-3)
+
+
+def test_rwkv6_strong_decay_no_overflow():
+    """log-space chunking must survive decays that would overflow the naive
+    k*exp(-cum) factorization."""
+    B, S, H, P = 1, 64, 1, 64
+    ks = jax.random.split(KEY, 3)
+    r = jax.random.normal(ks[0], (B, S, H, P), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, P), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, P), jnp.float32)
+    w = jnp.full((B, S, H, P), 0.01, jnp.float32)    # 0.01^64 ~ 1e-128
+    u = jnp.zeros((H, P), jnp.float32)
+    y, st = rwkv6_wkv(r, k, v, w, u, chunk=64, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    yr, _ = rwkv6_wkv_ref(r, k, v, w, u)
+    np.testing.assert_allclose(y, yr, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,H,K,N,bs,mb,hd", [
+    (2, 4, 2, 16, 32, 4, 64),
+    (1, 8, 8, 32, 16, 8, 128),
+    (3, 16, 4, 24, 64, 3, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attn(B, H, K, N, bs, mb, hd, dtype):
+    from repro.kernels.paged_attn import paged_decode_attn, paged_decode_attn_ref
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32).astype(dtype)
+    kp = jax.random.normal(ks[1], (N, bs, K, hd), jnp.float32).astype(dtype)
+    vp = jax.random.normal(ks[2], (N, bs, K, hd), jnp.float32).astype(dtype)
+    tables = jax.random.permutation(ks[3], N)[:B * mb].reshape(B, mb)
+    lengths = jax.random.randint(ks[4], (B,), 1, mb * bs + 1, jnp.int32)
+    out = paged_decode_attn(q, kp, vp, tables, lengths, interpret=True)
+    ref = paged_decode_attn_ref(q, kp, vp, tables, lengths)
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), **_tol(dtype))
+
+
+def test_paged_matches_contiguous_decode():
+    """Block-table indirection must be transparent: paged attention over a
+    shuffled pool == contiguous decode attention."""
+    from repro.kernels.decode_attn import decode_attn_ref
+    from repro.kernels.paged_attn import paged_decode_attn
+    ks = jax.random.split(KEY, 4)
+    B, H, K, hd, bs, mb = 2, 4, 2, 64, 16, 4
+    kc = jax.random.normal(ks[0], (B, mb * bs, K, hd), jnp.float32)
+    vc = jax.random.normal(ks[1], (B, mb * bs, K, hd), jnp.float32)
+    q = jax.random.normal(ks[2], (B, H, hd), jnp.float32)
+    lengths = jnp.array([37, 64], jnp.int32)
+    # scatter the contiguous caches into a shuffled pool
+    N = B * mb
+    tables = jax.random.permutation(ks[3], N).reshape(B, mb)
+    kp = jnp.zeros((N, bs, K, hd)).at[tables.reshape(-1)].set(
+        kc.reshape(N, bs, K, hd))
+    vp = jnp.zeros((N, bs, K, hd)).at[tables.reshape(-1)].set(
+        vc.reshape(N, bs, K, hd))
+    out = paged_decode_attn(q, kp, vp, tables, lengths, interpret=True)
+    ref = decode_attn_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)

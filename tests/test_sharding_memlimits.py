@@ -1,0 +1,115 @@
+"""Sharding rules + memory-limit calculators + whisper EPD prefill path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core import memlimits as ml
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+class _FakePodMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def _pspec(path_keys, shape, mesh=None):
+    from repro.launch.sharding import param_pspec
+
+    class K:
+        def __init__(self, k):
+            self.key = k
+    return param_pspec([K(k) for k in path_keys], shape, mesh or _FakeMesh())
+
+
+def test_generic_two_d_rule():
+    assert _pspec(["layers", "mlp", "wi_gate"], (32, 4096, 14336)) \
+        == P(None, "data", "model")
+
+
+def test_indivisible_dims_replicate():
+    # vocab 49155 not divisible by 16 on either axis
+    assert _pspec(["embed"], (49155, 1536)) == P(None, "model")
+    assert _pspec(["head"], (1536, 49155)) == P("data", None)
+
+
+def test_moe_expert_parallel_only():
+    spec = _pspec(["layers", "moe", "wi_gate"], (48, 128, 2048, 768))
+    assert spec == P(None, "model", None, None)
+
+
+def test_moe_router_replicated():
+    assert _pspec(["layers", "moe", "router"], (48, 2048, 128)) == P(None, None, None)
+
+
+def test_pod_axis_joins_fsdp():
+    spec = _pspec(["layers", "attn", "wq"], (88, 12288, 12288), _FakePodMesh())
+    assert spec == P(None, ("pod", "data"), "model")
+
+
+def test_cache_pspec_kv_seq_sharded():
+    from repro.launch.sharding import cache_pspec
+
+    class K:
+        def __init__(self, k):
+            self.key = k
+    spec = cache_pspec([K("cache"), K("k")], (32, 128, 32768, 8, 128),
+                       _FakeMesh())
+    assert spec == P(None, "data", "model", None, None)
+    # batch=1 long context: seq sharded over everything available
+    spec1 = cache_pspec([K("cache"), K("k")], (32, 1, 524288, 8, 128),
+                        _FakeMesh())
+    assert spec1[2] is not None
+
+
+# ------------------------------------------------------------- memlimits
+def test_effective_patches_tile_budget():
+    ivl = get_config("internvl2-8b")
+    assert ml.effective_patches(ivl, (4032, 3024), 1) == 12   # budget 12
+    assert ml.effective_patches(ivl, (4032, 3024), 6) == 2
+    assert ml.effective_patches(ivl, (4032, 3024), 40) == 1
+    mini = get_config("minicpm-v-2.6")
+    assert ml.effective_patches(mini, (4032, 3024), 40) == 10  # no budget
+
+
+def test_max_images_monotone_in_memory():
+    cfg = get_config("minicpm-v-2.6")
+    e = ml.max_images_per_request(cfg, A100_80G, "E", (4032, 3024))
+    ep = ml.max_images_per_request(cfg, A100_80G, "EP", (4032, 3024))
+    assert isinstance(e, int) and isinstance(ep, int)
+    assert e > ep
+
+
+def test_kv_percent_oocl_on_context_blowout():
+    cfg = get_config("minicpm-v-2.6")   # ctx 32768; 80 img x 10 x 64 > ctx
+    assert ml.max_kv_percent(cfg, A100_80G, "P", images_per_req=80) == ml.OOCL
+
+
+# ------------------------------------------------- whisper EPD prefill path
+def test_whisper_prefill_accepts_precomputed_enc_out(rng_key):
+    cfg = get_config("whisper-large-v3").reduced()
+    from repro.models import build_model
+    model = build_model(cfg)
+    params = model.init(rng_key)
+    rng = np.random.default_rng(0)
+    frames = jnp.asarray(rng.standard_normal((1, 32, cfg.d_model)),
+                         jnp.bfloat16)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, 16)), jnp.int32)
+    # aggregated path
+    l1, _ = model.prefill(params, batch={"tokens": tokens,
+                                         "enc_frames": frames})
+    # EPD path: E ran elsewhere, ψ_EP shipped enc_out
+    enc_out = model.encode(params, frames)
+    l2, _ = model.prefill(params, batch={"tokens": tokens,
+                                         "enc_frames": frames,
+                                         "enc_out": enc_out})
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), rtol=1e-2,
+                               atol=1e-2)

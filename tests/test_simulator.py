@@ -1,0 +1,117 @@
+"""Discrete-event simulator behaviour: the paper's qualitative claims must
+hold as system invariants, plus hypothesis properties on timestamps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.core import A100_80G, SLO, simulate, summarize
+from repro.core.cluster import ClusterSpec
+from repro.data.workload import WorkloadSpec, poisson_requests
+
+CFG = get_config("minicpm-v-2.6")
+SLO_2IMG = SLO(ttft=1.40, tpot=0.04)
+
+
+def _work(rate=0.5, n=60, items=2, out_len=10, seed=0):
+    return poisson_requests(CFG, WorkloadSpec(
+        rate=rate, n_requests=n, n_items=items, output_len=out_len,
+        slo=SLO_2IMG, seed=seed))
+
+
+def test_all_requests_finish():
+    out = simulate(ClusterSpec("5E2P1D"), CFG, A100_80G, _work())
+    assert all(r.done() for r in out)
+
+
+def test_timestamps_monotone():
+    out = simulate(ClusterSpec("5E2P1D"), CFG, A100_80G, _work())
+    for r in out:
+        assert r.arrival <= r.enc_start <= r.enc_end
+        assert r.enc_end <= r.ep_transfer_end <= r.prefill_end
+        assert r.prefill_end <= r.pd_transfer_end <= r.finish
+
+
+def test_epd_beats_aggregated_ttft():
+    """Fig 5 / Table 4: EPD < DistServe = vLLM on TTFT for encode-heavy
+    multimodal workloads."""
+    reqs = _work(rate=0.5)
+    epd = summarize(simulate(ClusterSpec("5E2P1D", irp=True), CFG,
+                             A100_80G, reqs), SLO_2IMG)
+    dist = summarize(simulate(ClusterSpec("7EP1D", irp=False), CFG,
+                              A100_80G, reqs), SLO_2IMG)
+    vllm = summarize(simulate(ClusterSpec("8EPD", irp=False), CFG,
+                              A100_80G, reqs), SLO_2IMG)
+    assert epd.ttft_mean < dist.ttft_mean
+    assert epd.ttft_mean < vllm.ttft_mean
+    assert epd.slo_attainment >= dist.slo_attainment
+    assert epd.slo_attainment >= vllm.slo_attainment
+
+
+def test_irp_reduces_ttft():
+    """Table 4: ablating IRP hurts TTFT, worse with more images/request."""
+    for items in (2, 4, 8):
+        reqs = _work(rate=0.25, items=items)
+        with_irp = summarize(simulate(
+            ClusterSpec("5E2P1D", irp=True), CFG, A100_80G, reqs))
+        without = summarize(simulate(
+            ClusterSpec("5E2P1D", irp=False), CFG, A100_80G, reqs))
+        assert with_irp.ttft_mean < without.ttft_mean, f"items={items}"
+
+
+def test_interference_under_load():
+    """Fig 1: aggregated executors interfere — vLLM TPOT degrades as rate
+    grows while disaggregated decode stays flat."""
+    vllm = ClusterSpec("8EPD", irp=False, assign_policy="round_robin")
+    lo = summarize(simulate(vllm, CFG, A100_80G, _work(rate=0.05, out_len=50)))
+    hi = summarize(simulate(vllm, CFG, A100_80G, _work(rate=8.0, out_len=50)))
+    epd_hi = summarize(simulate(ClusterSpec("5E2P1D"), CFG, A100_80G,
+                                _work(rate=8.0, out_len=50)))
+    assert hi.tpot_mean > lo.tpot_mean * 1.5       # decode starved by E/P
+    assert epd_hi.tpot_mean < lo.tpot_mean * 1.1   # disaggregated D is flat
+
+
+def test_role_switching_improves_changing_workload():
+    """Table 6: a workload that shifts from short to long outputs benefits
+    from dynamic role switching (5E1P2D reconfigures toward decode)."""
+    short = poisson_requests(CFG, WorkloadSpec(
+        rate=3.0, n_requests=10, n_items=1, output_len=50, slo=SLO_2IMG))
+    long_ = poisson_requests(CFG, WorkloadSpec(
+        rate=3.0, n_requests=90, n_items=1, output_len=500, slo=SLO_2IMG,
+        seed=1))
+    for i, r in enumerate(long_):
+        r.req_id = 100 + i
+        r.arrival += short[-1].arrival
+    reqs = short + long_
+    # paper E.1: latency experiments run with small per-stage batches
+    static = summarize(simulate(
+        ClusterSpec("5E1P2D", role_switch=False, decode_batch=4),
+        CFG, A100_80G, reqs))
+    dynamic = summarize(simulate(
+        ClusterSpec("5E1P2D", role_switch=True, decode_batch=4),
+        CFG, A100_80G, reqs))
+    assert dynamic.latency_mean < static.latency_mean / 1.5
+    assert dynamic.tpot_mean < static.tpot_mean / 1.5
+
+
+def test_text_only_requests_skip_encode():
+    cfg = get_config("internlm2-20b")  # no modality
+    from repro.core.request import Request
+    reqs = [Request(req_id=i, arrival=i * 0.5, prompt_len=128, n_items=0,
+                    patches_per_item=0, tokens_per_patch=0, output_len=5,
+                    slo=SLO(5.0, 0.5)) for i in range(10)]
+    out = simulate(ClusterSpec("7P1D", irp=False), cfg, A100_80G, reqs)
+    assert all(r.done() for r in out)
+    assert all(r.enc_end == r.enc_start for r in out)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rate=st.floats(0.05, 2.0), items=st.integers(1, 6),
+       out_len=st.integers(1, 40), seed=st.integers(0, 5))
+def test_property_all_finish_any_workload(rate, items, out_len, seed):
+    reqs = _work(rate=rate, n=20, items=items, out_len=out_len, seed=seed)
+    out = simulate(ClusterSpec("5E2P1D"), CFG, A100_80G, reqs)
+    assert all(r.done() for r in out)
+    for r in out:
+        assert r.ttft > 0 and r.e2e_latency >= r.ttft

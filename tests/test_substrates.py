@@ -1,0 +1,183 @@
+"""Optimizer / checkpoint / data-pipeline / scheduler / costmodel units."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core import A100_80G, NPU_910B3, TPU_V5E
+from repro.core import costmodel as cm
+from repro.core.scheduler import (FCFS, SJF, Assigner, LEAST_LOADED,
+                                  ROUND_ROBIN, order_queue)
+from repro.data.pipeline import TokenPipeline
+from repro.optim import (AdamWConfig, adamw_init, adamw_update,
+                         clip_by_global_norm, cosine_lr)
+
+
+# ------------------------------------------------------------------- optim
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0]), "b": jnp.array(2.0)}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1,
+                      total_steps=200)
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    for _ in range(150):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    out_norm = jnp.sqrt(jnp.sum(jnp.square(clipped["a"])))
+    assert float(out_norm) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_lr(cfg, jnp.asarray(0))) < 0.2
+    assert float(cosine_lr(cfg, jnp.asarray(10))) == pytest.approx(1.0, abs=0.05)
+    assert float(cosine_lr(cfg, jnp.asarray(100))) < 0.01
+
+
+def test_adamw_bf16_params_fp32_moments():
+    params = {"w": jnp.ones((8,), jnp.bfloat16)}
+    state = adamw_init(params)
+    assert state["mu"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((8,), 0.5, jnp.bfloat16)}
+    new_p, new_s, _ = adamw_update(params, grads, state,
+                                   AdamWConfig(warmup_steps=1))
+    assert new_p["w"].dtype == jnp.bfloat16
+    assert int(new_s["step"]) == 1
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.float32)},
+            "step": jnp.asarray(3, jnp.int32)}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, step = restore_checkpoint(str(tmp_path), like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(5):
+        save_checkpoint(str(tmp_path), s, tree, keep=2)
+    kept = sorted(f for f in os.listdir(tmp_path) if f.endswith(".npz"))
+    assert len(kept) == 2 and kept[-1] == "ckpt_00000004.npz"
+
+
+# ------------------------------------------------------------------- data
+def test_pipeline_deterministic():
+    cfg = get_config("minitron-4b").reduced()
+    p1 = TokenPipeline(cfg, batch=4, seq_len=32, seed=1)
+    p2 = TokenPipeline(cfg, batch=4, seq_len=32, seed=1)
+    b1, b2 = p1.batch_at(3), p2.batch_at(3)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(4)["tokens"], b1["tokens"])
+
+
+def test_pipeline_host_sharding():
+    cfg = get_config("minitron-4b").reduced()
+    shard0 = TokenPipeline(cfg, batch=4, seq_len=16, shard_id=0, n_shards=2)
+    shard1 = TokenPipeline(cfg, batch=4, seq_len=16, shard_id=1, n_shards=2)
+    b0, b1 = shard0.batch_at(0), shard1.batch_at(0)
+    assert b0["tokens"].shape == (2, 16)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+
+
+def test_pipeline_vlm_payload():
+    cfg = get_config("pixtral-12b").reduced()
+    b = TokenPipeline(cfg, batch=2, seq_len=64).batch_at(0)
+    assert "mm_embeds" in b and "mm_positions" in b
+    assert b["mm_embeds"].shape[0] == 2
+    assert int(b["mm_positions"].max()) < 64
+
+
+# --------------------------------------------------------------- scheduler
+def test_round_robin_cycles():
+    class I:
+        accepting = True
+        def load(self):
+            return 0.0
+    a = Assigner(ROUND_ROBIN)
+    picks = [a.pick([I(), I(), I()]) for _ in range(6)]
+    assert sorted(set(picks)) == [0, 1, 2]
+
+
+def test_least_loaded_picks_min():
+    class I:
+        def __init__(self, l):
+            self._l = l
+            self.accepting = True
+        def load(self):
+            return self._l
+    insts = [I(5.0), I(1.0), I(3.0)]
+    assert Assigner(LEAST_LOADED).pick(insts) == 1
+
+
+def test_sjf_orders_by_estimate():
+    q = [3, 1, 2]
+    assert order_queue(q, SJF, est=lambda j: j) == [1, 2, 3]
+    assert order_queue(q, FCFS, est=lambda j: j) == [3, 1, 2]
+
+
+# --------------------------------------------------------------- costmodel
+def test_decode_is_bandwidth_bound_prefill_compute_bound():
+    cfg = get_config("internvl2-8b")
+    by = cm.weights_bytes(cfg, include_encoder=False)
+    t_dec = cm.decode_step_time(cfg, A100_80G, context=1024, batch=1)
+    assert t_dec >= by / (A100_80G.hbm_bw)  # at least the weight read
+    fl = cm.prefill_flops(cfg, 4096)
+    t_pre = cm.prefill_time(cfg, A100_80G, 4096)
+    assert t_pre >= fl / (A100_80G.peak_flops)
+
+
+def test_irp_speedup_near_linear():
+    cfg = get_config("minicpm-v-2.6")
+    t1 = cm.encode_time(cfg, A100_80G, n_patches=20, chips=1)
+    t5 = cm.encode_time(cfg, A100_80G, n_patches=20, chips=5)
+    assert 3.0 < t1 / t5 <= 5.1
+
+
+def test_npu_encode_heavier_than_gpu():
+    """App F.1: encode-to-prefill latency ratio higher on NPU."""
+    cfg = get_config("internvl2-8b")
+    r_gpu = cm.encode_time(cfg, A100_80G, 26) / cm.prefill_time(
+        cfg, A100_80G, 26 * 256 + 22)
+    r_npu = cm.encode_time(cfg, NPU_910B3, 26) / cm.prefill_time(
+        cfg, NPU_910B3, 26 * 256 + 22)
+    assert r_npu > r_gpu * 1.05
+
+
+def test_minicpm_fewer_prefill_tokens_than_internvl():
+    """§4.1: MiniCPM compresses image tokens; InternVL is prefill-heavy."""
+    mini, ivl = get_config("minicpm-v-2.6"), get_config("internvl2-8b")
+    assert mini.modality.tokens_per_item < ivl.modality.tokens_per_item
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_encode_time_monotone_in_patches(n_patches, chips):
+    cfg = get_config("minicpm-v-2.6")
+    t1 = cm.encode_time(cfg, TPU_V5E, n_patches, chips=chips)
+    t2 = cm.encode_time(cfg, TPU_V5E, n_patches + 1, chips=chips)
+    assert t2 >= t1

@@ -1,0 +1,107 @@
+"""End-to-end behaviour tests for the EPD system (paper headline claims).
+
+These assert the reproduction's qualitative results on the full pipeline:
+memory savings from disaggregation (§4.3), more images/request (Table 2),
+bigger batches (Table 3), larger KV caches (Table 8), and goodput dominance
+(Fig 5) — each as a system invariant rather than a point estimate.
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_80G, SLO, simulate, summarize
+from repro.core.cluster import ClusterSpec
+from repro.core.instance import Instance
+from repro.core import costmodel as cm
+from repro.data.workload import WorkloadSpec, poisson_requests
+
+MINICPM = get_config("minicpm-v-2.6")
+IVL8 = get_config("internvl2-8b")
+IVL26 = get_config("internvl2-26b")
+
+
+# ------------------------------------------------------------- §4.3 memory
+@pytest.mark.parametrize("cfg,min_saving", [
+    (MINICPM, 0.90), (IVL8, 0.90), (IVL26, 0.70)])
+def test_encode_worker_weight_savings(cfg, min_saving):
+    """E workers drop the LLM weights: ~95% / 96.2% / 78.3% smaller."""
+    full = cm.weights_bytes(cfg)
+    enc_only = cm.weights_bytes(cfg, include_llm=False)
+    assert 1 - enc_only / full >= min_saving
+
+
+def test_e_instance_has_no_kv_cache():
+    e = Instance("E", 1, MINICPM, A100_80G)
+    p = Instance("P", 1, MINICPM, A100_80G)
+    d = Instance("D", 1, MINICPM, A100_80G)
+    assert e.kv_cache is None and e.mm_cache is not None
+    assert p.kv_cache is not None and p.mm_cache is not None
+    assert d.kv_cache is not None and d.mm_cache is None
+
+
+def test_disaggregated_memory_headroom():
+    """§4.3: E workers hit ~15x lower peak memory utilization (weights +
+    KV-cache reservation vs encoder weights only)."""
+    agg = Instance("EP", 1, MINICPM, A100_80G, kv_frac=0.8)
+    enc = Instance("E", 1, MINICPM, A100_80G)
+    used_agg = agg.weights_bytes() + agg.kv_cache.n_blocks \
+        * agg.kv_cache.block_size * MINICPM.kv_bytes_per_token(cm.DTYPE_BYTES)
+    used_enc = enc.weights_bytes()
+    assert used_agg / used_enc > 10.0
+    assert enc.free_memory() > agg.free_memory()
+
+
+# --------------------------------------------------- Table 2/3-style limits
+def _max_images(cfg, role: str, kv_frac=0.8) -> int:
+    inst = Instance(role, 1, cfg, A100_80G, kv_frac=kv_frac)
+    free = inst.free_memory()
+    if inst.kv_cache is not None:
+        free -= inst.kv_cache.n_blocks * inst.kv_cache.block_size \
+            * cfg.kv_bytes_per_token(cm.DTYPE_BYTES)
+    per_patch = cm.encode_activation_bytes(cfg, 1) \
+        + cm.mm_token_bytes(cfg, cfg.modality.tokens_per_item)
+    patches = cfg.modality.patches_at_res[(4032, 3024)]
+    return max(0, int(free / (per_patch * patches)))
+
+
+@pytest.mark.parametrize("cfg", [MINICPM, IVL8, IVL26])
+def test_epd_supports_more_images_per_request(cfg):
+    assert _max_images(cfg, "E") > 2 * max(1, _max_images(cfg, "EP"))
+
+
+# ----------------------------------------------------------- Fig 5 goodput
+def test_epd_dominates_slo_attainment_curve():
+    slo = SLO(ttft=1.40, tpot=0.04)
+    for rate in (0.25, 0.5, 1.0):
+        reqs = poisson_requests(MINICPM, WorkloadSpec(
+            rate=rate, n_requests=50, n_items=2, output_len=10, slo=slo))
+        epd = summarize(simulate(ClusterSpec("5E2P1D"), MINICPM,
+                                 A100_80G, reqs), slo)
+        dist = summarize(simulate(ClusterSpec("7EP1D", irp=False), MINICPM,
+                                  A100_80G, reqs), slo)
+        assert epd.slo_attainment >= dist.slo_attainment
+
+
+def test_more_images_hurts_baselines_more():
+    """Fig 5 rows: going 2 -> 4 images degrades DistServe faster than EPD."""
+    slo = SLO(ttft=2.60, tpot=0.04)
+    out = {}
+    for items in (2, 4):
+        reqs = poisson_requests(MINICPM, WorkloadSpec(
+            rate=0.5, n_requests=50, n_items=items, output_len=10, slo=slo))
+        out[("epd", items)] = summarize(simulate(
+            ClusterSpec("5E2P1D"), MINICPM, A100_80G, reqs), slo).slo_attainment
+        out[("dist", items)] = summarize(simulate(
+            ClusterSpec("7EP1D", irp=False), MINICPM, A100_80G, reqs),
+            slo).slo_attainment
+    drop_epd = out[("epd", 2)] - out[("epd", 4)]
+    drop_dist = out[("dist", 2)] - out[("dist", 4)]
+    assert drop_dist >= drop_epd - 0.02
+
+
+# --------------------------------------------------------------- App A.2
+def test_p_worker_kv_budget_larger_without_encoder():
+    """Table 8: the P worker in EPD (no encoder weights/activations) can
+    dedicate more memory to KV cache than the aggregated EP worker."""
+    p = Instance("P", 1, IVL26, A100_80G, kv_frac=0.8)
+    ep = Instance("EP", 1, IVL26, A100_80G, kv_frac=0.8)
+    assert p.kv_cache.n_blocks > ep.kv_cache.n_blocks
