@@ -9,7 +9,8 @@ from repro.core import A100_80G, SLO
 from repro.core.cluster import ClusterSpec, simulate
 from repro.data.workload import WorkloadSpec, poisson_requests
 
-from benchmarks.common import DIST_SPEC, EPD_SPEC, Row, timed
+from benchmarks.common import (DIST_SPEC, EPD_SPEC, Row, engine_mode_stats,
+                               timed)
 
 RATES = {"minicpm-v-2.6": 0.25, "internvl2-8b": 0.08, "internvl2-26b": 0.08}
 PAPER_REDUCTION = {"minicpm-v-2.6": 0.719, "internvl2-8b": 0.328,
@@ -41,4 +42,19 @@ def run(quick: bool = False) -> list[Row]:
                 f"sec4.2/{model}/img{n_img}/ttft_reduction", 0.0,
                 round(float(red), 3),
                 {"paper_reduction_upto": PAPER_REDUCTION[model]}))
+    rows.extend(run_engine_ttft(quick))
+    return rows
+
+
+def run_engine_ttft(quick: bool = False) -> list[Row]:
+    """Real-execution engine TTFT + decode tokens/s per decode-stage mode
+    (paged-batched vs dense per-request), same reduced model + workload."""
+    stats = engine_mode_stats(quick)
+    rows = []
+    for mode in ("paged", "dense"):
+        s = stats[mode]
+        rows.append(Row(f"engine_ttft/{mode}", s["wall_s"] * 1e6,
+                        round(s["mean_ttft"], 4),
+                        {"decode_tok_s": round(s["decode_tok_s"], 1),
+                         "peak_cache_bytes": s["peak_cache_bytes"]}))
     return rows

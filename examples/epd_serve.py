@@ -23,6 +23,10 @@ def main():
     ap.add_argument("--irp", type=int, default=2)
     ap.add_argument("--rate", type=float, default=4.0)
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--mode", choices=("paged", "dense"), default="paged",
+                    help="decode stage: paged-batched shared pool (one "
+                         "jitted step per iteration) or the dense "
+                         "per-request baseline")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -30,9 +34,10 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
     engine = EPDEngine(cfg, params, EngineConfig(
         n_encode_workers=args.irp, max_new_tokens=args.new_tokens,
-        decode_batch=4))
+        decode_batch=4, mode=args.mode))
     engine.start()
-    print(f"EPD engine up: arch={cfg.name} E-workers(IRP)={args.irp}")
+    print(f"EPD engine up: arch={cfg.name} E-workers(IRP)={args.irp} "
+          f"decode={args.mode}")
 
     rng = np.random.default_rng(0)
     tpi = cfg.modality.tokens_per_item
@@ -57,9 +62,15 @@ def main():
         print(f"  req {out.req_id}: ttft={out.ttft*1e3:8.1f}ms "
               f"tpot={out.tpot*1e3:6.1f}ms tokens={out.tokens}")
     engine.stop()
+    s = engine.stats
+    tok_s = s["decode_tokens"] / max(s["decode_time"], 1e-9)
     print(f"mean ttft={np.mean(ttfts)*1e3:.1f}ms  "
           f"mean tpot={np.mean(tpots)*1e3:.1f}ms  "
           f"({args.requests} requests, {args.irp} IRP workers)")
+    print(f"decode[{args.mode}]: {tok_s:.1f} tok/s over "
+          f"{s['decode_steps']} batched steps, "
+          f"peak KV {s['peak_cache_bytes']/1024:.0f} KiB, "
+          f"{s['preemptions']} preemptions")
 
 
 if __name__ == "__main__":

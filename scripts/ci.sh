@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verify + benchmark smoke. Run from the repo root.
+#
+# NOTE: 5 seed-era tests are known-failing (dryrun x2, hlo_analysis x2,
+# moe_shard_map x1 — jax.shard_map API drift); the exit code goes red until
+# a PR fixes them, but the benchmark smoke still runs so every CI log has
+# the full picture.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -q
+tier1=$?
+
+echo "== smoke: offline throughput benchmark (quick) =="
+python benchmarks/offline_throughput.py --quick || exit 1
+
+echo "CI done (tier-1 exit: $tier1)"
+exit "$tier1"

@@ -29,8 +29,9 @@ class Assigner:
         if not alive:
             raise RuntimeError("no accepting instance in stage")
         if self.policy == ROUND_ROBIN:
+            idx = alive[self._rr % len(alive)]
             self._rr += 1
-            return alive[self._rr % len(alive)]
+            return idx
         return min(alive, key=lambda i: instances[i].load())
 
 

@@ -37,6 +37,10 @@ class Model:
     decode_step: Callable
     init_cache: Callable
     encode: Optional[Callable] = None
+    # paged serving (dense-family only): prefill writes KV straight into a
+    # shared block pool; decode is one batched step over block tables.
+    paged_decode_step: Optional[Callable] = None
+    init_kv_pool: Optional[Callable] = None
 
     @property
     def name(self) -> str:
@@ -58,6 +62,8 @@ def build_model(cfg: ArchConfig, *, block_causal_skip: bool = False) -> Model:
             encode=((lambda params, mm_embeds:
                      dense.encode_mm(params, cfg, mm_embeds))
                     if cfg.modality is not None else None),
+            paged_decode_step=partial(dense.paged_decode_step, cfg=cfg),
+            init_kv_pool=partial(dense.init_kv_pool, cfg),
         )
     if fam == "hybrid":
         return Model(

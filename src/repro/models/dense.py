@@ -173,6 +173,27 @@ def loss_fn(params: Params, cfg: ArchConfig, batch: Batch, *,
     return ce + aux, {"ce": ce, "aux": aux}
 
 
+def prefill_core(params: Params, cfg: ArchConfig, batch: Batch, *,
+                 window: int = 0, block_causal_skip: bool = False
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Shared prefill forward: embed (raw ``mm_embeds`` are encoded here,
+    pre-merged ``mm_tokens`` pass straight through), run the stack, return
+    (last_logits (B, V), ks, vs (L, B, S, K, hd)). Every prefill variant —
+    dense padded cache, EPD premerged, paged pool blocks — builds on this
+    so their attention semantics cannot diverge."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    mm_tokens = batch.get("mm_tokens")
+    if mm_tokens is None and cfg.modality is not None and "mm_embeds" in batch:
+        mm_tokens = encode_mm(params, cfg, batch["mm_embeds"])
+    x = embed_inputs(params, cfg, tokens, mm_tokens, batch.get("mm_positions"))
+    positions = jnp.arange(S)[None, :]
+    h, (ks, vs), _ = forward(params, cfg, x, positions, window=window,
+                             return_kv=True,
+                             block_causal_skip=block_causal_skip)
+    return lm_head(params, cfg, h[:, -1]), ks, vs
+
+
 def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
             window: int = 0, max_len: int | None = None,
             block_causal_skip: bool = False) -> tuple[jnp.ndarray, Batch]:
@@ -182,16 +203,9 @@ def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
     subsequent ``decode_step`` writes don't wrap over the prompt."""
     tokens = batch["tokens"]
     B, S = tokens.shape
-    mm_tokens = None
-    if cfg.modality is not None and "mm_embeds" in batch:
-        mm_tokens = encode_mm(params, cfg, batch["mm_embeds"])
-    x = embed_inputs(params, cfg, tokens, mm_tokens, batch.get("mm_positions"))
-    positions = jnp.arange(S)[None, :]
     eff_window = window or cfg.sliding_window
-    h, (ks, vs), _ = forward(params, cfg, x, positions, window=eff_window,
-                             return_kv=True,
-                             block_causal_skip=block_causal_skip)
-    logits = lm_head(params, cfg, h[:, -1])
+    logits, ks, vs = prefill_core(params, cfg, batch, window=eff_window,
+                                  block_causal_skip=block_causal_skip)
     if eff_window and eff_window < S:
         # keep only the last ``window`` positions, ring-aligned
         W = eff_window
@@ -214,6 +228,106 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, *,
     shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+# ------------------------------------------------------------ paged serving
+def init_kv_pool(cfg: ArchConfig, n_blocks: int, block_size: int, *,
+                 dtype=jnp.bfloat16) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Shared paged KV pool ``(L, n_blocks + 1, bs, K, hd)`` x2.
+
+    One extra physical block is appended at index ``n_blocks``: it is the
+    write target for inactive decode slots, so the batched step never needs
+    a data-dependent skip (the trash block is simply never read with a
+    meaningful length)."""
+    shape = (cfg.n_layers, n_blocks + 1, block_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def pool_write_prefill(k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                       ks: jnp.ndarray, vs: jnp.ndarray,
+                       block_ids: jnp.ndarray
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a prompt's KV (L, 1, S, K, hd) into its pool blocks.
+
+    Split from the forward pass so the serving engine only needs to hold
+    its pool lock for this cheap scatter, not the whole prefill."""
+    bs = k_pool.shape[2]
+    nb = block_ids.shape[0]
+    L, _, _, K, hd = k_pool.shape
+    pad = nb * bs - ks.shape[2]
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    ks = ks[:, 0].reshape(L, nb, bs, K, hd).astype(k_pool.dtype)
+    vs = vs[:, 0].reshape(L, nb, bs, K, hd).astype(v_pool.dtype)
+    return k_pool.at[:, block_ids].set(ks), v_pool.at[:, block_ids].set(vs)
+
+
+def paged_prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
+                  k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                  block_ids: jnp.ndarray
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Prefill one request (B=1) writing its KV straight into pool blocks.
+
+    ψ_PD becomes a block-table handoff: the decode stage only needs the
+    request's block ids + length, no padded dense cache is materialized or
+    copied. ``batch`` may carry pre-merged ``mm_tokens``/``mm_positions``
+    (EPD path: E ran elsewhere). ``block_ids``: (nb,) physical block ids
+    with nb * block_size >= S. Returns (last_logits, k_pool', v_pool')."""
+    if cfg.sliding_window:
+        raise NotImplementedError(
+            "paged serving has no ring-buffer layout for sliding-window "
+            "archs; serve them with the dense decode mode")
+    logits, ks, vs = prefill_core(params, cfg, batch)
+    k_pool, v_pool = pool_write_prefill(k_pool, v_pool, ks, vs, block_ids)
+    return logits, k_pool, v_pool
+
+
+def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
+                      force_ref: bool = False):
+    """One batched autoregressive step over the shared paged KV pool.
+
+    batch:
+      tokens        (B,)  int32   last emitted token per decode slot
+      positions     (B,)  int32   write position (== #cached tokens)
+      active        (B,)  bool    slot occupancy mask
+      block_tables  (B, max_blocks) int32 physical block ids (pad = trash)
+      k_pool/v_pool (L, N, bs, K, hd)
+
+    Inactive slots write into the reserved trash block (N-1) and attend a
+    single trash token; their logits are discarded by the caller. Returns
+    (logits (B, V), next_tokens (B,), k_pool', v_pool')."""
+    from repro.kernels.paged_attn import paged_decode_attention_op
+
+    tok, pos, active = batch["tokens"], batch["positions"], batch["active"]
+    tables = batch["block_tables"]
+    k_pool, v_pool = batch["k_pool"], batch["v_pool"]
+    N, bs = k_pool.shape[1], k_pool.shape[2]
+    B = tok.shape[0]
+    b_idx = jnp.arange(B)
+    phys = jnp.where(active, tables[b_idx, pos // bs], N - 1)      # (B,)
+    slot = jnp.where(active, pos % bs, 0)
+    lengths = jnp.where(active, pos + 1, 1)
+    x = params["embed"][tok][:, None, :]                           # (B,1,d)
+
+    def body(h, xs):
+        lp, kc, vc = xs                                    # (N, bs, K, hd)
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                              pos[:, None], cfg.rope_theta)
+        kc = kc.at[phys, slot].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[phys, slot].set(v[:, 0].astype(vc.dtype))
+        o = paged_decode_attention_op(q[:, 0], kc, vc, tables, lengths,
+                                      force_ref=force_ref)
+        h = h + out_project(lp["attn"], o[:, None])
+        f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = h + f
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = lm_head(params, cfg, h[:, 0])
+    return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), ks, vs
 
 
 def decode_step(params: Params, cfg: ArchConfig, batch: Batch

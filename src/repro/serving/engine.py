@@ -9,12 +9,20 @@ submesh; on this CPU container it serves reduced-config models end-to-end
 Pipeline (paper §3.1):
   E thread:  mm_embeds --encode--> mm tokens  (IRP: patch-shards in parallel)
   EP queue:  ψ_EP — tokens handed to P (device-to-device put on real HW)
-  P thread:  prefill -> first token + KV cache
-  PD queue:  ψ_PD — cache handed to D
-  D thread:  continuous-batching decode until EOS/length
+  P thread:  prefill -> first token + KV written into the shared paged pool
+  PD queue:  ψ_PD — a block-table handoff (paged) or cache copy (dense)
+  D thread:  batched decode over fixed slots until EOS/length
+
+Decode stage (paper's 22x-batches / 2.2x-KV headline): all active requests
+share one paged KV pool managed by ``KVBlockManager``; every iteration is a
+SINGLE jitted ``paged_decode_step`` over ``decode_batch`` fixed slots —
+inactive slots are padded (they write to a reserved trash block), so the
+call never recompiles as requests come and go. The seed's per-request dense
+loop is kept as ``mode="dense"`` for comparison benchmarks.
 """
 from __future__ import annotations
 
+import math
 import queue
 import threading
 import time
@@ -26,7 +34,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.block_manager import KVBlockManager, OutOfBlocks
 from repro.models import build_model
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclass
@@ -42,6 +53,7 @@ class ServeRequest:
     t_first_token: float = 0.0
     t_done: float = 0.0
     tokens: list[int] = field(default_factory=list)
+    n_preemptions: int = 0
 
     @property
     def ttft(self) -> float:
@@ -59,8 +71,13 @@ class ServeRequest:
 class EngineConfig:
     n_encode_workers: int = 2          # IRP degree
     max_new_tokens: int = 16
-    decode_batch: int = 8
-    cache_headroom: int = 64
+    decode_batch: int = 8              # fixed decode slots (paged mode)
+    cache_headroom: int = 64           # dense mode only
+    # paged decode stage
+    mode: str = "paged"                # "paged" | "dense"
+    kv_blocks: int = 256               # shared pool size (blocks)
+    kv_block_size: int = 16            # tokens per block
+    max_seq_len: int = 256             # block-table width cap per sequence
 
 
 class EPDEngine:
@@ -71,23 +88,69 @@ class EPDEngine:
         self.model = build_model(cfg)
         self.params = params
         self.ecfg = engine
+        self.paged = (engine.mode == "paged"
+                      and cfg.family in PAGED_FAMILIES
+                      and not cfg.sliding_window)
 
         self._eq: queue.Queue = queue.Queue()    # encode jobs
         self._pq: queue.Queue = queue.Queue()    # prefill jobs (post ψ_EP)
         self._dq: queue.Queue = queue.Queue()    # decode jobs  (post ψ_PD)
         self._done: dict[int, ServeRequest] = {}
-        self._done_lock = threading.Lock()
+        self._done_cv = threading.Condition()
         self._shards: dict[int, list] = {}
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self.stats: dict[str, Any] = {
+            "decode_tokens": 0, "decode_time": 0.0, "decode_steps": 0,
+            "peak_cache_bytes": 0, "preemptions": 0}
 
-        # jitted stage fns
+        # jitted stage fns (prefill variants retrace per (S, max_len) pair)
         self._encode = jax.jit(self.model.encode) if self.model.encode else None
         self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(
-                p, batch=b, max_len=None))
+            lambda p, b, ml: self.model.prefill(p, batch=b, max_len=ml),
+            static_argnums=(2,))
+        self._prefill_merged = jax.jit(
+            lambda p, b, ml: _prefill_premerged(self.model, self.cfg,
+                                                p, b, ml),
+            static_argnums=(2,))
         self._decode = jax.jit(
             lambda p, b: self.model.decode_step(p, batch=b))
+        self._live_cache_bytes = 0               # dense-mode KV accounting
+        self._stats_lock = threading.Lock()      # P and D both update peaks
+
+        if self.paged:
+            bs = engine.kv_block_size
+            self.kv_mgr = KVBlockManager(engine.kv_blocks, bs)
+            self._kv_lock = threading.Lock()     # guards kv_mgr
+            self._pool_lock = threading.Lock()   # guards the pool arrays
+            self._max_blocks = math.ceil(engine.max_seq_len / bs)
+            self._trash = engine.kv_blocks       # reserved block id N-1
+            self._k_pool, self._v_pool = self.model.init_kv_pool(
+                engine.kv_blocks, bs)
+            # bytes of one (k + v) block pair, for peak-memory accounting
+            self._block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
+                                     * cfg.head_dim
+                                     * self._k_pool.dtype.itemsize)
+            # Pallas kernel only off interpret-mode on TPU; elsewhere the
+            # jnp oracle keeps the batched step fast (same contract).
+            force_ref = jax.default_backend() != "tpu"
+            # donate the pool buffers so XLA updates them in place instead
+            # of copying the whole pool every step (CPU ignores donation
+            # and warns, so only donate on accelerators)
+            on_cpu = jax.default_backend() == "cpu"
+            self._paged_decode = jax.jit(
+                lambda p, b: self.model.paged_decode_step(
+                    p, batch=b, force_ref=force_ref),
+                donate_argnums=() if on_cpu else (1,))
+            # prefill split: the forward pass runs WITHOUT the pool lock
+            # (it doesn't read the pool); only the block scatter holds it,
+            # so prefill latency never stalls the batched decode loop
+            from repro.models import dense
+            self._prefill_core = jax.jit(
+                lambda p, b: dense.prefill_core(p, self.cfg, b))
+            self._pool_write = jax.jit(
+                dense.pool_write_prefill,
+                donate_argnums=() if on_cpu else (0, 1))
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -96,16 +159,35 @@ class EPDEngine:
                                  name=f"E{i}")
             t.start()
             self._threads.append(t)
-        for name, loop in (("P0", self._prefill_loop), ("D0", self._decode_loop)):
+        decode = self._decode_loop_paged if self.paged else self._decode_loop
+        for name, loop in (("P0", self._prefill_loop), ("D0", decode)):
             t = threading.Thread(target=loop, daemon=True, name=name)
             t.start()
             self._threads.append(t)
 
-    def stop(self) -> None:
+    def stop(self, timeout: float = 5.0) -> None:
+        """Signal all stage threads and join them (deterministic shutdown)."""
         self._stop.set()
+        deadline = time.time() + timeout
+        for t in self._threads:
+            t.join(max(0.0, deadline - time.time()))
+        self._threads = [t for t in self._threads if t.is_alive()]
 
     # -------------------------------------------------------------- submit
     def submit(self, req: ServeRequest) -> None:
+        if self.paged:
+            # prefill allocates S+1 (first decode write); lifetime peak is
+            # the larger of that and the full generated length
+            total = max(len(req.prompt) + req.max_new_tokens,
+                        len(req.prompt) + 1)
+            cap = min(self.ecfg.max_seq_len,
+                      self.ecfg.kv_blocks * self.ecfg.kv_block_size)
+            if total > cap:
+                raise ValueError(
+                    f"request {req.req_id}: {total} tokens exceeds "
+                    f"capacity {cap} (max_seq_len={self.ecfg.max_seq_len}, "
+                    f"pool={self.ecfg.kv_blocks}x"
+                    f"{self.ecfg.kv_block_size})")
         req.t_submit = time.perf_counter()
         has_mm = (req.mm_embeds is not None and self._encode is not None
                   and req.mm_embeds.shape[0] > 0)
@@ -130,13 +212,20 @@ class EPDEngine:
             self._pq.put((req, None))
 
     def result(self, req_id: int, timeout: float = 300.0) -> ServeRequest:
-        t0 = time.time()
-        while time.time() - t0 < timeout:
-            with self._done_lock:
-                if req_id in self._done:
-                    return self._done.pop(req_id)
-            time.sleep(0.005)
-        raise TimeoutError(f"request {req_id}")
+        deadline = time.time() + timeout
+        with self._done_cv:
+            while req_id not in self._done:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    raise TimeoutError(f"request {req_id}")
+                self._done_cv.wait(remaining)
+            return self._done.pop(req_id)
+
+    def _finish(self, req: ServeRequest) -> None:
+        req.t_done = time.perf_counter()
+        with self._done_cv:
+            self._done[req.req_id] = req
+            self._done_cv.notify_all()
 
     # --------------------------------------------------------------- loops
     def _encode_loop(self) -> None:
@@ -166,6 +255,15 @@ class EPDEngine:
                 req, mm_tokens = self._pq.get(timeout=0.05)
             except queue.Empty:
                 continue
+            if self.paged:
+                # head-of-line retry on a momentarily full pool: holding
+                # the request (instead of requeueing it behind later
+                # arrivals) keeps admission in FIFO order, so a long
+                # request cannot be starved by a stream of short ones
+                while (not self._prefill_paged(req, mm_tokens)
+                       and not self._stop.is_set()):
+                    time.sleep(0.01)
+                continue
             batch = {"tokens": jnp.asarray(req.prompt)[None]}
             if mm_tokens is not None:
                 # tokens already encoded at E; hand P the merged mm tokens
@@ -176,6 +274,12 @@ class EPDEngine:
             tok = int(np.argmax(np.asarray(logits[0])))
             req.tokens.append(tok)
             req.t_first_token = time.perf_counter()
+            # live-KV accounting: a dense cache exists from prefill to
+            # completion (it pads every request to S + max_new + headroom)
+            with self._stats_lock:
+                self._live_cache_bytes += _cache_nbytes(cache)
+                self.stats["peak_cache_bytes"] = max(
+                    self.stats["peak_cache_bytes"], self._live_cache_bytes)
             # ψ_PD: cache moves to the decode stage
             self._dq.put((req, tok, cache))
 
@@ -187,14 +291,46 @@ class EPDEngine:
             x_batch.pop("mm_embeds", None)
             x_batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
             x_batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
-            return _prefill_premerged(self.model, self.cfg, self.params,
-                                      x_batch, max_len)
+            return self._prefill_merged(self.params, x_batch, max_len)
         batch = {k: v for k, v in batch.items() if v is not None}
-        return self.model.prefill(self.params, batch=batch, max_len=max_len)
+        return self._prefill(self.params, batch, max_len)
 
+    # ------------------------------------------------------ paged prefill
+    def _prefill_paged(self, req: ServeRequest, mm_tokens) -> bool:
+        """Prefill straight into pool blocks. Returns False if the pool
+        cannot hold the prompt right now (caller requeues)."""
+        S = len(req.prompt)
+        with self._kv_lock:
+            # +1 headroom so the first decode write never needs append
+            if not self.kv_mgr.can_allocate(S + 1):
+                return False
+            blocks = self.kv_mgr.allocate(req.req_id, S + 1)
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if mm_tokens is not None:
+            batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
+            batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
+        with self._kv_lock, self._stats_lock:
+            self.stats["peak_cache_bytes"] = max(
+                self.stats["peak_cache_bytes"],
+                self.kv_mgr.used_blocks * self._block_bytes)
+        ids = jnp.asarray(blocks, jnp.int32)
+        logits, ks, vs = self._prefill_core(self.params, batch)
+        with self._pool_lock:
+            self._k_pool, self._v_pool = self._pool_write(
+                self._k_pool, self._v_pool, ks, vs, ids)
+        tok = int(np.argmax(np.asarray(logits[0])))
+        req.tokens.append(tok)
+        req.t_first_token = time.perf_counter()
+        # ψ_PD: block-table handoff — no cache copy. mm_tokens ride along
+        # so the decode stage can requeue the request on preemption.
+        self._dq.put((req, tok, S, mm_tokens))
+        return True
+
+    # ------------------------------------------------------- dense decode
     def _decode_loop(self) -> None:
-        # continuous batching over independent (cache, token) pairs; a TPU
-        # deployment would batch these into one jitted call with paged caches
+        # seed path: continuous batching over independent (cache, token)
+        # pairs, one jitted batch-1 call per request per iteration. Kept as
+        # the comparison baseline for the paged-batched decode stage.
         active: list[tuple[ServeRequest, int, Any]] = []
         while not self._stop.is_set():
             while len(active) < self.ecfg.decode_batch:
@@ -205,33 +341,148 @@ class EPDEngine:
             if not active:
                 time.sleep(0.005)
                 continue
+            t0 = time.perf_counter()
             nxt = []
+            stepped = 0
             for req, tok, cache in active:
                 if len(req.tokens) >= req.max_new_tokens:
-                    req.t_done = time.perf_counter()
-                    with self._done_lock:
-                        self._done[req.req_id] = req
+                    with self._stats_lock:
+                        self._live_cache_bytes -= _cache_nbytes(cache)
+                    self._finish(req)
                     continue
                 logits, cache = self._decode(
                     self.params,
                     {"token": jnp.asarray([tok], jnp.int32), "cache": cache})
                 tok = int(np.argmax(np.asarray(logits[0])))
                 req.tokens.append(tok)
+                stepped += 1
                 nxt.append((req, tok, cache))
+            if stepped:
+                self.stats["decode_time"] += time.perf_counter() - t0
+                self.stats["decode_tokens"] += stepped
+                self.stats["decode_steps"] += 1
             active = nxt
+
+    # ------------------------------------------------------- paged decode
+    def _decode_loop_paged(self) -> None:
+        """Fixed decode slots over the shared paged pool: admit from _dq
+        into free slots, grow allocations via KVBlockManager.append, ONE
+        jitted batched step per iteration regardless of the active count."""
+        n_slots = self.ecfg.decode_batch
+        slots: list[Optional[dict]] = [None] * n_slots
+        tokens = np.zeros((n_slots,), np.int32)
+        positions = np.zeros((n_slots,), np.int32)
+        tables = np.full((n_slots, self._max_blocks), self._trash, np.int32)
+
+        while not self._stop.is_set():
+            # admit new requests into free slots (ψ_PD handoff: block table
+            # row comes straight from the manager, no cache copy)
+            for i in range(n_slots):
+                if slots[i] is not None:
+                    continue
+                try:
+                    req, tok, n_cached, mm_tokens = self._dq.get_nowait()
+                except queue.Empty:
+                    break
+                with self._kv_lock:
+                    blocks = self.kv_mgr.owner_blocks(req.req_id)
+                slots[i] = {"req": req, "mm_tokens": mm_tokens}
+                tokens[i] = tok
+                positions[i] = n_cached
+                tables[i, :] = self._trash
+                tables[i, :len(blocks)] = blocks
+
+            # retire finished requests before stepping
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                req = s["req"]
+                if len(req.tokens) >= req.max_new_tokens:
+                    with self._kv_lock:
+                        self.kv_mgr.free(req.req_id)
+                    self._finish(req)
+                    slots[i] = None
+                    tables[i, :] = self._trash
+
+            active = np.array([s is not None for s in slots])
+            if not active.any():
+                time.sleep(0.002)
+                continue
+
+            # grow allocations for this step's write; preempt on pressure
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                req = s["req"]
+                with self._kv_lock:
+                    try:
+                        new = self.kv_mgr.append(req.req_id, 1,
+                                                 int(positions[i]))
+                    except OutOfBlocks:
+                        owned = len(self.kv_mgr.owner_blocks(req.req_id))
+                        if self.kv_mgr.used_blocks <= owned:
+                            raise   # pool cannot hold even one request
+                        self._preempt(i, slots, tables)
+                        active[i] = False
+                        continue
+                if new:
+                    have = int((tables[i] != self._trash).sum())
+                    tables[i, have:have + len(new)] = new
+
+            if not active.any():
+                continue
+            with self._kv_lock, self._stats_lock:
+                self.stats["peak_cache_bytes"] = max(
+                    self.stats["peak_cache_bytes"],
+                    self.kv_mgr.used_blocks * self._block_bytes)
+
+            # THE decode step: one jitted call for the whole slot batch
+            t0 = time.perf_counter()
+            batch = {"tokens": jnp.asarray(tokens),
+                     "positions": jnp.asarray(positions),
+                     "active": jnp.asarray(active),
+                     "block_tables": jnp.asarray(tables)}
+            with self._pool_lock:
+                batch["k_pool"], batch["v_pool"] = self._k_pool, self._v_pool
+                _, nxt_tok, self._k_pool, self._v_pool = self._paged_decode(
+                    self.params, batch)
+            nxt = np.asarray(nxt_tok)
+            self.stats["decode_time"] += time.perf_counter() - t0
+            self.stats["decode_tokens"] += int(active.sum())
+            self.stats["decode_steps"] += 1
+
+            for i, s in enumerate(slots):
+                if s is None or not active[i]:
+                    continue
+                s["req"].tokens.append(int(nxt[i]))
+                tokens[i] = nxt[i]
+                positions[i] += 1
+
+    def _preempt(self, i: int, slots: list, tables: np.ndarray) -> None:
+        """OutOfBlocks under decode pressure: free this slot's blocks and
+        requeue the request through P (greedy decode is deterministic, so
+        the re-run reproduces the same prefix)."""
+        s = slots[i]
+        req = s["req"]
+        self.kv_mgr.free(req.req_id)      # caller holds _kv_lock
+        req.tokens = []
+        req.n_preemptions += 1
+        self.stats["preemptions"] += 1
+        slots[i] = None
+        tables[i, :] = self._trash
+        self._pq.put((req, s["mm_tokens"]))
+
+
+def _cache_nbytes(cache) -> int:
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(cache)))
 
 
 def _prefill_premerged(model, cfg: ArchConfig, params, batch, max_len):
     """Prefill that takes ALREADY-ENCODED mm tokens (EPD path: E ran
-    elsewhere). Uses the dense-stack internals with the merged embeddings."""
+    elsewhere), materializing a padded dense cache."""
     from repro.models import dense
-    tokens = batch["tokens"]
-    B, S = tokens.shape
-    x = dense.embed_inputs(params, cfg, tokens, batch["mm_tokens"],
-                           batch["mm_positions"])
-    positions = jnp.arange(S)[None, :]
-    h, (ks, vs), _ = dense.forward(params, cfg, x, positions, return_kv=True)
-    logits = dense.lm_head(params, cfg, h[:, -1])
+    B, S = batch["tokens"].shape
+    logits, ks, vs = dense.prefill_core(params, cfg, batch)
     if max_len > S:
         pad = max_len - S
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))

@@ -5,8 +5,8 @@ returns exactly what allocate()/append() handed out; OutOfBlocks precisely
 when demand exceeds free blocks.
 """
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.block_manager import (BlockManager, KVBlockManager,
                                       MMBlockManager, OutOfBlocks)

@@ -2,8 +2,7 @@
 hold as system invariants, plus hypothesis properties on timestamps."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core import A100_80G, SLO, simulate, summarize

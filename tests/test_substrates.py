@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_config
@@ -121,6 +120,18 @@ def test_round_robin_cycles():
     a = Assigner(ROUND_ROBIN)
     picks = [a.pick([I(), I(), I()]) for _ in range(6)]
     assert sorted(set(picks)) == [0, 1, 2]
+
+
+def test_round_robin_starts_at_instance_zero():
+    """Regression: pre-incrementing the cursor made the first pick alive[1],
+    so instance 0 was systematically skipped at low request counts."""
+    class I:
+        accepting = True
+        def load(self):
+            return 0.0
+    a = Assigner(ROUND_ROBIN)
+    insts = [I(), I(), I()]
+    assert [a.pick(insts) for _ in range(4)] == [0, 1, 2, 0]
 
 
 def test_least_loaded_picks_min():
