@@ -24,12 +24,15 @@ def timed(fn: Callable, *args, **kw):
 
 
 _ENGINE_MODE_CACHE: dict = {}
+_ENGINE_MM_CACHE: dict = {}
 
 
 def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
     """Boot the REAL EPD engine twice on the same reduced model + workload —
     paged-batched decode vs the seed dense per-request loop — and measure
-    decode tokens/s and peak KV-cache bytes. Memoized so ttft and
+    decode tokens/s and peak KV-cache bytes. Requests go through the
+    OpenAI-shaped frontend (parse -> submit -> chat.completion response),
+    never poking request internals. Memoized so ttft and
     offline_throughput share one run per harness invocation."""
     key = (quick, arch)
     if key in _ENGINE_MODE_CACHE:
@@ -38,7 +41,8 @@ def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
     import numpy as np
     from repro.configs import get_config
     from repro.models import build_model
-    from repro.serving import EPDEngine, EngineConfig, ServeRequest
+    from repro.serving import EPDEngine, EngineConfig
+    from repro.serving.api import build_chat_response, parse_chat_request
 
     cfg = get_config(arch).reduced()
     params = build_model(cfg).init(jax.random.PRNGKey(0))
@@ -48,11 +52,10 @@ def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
     # pads every per-request cache to S + max_new + headroom
     max_new = 16
 
-    def make(i: int) -> ServeRequest:
-        rng = np.random.default_rng(100 + i)
-        return ServeRequest(
-            req_id=i, prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
-            max_new_tokens=max_new)
+    def payload(i: int) -> dict:
+        text = " ".join(f"req{i}tok{j}" for j in range(16))
+        return {"messages": [{"role": "user", "content": text}],
+                "max_tokens": max_new}
 
     out = {}
     for mode in ("paged", "dense"):
@@ -61,15 +64,14 @@ def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
             mode=mode, kv_blocks=128, max_seq_len=128))
         eng.start()
         # warm-up request: compile prefill/decode outside the measured window
-        eng.submit(make(0))
-        eng.result(0, timeout=600)
+        eng.submit(parse_chat_request(cfg, payload(0))).result(timeout=600)
         eng.stats.update(decode_tokens=0, decode_steps=0, decode_time=0.0,
                          peak_cache_bytes=0)
-        reqs = [make(i) for i in range(1, n_req + 1)]
         t0 = time.perf_counter()
-        for r in reqs:
-            eng.submit(r)
-        outs = [eng.result(r.req_id, timeout=600) for r in reqs]
+        handles = [eng.submit(parse_chat_request(cfg, payload(i)))
+                   for i in range(1, n_req + 1)]
+        resps = [build_chat_response(cfg, h.result(timeout=600))
+                 for h in handles]
         wall = time.perf_counter() - t0
         eng.stop()
         s = eng.stats
@@ -77,11 +79,66 @@ def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
             "decode_tok_s": s["decode_tokens"] / max(s["decode_time"], 1e-9),
             "decode_steps": s["decode_steps"],
             "peak_cache_bytes": s["peak_cache_bytes"],
-            "mean_ttft": float(np.mean([o.ttft for o in outs])),
+            "mean_ttft": float(np.mean([r["timings"]["ttft"]
+                                        for r in resps])),
             "wall_s": wall,
             "n_requests": n_req,
         }
     _ENGINE_MODE_CACHE[key] = out
+    return out
+
+
+def engine_mm_cache_stats(quick: bool = False,
+                          arch: str = "pixtral-12b") -> dict:
+    """ψ_EP multimedia-token cache (paper §3.2.1): TTFT of a first-seen
+    multimodal payload vs a byte-identical repeat. On the repeat the
+    engine serves the merged mm tokens from the content-hash-keyed cache
+    and the E stage runs zero shards, so TTFT drops to queue + prefill."""
+    key = (quick, arch)
+    if key in _ENGINE_MM_CACHE:
+        return _ENGINE_MM_CACHE[key]
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EPDEngine, EngineConfig
+    from repro.serving.api import chat_completion
+
+    cfg = get_config(arch).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    m = cfg.modality
+    n_groups = 2 if quick else 4                 # image patch groups
+    text = " ".join(f"w{j}" for j in range(n_groups * m.tokens_per_item + 8))
+
+    def payload(image_seed: int) -> dict:
+        rng = np.random.default_rng(image_seed)
+        emb = (rng.standard_normal((n_groups * m.tokens_per_item,
+                                    m.enc_d_model))
+               .astype(np.float32) * 0.1)
+        return {"messages": [{"role": "user", "content": [
+                    {"type": "text", "text": text},
+                    {"type": "image_embedding", "embedding": emb.tolist()}]}],
+                "max_tokens": 4}
+
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=4, kv_blocks=128, max_seq_len=256))
+    eng.start()
+    # warm-up on a DIFFERENT image: compiles E/P/D outside the window
+    chat_completion(eng, payload(0), timeout=600)
+    first = chat_completion(eng, payload(1), timeout=600)
+    shards_first_seen = eng.encode_stage.shards_run
+    repeat = chat_completion(eng, payload(1), timeout=600)
+    eng.stop()
+    out = {
+        "ttft_first": first["timings"]["ttft"],
+        "ttft_repeat": repeat["timings"]["ttft"],
+        "repeat_hit": repeat["timings"]["mm_cache_hit"],
+        "cache_hits": eng.mm_cache.hits,
+        "cache_misses": eng.mm_cache.misses,
+        "encode_shards_after_repeat": eng.encode_stage.shards_run,
+        "encode_shards_first_seen": shards_first_seen,
+    }
+    _ENGINE_MM_CACHE[key] = out
     return out
 
 

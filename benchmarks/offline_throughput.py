@@ -22,7 +22,8 @@ from repro.core import A100_80G
 from repro.core.cluster import ClusterSpec, simulate
 from repro.data.workload import WorkloadSpec, poisson_requests
 
-from benchmarks.common import Row, engine_mode_stats, timed
+from benchmarks.common import (Row, engine_mm_cache_stats, engine_mode_stats,
+                               timed)
 
 CFG = get_config("minicpm-v-2.6")
 
@@ -92,6 +93,12 @@ def run_engine_modes(quick: bool = False) -> list[Row]:
     rows.append(Row("engine/dense_over_paged_cache_bytes", 0.0,
                     round(stats["dense"]["peak_cache_bytes"]
                           / max(stats["paged"]["peak_cache_bytes"], 1), 2)))
+    mm = engine_mm_cache_stats(quick)
+    rows.append(Row("engine/mm_cache_hit_ttft_speedup", 0.0,
+                    round(mm["ttft_first"] / max(mm["ttft_repeat"], 1e-9), 2),
+                    {"first_seen_ttft": round(mm["ttft_first"], 4),
+                     "repeat_ttft": round(mm["ttft_repeat"], 4),
+                     "mm_cache_hit": mm["repeat_hit"]}))
     return rows
 
 

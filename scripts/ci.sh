@@ -17,5 +17,11 @@ tier1=$?
 echo "== smoke: offline throughput benchmark (quick) =="
 python benchmarks/offline_throughput.py --quick || exit 1
 
+echo "== smoke: EPD serve example (streaming + mm-token cache) =="
+python examples/epd_serve.py --requests 4 --new-tokens 4 || exit 1
+
+echo "== smoke: engine TTFT + mm-cache-hit benchmark (quick) =="
+python benchmarks/ttft.py --quick --engine-only || exit 1
+
 echo "CI done (tier-1 exit: $tier1)"
 exit "$tier1"

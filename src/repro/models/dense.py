@@ -330,6 +330,37 @@ def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
     return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), ks, vs
 
 
+# ------------------------------------------------------------ sampling head
+def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
+                  top_p: jnp.ndarray, seeds: jnp.ndarray,
+                  sample_pos: jnp.ndarray) -> jnp.ndarray:
+    """Per-slot sampled decode head: greedy where ``temperature == 0``
+    (bit-identical to argmax), nucleus (top-p) sampling elsewhere.
+
+    logits (B, V); temperature/top_p (B,) f32; seeds (B,) uint32 is the
+    per-request PRNG seed; sample_pos (B,) int32 is the number of tokens
+    generated so far. The key is ``fold_in(PRNGKey(seed), sample_pos)``,
+    a pure function of (seed, token index) — so a preempted request
+    deterministically replays its already-streamed prefix."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def nucleus(l, t, p, seed, pos):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), pos)
+        scaled = l / jnp.maximum(t, 1e-6)
+        order = jnp.argsort(-scaled)
+        probs = jax.nn.softmax(scaled[order])
+        cum = jnp.cumsum(probs)
+        # minimal prefix whose mass reaches top_p (top-1 always kept)
+        keep = (cum - probs) < p
+        masked = jnp.where(keep, scaled[order], -jnp.inf)
+        return order[jax.random.categorical(key, masked)].astype(jnp.int32)
+
+    sampled = jax.vmap(nucleus)(logits, temperature, top_p, seeds,
+                                sample_pos)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
 def decode_step(params: Params, cfg: ArchConfig, batch: Batch
                 ) -> tuple[jnp.ndarray, Batch]:
     """One autoregressive step. batch: {"token": (B,), "cache": {...}}."""

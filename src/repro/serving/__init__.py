@@ -1,3 +1,8 @@
-from repro.serving.engine import EPDEngine, EngineConfig, ServeRequest
+from repro.serving.engine import EPDEngine
+from repro.serving.transfer import MMTokenCache, PsiEP, PsiPD
+from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
+                                 RequestState, SamplingParams, ServeRequest)
 
-__all__ = ["EPDEngine", "EngineConfig", "ServeRequest"]
+__all__ = ["EPDEngine", "EngineConfig", "ServeRequest", "SamplingParams",
+           "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
+           "PsiEP", "PsiPD"]

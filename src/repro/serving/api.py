@@ -6,22 +6,27 @@ temperature, and multimodal data inputs." This module validates/normalizes
 such payloads into ``ServeRequest``s for the engine (and ``Request``s for
 the simulator) — no HTTP server is started in this offline container, but
 the schema layer is the real one a deployment would mount behind a router.
+
+``chat_completion(engine, payload)`` is the full round trip: parse →
+submit → wait → an OpenAI-shaped response dict with ``choices``/``usage``
+plus a ``timings`` block (ttft, tpot, n_preemptions, mm_cache_hit) so
+benchmarks and examples never poke ``ServeRequest`` internals.
 """
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field
+import zlib
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.request import Request, SLO
-from repro.serving.engine import ServeRequest
+from repro.serving.types import APIError, SamplingParams, ServeRequest
 
-
-class APIError(ValueError):
-    pass
+__all__ = ["APIError", "CompletionParams", "parse_chat_request",
+           "chat_completion", "build_chat_response", "to_sim_request"]
 
 
 @dataclass
@@ -29,14 +34,13 @@ class CompletionParams:
     max_tokens: int = 16
     temperature: float = 0.0
     top_p: float = 1.0
+    seed: int = 0
 
     def validate(self) -> None:
         if not (1 <= self.max_tokens <= 8192):
             raise APIError(f"max_tokens out of range: {self.max_tokens}")
-        if not (0.0 <= self.temperature <= 2.0):
-            raise APIError(f"temperature out of range: {self.temperature}")
-        if not (0.0 < self.top_p <= 1.0):
-            raise APIError(f"top_p out of range: {self.top_p}")
+        SamplingParams(temperature=self.temperature, top_p=self.top_p,
+                       seed=self.seed).validate()
 
 
 _IDS = itertools.count(1)
@@ -49,17 +53,20 @@ def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
       {"messages": [{"role": "user", "content": [
           {"type": "text", "text": "..."} |
           {"type": "image_embedding", "embedding": [[...], ...]} ]}],
-       "max_tokens": 16, "temperature": 0.0}
+       "max_tokens": 16, "temperature": 0.0, "top_p": 1.0, "seed": 0}
     Image/audio payloads arrive as PRECOMPUTED embeddings (the modality
     frontend is stubbed per DESIGN.md); a deployment would put the
-    patchifier in front of this layer.
+    patchifier in front of this layer. ``temperature``/``top_p``/``seed``
+    are carried on the request and honored by the decode stage
+    (temperature 0 = exact greedy).
     """
     if "messages" not in payload or not payload["messages"]:
         raise APIError("missing messages")
     params = CompletionParams(
         max_tokens=int(payload.get("max_tokens", 16)),
         temperature=float(payload.get("temperature", 0.0)),
-        top_p=float(payload.get("top_p", 1.0)))
+        top_p=float(payload.get("top_p", 1.0)),
+        seed=int(payload.get("seed", 0)))
     params.validate()
 
     text_parts: list[str] = []
@@ -94,15 +101,70 @@ def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
     if total > cfg.max_context:
         raise APIError(f"request needs {total} tokens; context limit is "
                        f"{cfg.max_context} (OOCL)")
-    return ServeRequest(req_id=next(_IDS), prompt=prompt, mm_embeds=mm,
-                        mm_positions=pos, max_new_tokens=params.max_tokens)
+    return ServeRequest(
+        req_id=next(_IDS), prompt=prompt, mm_embeds=mm, mm_positions=pos,
+        max_new_tokens=params.max_tokens,
+        sampling=SamplingParams(temperature=params.temperature,
+                                top_p=params.top_p, seed=params.seed))
 
 
 def _toy_tokenize(text: str, vocab: int) -> np.ndarray:
-    """Deterministic stand-in tokenizer (hash per whitespace word)."""
+    """Deterministic stand-in tokenizer (crc32 per whitespace word).
+
+    crc32 is seedless and stable across processes — Python's ``hash()``
+    is salted per interpreter, so the same payload would tokenize
+    differently across runs."""
     words = text.split() or ["<empty>"]
-    return np.asarray([hash(w) % max(vocab - 3, 1) + 2 for w in words],
-                      np.int32)
+    return np.asarray(
+        [zlib.crc32(w.encode("utf-8")) % max(vocab - 3, 1) + 2
+         for w in words], np.int32)
+
+
+# ------------------------------------------------------------- responses
+def build_chat_response(cfg: ArchConfig, req: ServeRequest) -> dict:
+    """OpenAI-shaped chat.completion response for a finished request.
+
+    The toy tokenizer has no detokenizer, so ``content`` renders the raw
+    token ids; ``token_ids`` carries them structurally. ``timings`` adds
+    the serving metrics the paper reports (TTFT/TPOT) plus the EPD
+    bookkeeping callers previously dug out of engine internals."""
+    n_mm = 0 if req.mm_embeds is None else int(req.mm_embeds.shape[0])
+    n_out = len(req.tokens)
+    n_prompt = len(req.prompt) + n_mm
+    return {
+        "id": f"chatcmpl-{req.req_id}",
+        "object": "chat.completion",
+        "model": cfg.name,
+        "choices": [{
+            "index": 0,
+            "message": {"role": "assistant",
+                        "content": " ".join(str(t) for t in req.tokens)},
+            "token_ids": list(req.tokens),
+            "finish_reason": (req.finish_reason.value
+                              if req.finish_reason else None),
+        }],
+        "usage": {"prompt_tokens": n_prompt,
+                  "completion_tokens": n_out,
+                  "total_tokens": n_prompt + n_out},
+        "timings": {"ttft": req.ttft,
+                    "tpot": req.tpot,
+                    "n_preemptions": req.n_preemptions,
+                    "mm_cache_hit": req.mm_cache_hit},
+    }
+
+
+def chat_completion(engine, payload: dict, timeout: float = 600.0) -> dict:
+    """Blocking round trip: payload -> engine -> chat.completion dict.
+
+    Raises RuntimeError if the request FAILED server-side (a deployment
+    would map this to a 5xx), so callers never see a response with
+    nonsense timings."""
+    req = parse_chat_request(engine.cfg, payload)
+    handle = engine.submit(req)
+    out = handle.result(timeout=timeout)
+    if out.error is not None:
+        raise RuntimeError(f"request {out.req_id} failed: {out.error}")
+    return build_chat_response(engine.cfg, req)
 
 
 def to_sim_request(cfg: ArchConfig, payload: dict, arrival: float,

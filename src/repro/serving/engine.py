@@ -1,87 +1,47 @@
-"""Real-execution EPD serving engine.
+"""EPD serving engine: a thin orchestrator over the typed stage graph.
 
-Runs the actual E / P / D stage functions (jitted JAX) on live threads with
-queues between stages — the same architecture the simulator models, but
-executing real tensors. On a TPU cluster each stage thread drives its own
-submesh; on this CPU container it serves reduced-config models end-to-end
-(examples/epd_serve.py).
+Stage logic lives in ``serving.stages`` (each stage owns its jitted fns),
+ψ transfer semantics in ``serving.transfer`` (ψ_EP with the
+multimedia-token cache, ψ_PD block-table handoff), and request lifecycle
+types in ``serving.types``. This module only wires them together:
 
-Pipeline (paper §3.1):
-  E thread:  mm_embeds --encode--> mm tokens  (IRP: patch-shards in parallel)
-  EP queue:  ψ_EP — tokens handed to P (device-to-device put on real HW)
-  P thread:  prefill -> first token + KV written into the shared paged pool
-  PD queue:  ψ_PD — a block-table handoff (paged) or cache copy (dense)
-  D thread:  batched decode over fixed slots until EOS/length
+  E workers --ψ_EP(MMTokenCache)--> P thread --ψ_PD--> D thread
 
-Decode stage (paper's 22x-batches / 2.2x-KV headline): all active requests
-share one paged KV pool managed by ``KVBlockManager``; every iteration is a
-SINGLE jitted ``paged_decode_step`` over ``decode_batch`` fixed slots —
-inactive slots are padded (they write to a reserved trash block), so the
-call never recompiles as requests come and go. The seed's per-request dense
-loop is kept as ``mode="dense"`` for comparison benchmarks.
+``submit()`` returns a ``RequestHandle``; results arrive via blocking
+``result()`` or the incremental ``stream()`` token iterator. A repeated
+multimodal payload hits the ψ_EP cache at submit and skips the E stage
+entirely (paper §3.2.1); preempted requests requeue through P and replay
+deterministically (greedy, or seeded sampling keyed on token index).
+
+``ServeRequest`` / ``EngineConfig`` are re-exported here as compat shims
+for pre-stage-graph callers.
 """
 from __future__ import annotations
 
-import math
 import queue
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.block_manager import KVBlockManager, OutOfBlocks
 from repro.models import build_model
+from repro.serving.stages import (PAGED_FAMILIES, DenseDecodeStage,
+                                  DensePrefillStage, EncodeStage,
+                                  PagedDecodeStage, PagedKVState,
+                                  PagedPrefillStage, ServeStats)
+from repro.serving.transfer import MMTokenCache, PsiEP, PsiPD
+from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
+                                 RequestState, SamplingParams, ServeRequest)
 
-PAGED_FAMILIES = ("dense", "moe", "vlm")
-
-
-@dataclass
-class ServeRequest:
-    req_id: int
-    prompt: np.ndarray                       # (S,) int32
-    mm_embeds: Optional[np.ndarray] = None   # (M, d_frontend)
-    mm_positions: Optional[np.ndarray] = None
-    max_new_tokens: int = 16
-    # timestamps
-    t_submit: float = 0.0
-    t_encoded: float = 0.0
-    t_first_token: float = 0.0
-    t_done: float = 0.0
-    tokens: list[int] = field(default_factory=list)
-    n_preemptions: int = 0
-
-    @property
-    def ttft(self) -> float:
-        return self.t_first_token - self.t_submit
-
-    @property
-    def tpot(self) -> float:
-        n = len(self.tokens)
-        if n <= 1:
-            return 0.0
-        return (self.t_done - self.t_first_token) / (n - 1)
-
-
-@dataclass
-class EngineConfig:
-    n_encode_workers: int = 2          # IRP degree
-    max_new_tokens: int = 16
-    decode_batch: int = 8              # fixed decode slots (paged mode)
-    cache_headroom: int = 64           # dense mode only
-    # paged decode stage
-    mode: str = "paged"                # "paged" | "dense"
-    kv_blocks: int = 256               # shared pool size (blocks)
-    kv_block_size: int = 16            # tokens per block
-    max_seq_len: int = 256             # block-table width cap per sequence
+__all__ = ["EPDEngine", "EngineConfig", "ServeRequest", "SamplingParams",
+           "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
+           "PAGED_FAMILIES"]
 
 
 class EPDEngine:
-    """Threaded EPD pipeline over a real model."""
+    """Threaded EPD pipeline over a real model (orchestration only)."""
 
     def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig):
         self.cfg = cfg
@@ -92,75 +52,48 @@ class EPDEngine:
                       and cfg.family in PAGED_FAMILIES
                       and not cfg.sliding_window)
 
-        self._eq: queue.Queue = queue.Queue()    # encode jobs
-        self._pq: queue.Queue = queue.Queue()    # prefill jobs (post ψ_EP)
-        self._dq: queue.Queue = queue.Queue()    # decode jobs  (post ψ_PD)
+        self._stats = ServeStats()
+        self.mm_cache = MMTokenCache(engine.mm_cache_entries)
+        self.psi_ep = PsiEP(self.mm_cache)
+        self.psi_pd = PsiPD()
+        self.encode_stage = EncodeStage(self.model, cfg, params,
+                                        engine.n_encode_workers)
+        if self.paged:
+            self._kv = PagedKVState(self.model, cfg, engine)
+            self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
+            self.prefill_stage = PagedPrefillStage(
+                self.model, cfg, params, engine, self._stats, self._kv)
+            self.decode_stage = PagedDecodeStage(
+                self.model, cfg, params, engine, self._stats, self._kv,
+                on_finish=self._finish, on_requeue=self._requeue)
+        else:
+            self.prefill_stage = DensePrefillStage(
+                self.model, cfg, params, engine, self._stats)
+            self.decode_stage = DenseDecodeStage(
+                self.model, cfg, params, engine, self._stats,
+                on_finish=self._finish)
+        self._encode = self.encode_stage.encode_fn   # compat alias
+
+        self._eq: queue.Queue = queue.Queue()        # encode shard jobs
         self._done: dict[int, ServeRequest] = {}
         self._done_cv = threading.Condition()
-        self._shards: dict[int, list] = {}
+        self._handles: dict[int, RequestHandle] = {}
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
-        self.stats: dict[str, Any] = {
-            "decode_tokens": 0, "decode_time": 0.0, "decode_steps": 0,
-            "peak_cache_bytes": 0, "preemptions": 0}
 
-        # jitted stage fns (prefill variants retrace per (S, max_len) pair)
-        self._encode = jax.jit(self.model.encode) if self.model.encode else None
-        self._prefill = jax.jit(
-            lambda p, b, ml: self.model.prefill(p, batch=b, max_len=ml),
-            static_argnums=(2,))
-        self._prefill_merged = jax.jit(
-            lambda p, b, ml: _prefill_premerged(self.model, self.cfg,
-                                                p, b, ml),
-            static_argnums=(2,))
-        self._decode = jax.jit(
-            lambda p, b: self.model.decode_step(p, batch=b))
-        self._live_cache_bytes = 0               # dense-mode KV accounting
-        self._stats_lock = threading.Lock()      # P and D both update peaks
-
-        if self.paged:
-            bs = engine.kv_block_size
-            self.kv_mgr = KVBlockManager(engine.kv_blocks, bs)
-            self._kv_lock = threading.Lock()     # guards kv_mgr
-            self._pool_lock = threading.Lock()   # guards the pool arrays
-            self._max_blocks = math.ceil(engine.max_seq_len / bs)
-            self._trash = engine.kv_blocks       # reserved block id N-1
-            self._k_pool, self._v_pool = self.model.init_kv_pool(
-                engine.kv_blocks, bs)
-            # bytes of one (k + v) block pair, for peak-memory accounting
-            self._block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
-                                     * cfg.head_dim
-                                     * self._k_pool.dtype.itemsize)
-            # Pallas kernel only off interpret-mode on TPU; elsewhere the
-            # jnp oracle keeps the batched step fast (same contract).
-            force_ref = jax.default_backend() != "tpu"
-            # donate the pool buffers so XLA updates them in place instead
-            # of copying the whole pool every step (CPU ignores donation
-            # and warns, so only donate on accelerators)
-            on_cpu = jax.default_backend() == "cpu"
-            self._paged_decode = jax.jit(
-                lambda p, b: self.model.paged_decode_step(
-                    p, batch=b, force_ref=force_ref),
-                donate_argnums=() if on_cpu else (1,))
-            # prefill split: the forward pass runs WITHOUT the pool lock
-            # (it doesn't read the pool); only the block scatter holds it,
-            # so prefill latency never stalls the batched decode loop
-            from repro.models import dense
-            self._prefill_core = jax.jit(
-                lambda p, b: dense.prefill_core(p, self.cfg, b))
-            self._pool_write = jax.jit(
-                dense.pool_write_prefill,
-                donate_argnums=() if on_cpu else (0, 1))
+    @property
+    def stats(self) -> dict[str, Any]:
+        return self._stats.data
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:
         for i in range(max(1, self.ecfg.n_encode_workers)):
-            t = threading.Thread(target=self._encode_loop, daemon=True,
+            t = threading.Thread(target=self._encode_worker, daemon=True,
                                  name=f"E{i}")
             t.start()
             self._threads.append(t)
-        decode = self._decode_loop_paged if self.paged else self._decode_loop
-        for name, loop in (("P0", self._prefill_loop), ("D0", decode)):
+        for name, loop in (("P0", self._prefill_worker),
+                           ("D0", self._decode_worker)):
             t = threading.Thread(target=loop, daemon=True, name=name)
             t.start()
             self._threads.append(t)
@@ -174,7 +107,7 @@ class EPDEngine:
         self._threads = [t for t in self._threads if t.is_alive()]
 
     # -------------------------------------------------------------- submit
-    def submit(self, req: ServeRequest) -> None:
+    def submit(self, req: ServeRequest) -> RequestHandle:
         if self.paged:
             # prefill allocates S+1 (first decode write); lifetime peak is
             # the larger of that and the full generated length
@@ -188,29 +121,38 @@ class EPDEngine:
                     f"capacity {cap} (max_seq_len={self.ecfg.max_seq_len}, "
                     f"pool={self.ecfg.kv_blocks}x"
                     f"{self.ecfg.kv_block_size})")
+        req.sampling.validate()   # seeds must fit uint32 before they jit
         req.t_submit = time.perf_counter()
-        has_mm = (req.mm_embeds is not None and self._encode is not None
+        handle = RequestHandle(req=req, engine=self)
+        self._handles[req.req_id] = handle
+        has_mm = (req.mm_embeds is not None
+                  and self.encode_stage.encode_fn is not None
                   and req.mm_embeds.shape[0] > 0)
-        if has_mm:
-            # Intra-Request Parallelism: shard the PATCH GROUPS across E
-            # workers. Boundaries align to tokens_per_item so each shard is
-            # a whole number of independently-encoded patches (lossless
-            # merge, paper §3.2.2).
-            M = req.mm_embeds.shape[0]
-            tpi = (self.cfg.modality.tokens_per_item
-                   if self.cfg.modality else M)
-            n_groups = -(-M // tpi)
-            n = max(1, min(self.ecfg.n_encode_workers, n_groups))
-            group_ids = np.array_split(np.arange(n_groups), n)
-            self._shards[req.req_id] = [None] * n
-            for sid, gids in enumerate(group_ids):
-                idx = np.concatenate([
-                    np.arange(g * tpi, min((g + 1) * tpi, M)) for g in gids])
-                self._eq.put((req, sid, n, idx))
-        else:
+        if not has_mm:
             req.t_encoded = time.perf_counter()
-            self._pq.put((req, None))
+            req.advance(RequestState.PREFILLING)
+            self.psi_ep.send(req, None)
+            return handle
+        # ψ_EP cache probe: a byte-identical modality payload skips E
+        key = None
+        if self.mm_cache.capacity > 0:
+            key = MMTokenCache.content_key(req.mm_embeds)
+            cached = self.mm_cache.get(key)
+            if cached is not None:
+                req.mm_cache_hit = True
+                self._stats.bump("mm_cache_hits")
+                req.t_encoded = time.perf_counter()
+                req.advance(RequestState.PREFILLING)
+                self.psi_ep.send(req, cached)
+                return handle
+            self._stats.bump("mm_cache_misses")
+        req.advance(RequestState.ENCODING)
+        shards = self.encode_stage.plan_shards(req)
+        for sid, idx in enumerate(shards):
+            self._eq.put((req, sid, len(shards), idx, key))
+        return handle
 
+    # ------------------------------------------------------------- results
     def result(self, req_id: int, timeout: float = 300.0) -> ServeRequest:
         deadline = time.time() + timeout
         with self._done_cv:
@@ -219,273 +161,133 @@ class EPDEngine:
                 if remaining <= 0:
                     raise TimeoutError(f"request {req_id}")
                 self._done_cv.wait(remaining)
+            self._handles.pop(req_id, None)    # collection point: no leak
             return self._done.pop(req_id)
+
+    def _collect(self, req_id: int) -> None:
+        """Drop a finished request from the registries (idempotent)."""
+        with self._done_cv:
+            self._done.pop(req_id, None)
+            self._handles.pop(req_id, None)
+
+    def stream(self, req_id: int, timeout: float = 300.0) -> Iterator[int]:
+        """Incremental token iterator for an in-flight request.
+
+        Tokens are yielded as the decode stage emits them; preemptions are
+        invisible (the replay re-emits the identical prefix, the iterator
+        simply pauses until generation catches back up)."""
+        handle = self._handles.get(req_id)
+        if handle is None:
+            raise KeyError(f"unknown request {req_id}")
+        return self._stream(handle.req, timeout)
+
+    def _stream(self, req: ServeRequest, timeout: float) -> Iterator[int]:
+        i = 0
+        deadline = time.time() + timeout
+        while True:
+            with req._cv:
+                while len(req.tokens) <= i and not req.finished:
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        raise TimeoutError(f"stream {req.req_id}")
+                    req._cv.wait(min(remaining, 0.1))
+                if len(req.tokens) > i:
+                    tok = req.tokens[i]
+                elif req.state is RequestState.FAILED:
+                    raise RuntimeError(
+                        req.error or f"request {req.req_id} failed")
+                else:
+                    # fully streamed: this is a collection point too, so
+                    # streaming-only consumers (the README pattern) don't
+                    # accumulate registry entries; handle.result() still
+                    # works afterwards via the handle's own reference
+                    self._collect(req.req_id)
+                    return
+            yield tok
+            i += 1
 
     def _finish(self, req: ServeRequest) -> None:
         req.t_done = time.perf_counter()
+        req.mark_done(FinishReason.LENGTH)
         with self._done_cv:
             self._done[req.req_id] = req
             self._done_cv.notify_all()
 
-    # --------------------------------------------------------------- loops
-    def _encode_loop(self) -> None:
+    def _fail(self, req: ServeRequest, error: str) -> None:
+        req.t_done = time.perf_counter()
+        if not req.mark_failed(error):
+            return    # a concurrent failer (sibling IRP shard) beat us
+        if self.paged:
+            # release any pool blocks a partial prefill already allocated
+            with self._kv.lock:
+                self._kv.mgr.free(req.req_id)
+        with self._done_cv:
+            self._done[req.req_id] = req
+            self._done_cv.notify_all()
+
+    def _requeue(self, req: ServeRequest, mm_tokens) -> None:
+        """Preemption: route the request back through P over ψ_EP."""
+        req.advance(RequestState.PREFILLING)
+        self.psi_ep.send(req, mm_tokens)
+
+    # --------------------------------------------------------- worker loops
+    def _encode_worker(self) -> None:
         while not self._stop.is_set():
             try:
-                req, sid, n, idx = self._eq.get(timeout=0.05)
+                req, sid, n, idx, key = self._eq.get(timeout=0.05)
             except queue.Empty:
                 continue
-            shard = jnp.asarray(req.mm_embeds[idx])[None]       # (1, m, d)
-            tokens = np.asarray(self._encode(self.params, shard)[0])
-            shards = self._shards[req.req_id]
-            shards[sid] = (idx, tokens)
-            if all(s is not None for s in shards):
-                # ψ_EP: align + merge shard tokens (paper §3.2.2)
-                M = req.mm_embeds.shape[0]
-                d = tokens.shape[-1]
-                merged = np.zeros((M, d), tokens.dtype)
-                for s_idx, s_tok in shards:
-                    merged[s_idx] = s_tok
-                del self._shards[req.req_id]
+            try:
+                tokens = self.encode_stage.encode_shard(req, idx)
+                merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
+                if merged is None or req.finished:
+                    continue
+                if key is not None:
+                    self.mm_cache.put(key, merged)
                 req.t_encoded = time.perf_counter()
-                self._pq.put((req, merged))
+                req.advance(RequestState.PREFILLING)
+                self.psi_ep.send(req, merged)
+            except Exception as e:                      # noqa: BLE001
+                self._fail(req, f"encode failed: {e!r}")
+                self.psi_ep.drop(req.req_id)
 
-    def _prefill_loop(self) -> None:
+    def _prefill_worker(self) -> None:
         while not self._stop.is_set():
             try:
-                req, mm_tokens = self._pq.get(timeout=0.05)
+                req, mm_tokens = self.psi_ep.recv(timeout=0.05)
             except queue.Empty:
                 continue
-            if self.paged:
-                # head-of-line retry on a momentarily full pool: holding
-                # the request (instead of requeueing it behind later
-                # arrivals) keeps admission in FIFO order, so a long
-                # request cannot be starved by a stream of short ones
-                while (not self._prefill_paged(req, mm_tokens)
-                       and not self._stop.is_set()):
-                    time.sleep(0.01)
-                continue
-            batch = {"tokens": jnp.asarray(req.prompt)[None]}
-            if mm_tokens is not None:
-                # tokens already encoded at E; hand P the merged mm tokens
-                batch["mm_embeds"] = None
-            if self.cfg.family == "audio":
-                batch["enc_frames"] = jnp.asarray(req.mm_embeds)[None]
-            logits, cache = self._prefill_with_mm(batch, mm_tokens, req)
-            tok = int(np.argmax(np.asarray(logits[0])))
-            req.tokens.append(tok)
-            req.t_first_token = time.perf_counter()
-            # live-KV accounting: a dense cache exists from prefill to
-            # completion (it pads every request to S + max_new + headroom)
-            with self._stats_lock:
-                self._live_cache_bytes += _cache_nbytes(cache)
-                self.stats["peak_cache_bytes"] = max(
-                    self.stats["peak_cache_bytes"], self._live_cache_bytes)
-            # ψ_PD: cache moves to the decode stage
-            self._dq.put((req, tok, cache))
+            try:
+                if self.paged:
+                    # head-of-line retry on a momentarily full pool:
+                    # holding the request (instead of requeueing it behind
+                    # later arrivals) keeps admission in FIFO order, so a
+                    # long request cannot be starved by short ones
+                    while not self._stop.is_set():
+                        handoff = self.prefill_stage.prefill(req, mm_tokens)
+                        if handoff is not None:
+                            req.advance(RequestState.DECODING)
+                            self.psi_pd.send(handoff)
+                            break
+                        time.sleep(0.01)
+                else:
+                    handoff = self.prefill_stage.prefill(req, mm_tokens)
+                    req.advance(RequestState.DECODING)
+                    self.psi_pd.send(handoff)
+            except Exception as e:                      # noqa: BLE001
+                self._fail(req, f"prefill failed: {e!r}")
 
-    def _prefill_with_mm(self, batch, mm_tokens, req):
-        S = int(batch["tokens"].shape[1])
-        max_len = S + req.max_new_tokens + self.ecfg.cache_headroom
-        if mm_tokens is not None:
-            x_batch = dict(batch)
-            x_batch.pop("mm_embeds", None)
-            x_batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
-            x_batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
-            return self._prefill_merged(self.params, x_batch, max_len)
-        batch = {k: v for k, v in batch.items() if v is not None}
-        return self._prefill(self.params, batch, max_len)
-
-    # ------------------------------------------------------ paged prefill
-    def _prefill_paged(self, req: ServeRequest, mm_tokens) -> bool:
-        """Prefill straight into pool blocks. Returns False if the pool
-        cannot hold the prompt right now (caller requeues)."""
-        S = len(req.prompt)
-        with self._kv_lock:
-            # +1 headroom so the first decode write never needs append
-            if not self.kv_mgr.can_allocate(S + 1):
-                return False
-            blocks = self.kv_mgr.allocate(req.req_id, S + 1)
-        batch = {"tokens": jnp.asarray(req.prompt)[None]}
-        if mm_tokens is not None:
-            batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
-            batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
-        with self._kv_lock, self._stats_lock:
-            self.stats["peak_cache_bytes"] = max(
-                self.stats["peak_cache_bytes"],
-                self.kv_mgr.used_blocks * self._block_bytes)
-        ids = jnp.asarray(blocks, jnp.int32)
-        logits, ks, vs = self._prefill_core(self.params, batch)
-        with self._pool_lock:
-            self._k_pool, self._v_pool = self._pool_write(
-                self._k_pool, self._v_pool, ks, vs, ids)
-        tok = int(np.argmax(np.asarray(logits[0])))
-        req.tokens.append(tok)
-        req.t_first_token = time.perf_counter()
-        # ψ_PD: block-table handoff — no cache copy. mm_tokens ride along
-        # so the decode stage can requeue the request on preemption.
-        self._dq.put((req, tok, S, mm_tokens))
-        return True
-
-    # ------------------------------------------------------- dense decode
-    def _decode_loop(self) -> None:
-        # seed path: continuous batching over independent (cache, token)
-        # pairs, one jitted batch-1 call per request per iteration. Kept as
-        # the comparison baseline for the paged-batched decode stage.
-        active: list[tuple[ServeRequest, int, Any]] = []
+    def _decode_worker(self) -> None:
+        idle_sleep = 0.002 if self.paged else 0.005
         while not self._stop.is_set():
-            while len(active) < self.ecfg.decode_batch:
-                try:
-                    active.append(self._dq.get_nowait())
-                except queue.Empty:
-                    break
-            if not active:
-                time.sleep(0.005)
+            try:
+                worked = self.decode_stage.step(self.psi_pd)
+            except Exception as e:                      # noqa: BLE001
+                # e.g. a request whose appends alone exhaust the pool:
+                # fail the in-flight requests instead of stranding them
+                # behind a dead D thread, then keep serving new arrivals
+                self.decode_stage.abort_all(
+                    lambda r: self._fail(r, f"decode failed: {e!r}"))
                 continue
-            t0 = time.perf_counter()
-            nxt = []
-            stepped = 0
-            for req, tok, cache in active:
-                if len(req.tokens) >= req.max_new_tokens:
-                    with self._stats_lock:
-                        self._live_cache_bytes -= _cache_nbytes(cache)
-                    self._finish(req)
-                    continue
-                logits, cache = self._decode(
-                    self.params,
-                    {"token": jnp.asarray([tok], jnp.int32), "cache": cache})
-                tok = int(np.argmax(np.asarray(logits[0])))
-                req.tokens.append(tok)
-                stepped += 1
-                nxt.append((req, tok, cache))
-            if stepped:
-                self.stats["decode_time"] += time.perf_counter() - t0
-                self.stats["decode_tokens"] += stepped
-                self.stats["decode_steps"] += 1
-            active = nxt
-
-    # ------------------------------------------------------- paged decode
-    def _decode_loop_paged(self) -> None:
-        """Fixed decode slots over the shared paged pool: admit from _dq
-        into free slots, grow allocations via KVBlockManager.append, ONE
-        jitted batched step per iteration regardless of the active count."""
-        n_slots = self.ecfg.decode_batch
-        slots: list[Optional[dict]] = [None] * n_slots
-        tokens = np.zeros((n_slots,), np.int32)
-        positions = np.zeros((n_slots,), np.int32)
-        tables = np.full((n_slots, self._max_blocks), self._trash, np.int32)
-
-        while not self._stop.is_set():
-            # admit new requests into free slots (ψ_PD handoff: block table
-            # row comes straight from the manager, no cache copy)
-            for i in range(n_slots):
-                if slots[i] is not None:
-                    continue
-                try:
-                    req, tok, n_cached, mm_tokens = self._dq.get_nowait()
-                except queue.Empty:
-                    break
-                with self._kv_lock:
-                    blocks = self.kv_mgr.owner_blocks(req.req_id)
-                slots[i] = {"req": req, "mm_tokens": mm_tokens}
-                tokens[i] = tok
-                positions[i] = n_cached
-                tables[i, :] = self._trash
-                tables[i, :len(blocks)] = blocks
-
-            # retire finished requests before stepping
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                req = s["req"]
-                if len(req.tokens) >= req.max_new_tokens:
-                    with self._kv_lock:
-                        self.kv_mgr.free(req.req_id)
-                    self._finish(req)
-                    slots[i] = None
-                    tables[i, :] = self._trash
-
-            active = np.array([s is not None for s in slots])
-            if not active.any():
-                time.sleep(0.002)
-                continue
-
-            # grow allocations for this step's write; preempt on pressure
-            for i, s in enumerate(slots):
-                if s is None:
-                    continue
-                req = s["req"]
-                with self._kv_lock:
-                    try:
-                        new = self.kv_mgr.append(req.req_id, 1,
-                                                 int(positions[i]))
-                    except OutOfBlocks:
-                        owned = len(self.kv_mgr.owner_blocks(req.req_id))
-                        if self.kv_mgr.used_blocks <= owned:
-                            raise   # pool cannot hold even one request
-                        self._preempt(i, slots, tables)
-                        active[i] = False
-                        continue
-                if new:
-                    have = int((tables[i] != self._trash).sum())
-                    tables[i, have:have + len(new)] = new
-
-            if not active.any():
-                continue
-            with self._kv_lock, self._stats_lock:
-                self.stats["peak_cache_bytes"] = max(
-                    self.stats["peak_cache_bytes"],
-                    self.kv_mgr.used_blocks * self._block_bytes)
-
-            # THE decode step: one jitted call for the whole slot batch
-            t0 = time.perf_counter()
-            batch = {"tokens": jnp.asarray(tokens),
-                     "positions": jnp.asarray(positions),
-                     "active": jnp.asarray(active),
-                     "block_tables": jnp.asarray(tables)}
-            with self._pool_lock:
-                batch["k_pool"], batch["v_pool"] = self._k_pool, self._v_pool
-                _, nxt_tok, self._k_pool, self._v_pool = self._paged_decode(
-                    self.params, batch)
-            nxt = np.asarray(nxt_tok)
-            self.stats["decode_time"] += time.perf_counter() - t0
-            self.stats["decode_tokens"] += int(active.sum())
-            self.stats["decode_steps"] += 1
-
-            for i, s in enumerate(slots):
-                if s is None or not active[i]:
-                    continue
-                s["req"].tokens.append(int(nxt[i]))
-                tokens[i] = nxt[i]
-                positions[i] += 1
-
-    def _preempt(self, i: int, slots: list, tables: np.ndarray) -> None:
-        """OutOfBlocks under decode pressure: free this slot's blocks and
-        requeue the request through P (greedy decode is deterministic, so
-        the re-run reproduces the same prefix)."""
-        s = slots[i]
-        req = s["req"]
-        self.kv_mgr.free(req.req_id)      # caller holds _kv_lock
-        req.tokens = []
-        req.n_preemptions += 1
-        self.stats["preemptions"] += 1
-        slots[i] = None
-        tables[i, :] = self._trash
-        self._pq.put((req, s["mm_tokens"]))
-
-
-def _cache_nbytes(cache) -> int:
-    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(cache)))
-
-
-def _prefill_premerged(model, cfg: ArchConfig, params, batch, max_len):
-    """Prefill that takes ALREADY-ENCODED mm tokens (EPD path: E ran
-    elsewhere), materializing a padded dense cache."""
-    from repro.models import dense
-    B, S = batch["tokens"].shape
-    logits, ks, vs = dense.prefill_core(params, cfg, batch)
-    if max_len > S:
-        pad = max_len - S
-        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    cache = {"k": ks, "v": vs, "pos": jnp.full((B,), S, jnp.int32)}
-    return logits, cache
+            if not worked:
+                time.sleep(idle_sleep)

@@ -1,0 +1,485 @@
+"""Typed E / P / D serving stages (paper §3.1).
+
+Each stage class owns its jitted functions and per-stage state and is
+unit-testable without threads: every method is synchronous, the engine
+merely wires stage instances over ψ channels and drives them from worker
+threads. Variants behind one interface:
+
+  EncodeStage        IRP shard planning + jitted encoder (§3.2.2)
+  DensePrefillStage  full prefill -> padded per-request cache
+  PagedPrefillStage  prefill_core + pool scatter (ψ_PD = block table)
+  DenseDecodeStage   continuous batching over per-request caches
+  PagedDecodeStage   ONE jitted batched step over fixed slots / shared pool
+
+Both decode stages thread ``SamplingParams`` into a sampled decode head
+(``dense.sample_tokens``): temperature-0 requests stay bit-identical to
+the historical argmax path.
+"""
+from __future__ import annotations
+
+import math
+import queue
+import threading
+import time
+from typing import Any, Callable, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.block_manager import KVBlockManager, OutOfBlocks
+from repro.models import dense
+from repro.serving.transfer import PsiPD
+from repro.serving.types import EngineConfig, ServeRequest
+
+PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+
+class ServeStats:
+    """Counters shared across stages (P and D both update peaks)."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.data: dict[str, Any] = {
+            "decode_tokens": 0, "decode_time": 0.0, "decode_steps": 0,
+            "peak_cache_bytes": 0, "preemptions": 0,
+            "mm_cache_hits": 0, "mm_cache_misses": 0}
+        self.live_cache_bytes = 0        # dense-mode KV accounting
+
+    def peak(self, live_bytes: int) -> None:
+        with self.lock:
+            self.data["peak_cache_bytes"] = max(
+                self.data["peak_cache_bytes"], live_bytes)
+
+    def add_live(self, nbytes: int) -> None:
+        with self.lock:
+            self.live_cache_bytes += nbytes
+            self.data["peak_cache_bytes"] = max(
+                self.data["peak_cache_bytes"], self.live_cache_bytes)
+
+    def sub_live(self, nbytes: int) -> None:
+        with self.lock:
+            self.live_cache_bytes -= nbytes
+
+    def bump(self, key: str, n: int = 1) -> None:
+        with self.lock:
+            self.data[key] += n
+
+
+def _cache_nbytes(cache) -> int:
+    return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(cache)))
+
+
+# one shared jitted sampler: every stage samples through the same
+# compilation cache (the fn is identical everywhere)
+_sample_jit = jax.jit(dense.sample_tokens)
+
+
+def _sample_one(logits, req: ServeRequest) -> int:
+    """Sample the next token for a single request (B=1 jitted sampler).
+
+    The fold position is ``len(req.tokens)`` — the index of the token
+    being generated — identical across dense/paged paths and across
+    preemption replays."""
+    s = req.sampling
+    if s.greedy:
+        # host argmax, no extra jitted dispatch: keeps the per-request
+        # dense baseline's per-token cost identical to the pre-sampling
+        # engine (sample_tokens' greedy branch is bit-identical to this)
+        return int(np.argmax(np.asarray(logits[0])))
+    tok = _sample_jit(logits,
+                      jnp.asarray([s.temperature], jnp.float32),
+                      jnp.asarray([s.top_p], jnp.float32),
+                      jnp.asarray([s.seed], jnp.uint32),
+                      jnp.asarray([len(req.tokens)], jnp.int32))
+    return int(np.asarray(tok)[0])
+
+
+# ===================================================================== E
+class EncodeStage:
+    """E: IRP patch-group sharding + the jitted multimodal encoder."""
+
+    def __init__(self, model, cfg: ArchConfig, params, n_workers: int):
+        self.cfg = cfg
+        self.params = params
+        self.n_workers = max(1, n_workers)
+        self.encode_fn = jax.jit(model.encode) if model.encode else None
+        self.shards_run = 0              # total shard forwards executed
+        self._lock = threading.Lock()
+
+    def plan_shards(self, req: ServeRequest) -> list[np.ndarray]:
+        """Intra-Request Parallelism: split the PATCH GROUPS across E
+        workers. Boundaries align to tokens_per_item so each shard is a
+        whole number of independently-encoded patches (lossless merge,
+        paper §3.2.2). Returns per-shard index arrays into mm_embeds."""
+        M = req.mm_embeds.shape[0]
+        tpi = self.cfg.modality.tokens_per_item if self.cfg.modality else M
+        n_groups = -(-M // tpi)
+        n = max(1, min(self.n_workers, n_groups))
+        group_ids = np.array_split(np.arange(n_groups), n)
+        return [np.concatenate([np.arange(g * tpi, min((g + 1) * tpi, M))
+                                for g in gids]) for gids in group_ids]
+
+    def encode_shard(self, req: ServeRequest, idx: np.ndarray) -> np.ndarray:
+        """Encode one shard of a request's modality payload -> tokens."""
+        shard = jnp.asarray(req.mm_embeds[idx])[None]           # (1, m, d)
+        tokens = np.asarray(self.encode_fn(self.params, shard)[0])
+        with self._lock:
+            self.shards_run += 1
+        return tokens
+
+
+# ===================================================================== P
+class PrefillStage(Protocol):
+    def prefill(self, req: ServeRequest,
+                mm_tokens: Optional[np.ndarray]) -> Optional[tuple]:
+        """Run prefill, emit the first token, return the ψ_PD handoff —
+        or None if admission must be retried (paged pool full)."""
+
+
+def _prefill_premerged(cfg: ArchConfig, params, batch, max_len):
+    """Prefill that takes ALREADY-ENCODED mm tokens (EPD path: E ran
+    elsewhere), materializing a padded dense cache."""
+    B, S = batch["tokens"].shape
+    logits, ks, vs = dense.prefill_core(params, cfg, batch)
+    if max_len > S:
+        pad = max_len - S
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+class DensePrefillStage:
+    """P (dense): full prefill into a padded per-request cache.
+
+    Works for every model family (the jitted fn wraps ``model.prefill``);
+    ψ_PD moves the whole cache to the decode stage."""
+
+    def __init__(self, model, cfg: ArchConfig, params,
+                 ecfg: EngineConfig, stats: ServeStats):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.stats = stats
+        # prefill variants retrace per (S, max_len) pair
+        self._prefill = jax.jit(
+            lambda p, b, ml: model.prefill(p, batch=b, max_len=ml),
+            static_argnums=(2,))
+        self._prefill_merged = jax.jit(
+            lambda p, b, ml: _prefill_premerged(cfg, p, b, ml),
+            static_argnums=(2,))
+
+    def prefill(self, req: ServeRequest,
+                mm_tokens: Optional[np.ndarray]) -> tuple:
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if self.cfg.family == "audio":
+            batch["enc_frames"] = jnp.asarray(req.mm_embeds)[None]
+        S = int(batch["tokens"].shape[1])
+        max_len = S + req.max_new_tokens + self.ecfg.cache_headroom
+        if mm_tokens is not None:
+            # tokens already encoded at E; hand P the merged mm tokens
+            b = dict(batch)
+            b["mm_tokens"] = jnp.asarray(mm_tokens)[None]
+            b["mm_positions"] = jnp.asarray(req.mm_positions)[None]
+            logits, cache = self._prefill_merged(self.params, b, max_len)
+        else:
+            logits, cache = self._prefill(self.params, batch, max_len)
+        tok = _sample_one(logits, req)
+        req.emit(tok)
+        req.t_first_token = time.perf_counter()
+        # live-KV accounting: a dense cache exists from prefill to
+        # completion (it pads every request to S + max_new + headroom)
+        self.stats.add_live(_cache_nbytes(cache))
+        return (req, tok, cache)
+
+
+class PagedKVState:
+    """Shared paged KV pool + block manager (P writes, D reads/appends)."""
+
+    def __init__(self, model, cfg: ArchConfig, ecfg: EngineConfig):
+        bs = ecfg.kv_block_size
+        self.mgr = KVBlockManager(ecfg.kv_blocks, bs)
+        self.lock = threading.Lock()         # guards mgr
+        self.pool_lock = threading.Lock()    # guards the pool arrays
+        self.max_blocks = math.ceil(ecfg.max_seq_len / bs)
+        self.trash = ecfg.kv_blocks          # reserved block id N-1
+        self.k_pool, self.v_pool = model.init_kv_pool(ecfg.kv_blocks, bs)
+        # bytes of one (k + v) block pair, for peak-memory accounting
+        self.block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
+                                * cfg.head_dim
+                                * self.k_pool.dtype.itemsize)
+
+
+class PagedPrefillStage:
+    """P (paged): prefill straight into shared pool blocks.
+
+    The forward pass runs WITHOUT the pool lock (it doesn't read the
+    pool); only the block scatter holds it, so prefill latency never
+    stalls the batched decode loop. ψ_PD becomes a block-table handoff."""
+
+    def __init__(self, model, cfg: ArchConfig, params,
+                 ecfg: EngineConfig, stats: ServeStats, kv: PagedKVState):
+        self.cfg = cfg
+        self.params = params
+        self.stats = stats
+        self.kv = kv
+        # donate the pool buffers so XLA updates them in place instead of
+        # copying the whole pool every step (CPU ignores donation and
+        # warns, so only donate on accelerators)
+        on_cpu = jax.default_backend() == "cpu"
+        self._prefill_core = jax.jit(
+            lambda p, b: dense.prefill_core(p, cfg, b))
+        self._pool_write = jax.jit(
+            dense.pool_write_prefill,
+            donate_argnums=() if on_cpu else (0, 1))
+
+    def prefill(self, req: ServeRequest,
+                mm_tokens: Optional[np.ndarray]) -> Optional[tuple]:
+        """Returns None if the pool cannot hold the prompt right now."""
+        S = len(req.prompt)
+        with self.kv.lock:
+            # +1 headroom so the first decode write never needs append
+            if not self.kv.mgr.can_allocate(S + 1):
+                return None
+            blocks = self.kv.mgr.allocate(req.req_id, S + 1)
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        if mm_tokens is not None:
+            batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
+            batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
+        with self.kv.lock:
+            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+        ids = jnp.asarray(blocks, jnp.int32)
+        logits, ks, vs = self._prefill_core(self.params, batch)
+        with self.kv.pool_lock:
+            self.kv.k_pool, self.kv.v_pool = self._pool_write(
+                self.kv.k_pool, self.kv.v_pool, ks, vs, ids)
+        tok = _sample_one(logits, req)
+        req.emit(tok)
+        req.t_first_token = time.perf_counter()
+        # ψ_PD: block-table handoff — no cache copy. mm_tokens ride along
+        # so the decode stage can requeue the request on preemption.
+        return (req, tok, S, mm_tokens)
+
+
+# ===================================================================== D
+class DenseDecodeStage:
+    """D (dense): continuous batching over independent (cache, token)
+    pairs, one jitted batch-1 call per request per iteration. Kept as the
+    comparison baseline for the paged-batched decode stage."""
+
+    def __init__(self, model, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 stats: ServeStats, on_finish: Callable[[ServeRequest], None]):
+        self.params = params
+        self.ecfg = ecfg
+        self.stats = stats
+        self.on_finish = on_finish
+        self._decode = jax.jit(lambda p, b: model.decode_step(p, batch=b))
+        self._active: list[tuple] = []
+
+    def step(self, psi_pd: PsiPD) -> bool:
+        """One scheduler iteration; returns False when idle."""
+        while len(self._active) < self.ecfg.decode_batch:
+            try:
+                self._active.append(psi_pd.recv_nowait())
+            except queue.Empty:
+                break
+        if not self._active:
+            return False
+        t0 = time.perf_counter()
+        nxt = []
+        stepped = 0
+        for req, tok, cache in self._active:
+            if len(req.tokens) >= req.max_new_tokens:
+                self.stats.sub_live(_cache_nbytes(cache))
+                self.on_finish(req)
+                continue
+            logits, cache = self._decode(
+                self.params,
+                {"token": jnp.asarray([tok], jnp.int32), "cache": cache})
+            tok = _sample_one(logits, req)
+            req.emit(tok)
+            stepped += 1
+            nxt.append((req, tok, cache))
+        if stepped:
+            with self.stats.lock:
+                self.stats.data["decode_time"] += time.perf_counter() - t0
+                self.stats.data["decode_tokens"] += stepped
+                self.stats.data["decode_steps"] += 1
+        self._active = nxt
+        return True
+
+    def abort_all(self, on_fail: Callable[[ServeRequest], None]) -> None:
+        """Fail every in-flight request (step() raised); releases their
+        cache accounting so the stage can keep serving new arrivals."""
+        for req, _, cache in self._active:
+            self.stats.sub_live(_cache_nbytes(cache))
+            on_fail(req)
+        self._active = []
+
+
+def _paged_step_sampled(model, params, batch, force_ref: bool):
+    """Batched paged decode + sampled head in one jitted body."""
+    logits, _, ks, vs = model.paged_decode_step(params, batch=batch,
+                                                force_ref=force_ref)
+    nxt = dense.sample_tokens(logits, batch["temperature"], batch["top_p"],
+                              batch["seeds"], batch["sample_pos"])
+    return logits, nxt, ks, vs
+
+
+class PagedDecodeStage:
+    """D (paged): fixed decode slots over the shared paged pool — admit
+    from ψ_PD into free slots, grow allocations via KVBlockManager.append,
+    ONE jitted batched step per iteration regardless of the active count
+    (inactive slots pad to the trash block, so the call never recompiles
+    as requests come and go)."""
+
+    def __init__(self, model, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 stats: ServeStats, kv: PagedKVState,
+                 on_finish: Callable[[ServeRequest], None],
+                 on_requeue: Callable[[ServeRequest, Any], None]):
+        self.params = params
+        self.stats = stats
+        self.kv = kv
+        self.on_finish = on_finish
+        self.on_requeue = on_requeue
+        n = ecfg.decode_batch
+        self._slots: list[Optional[dict]] = [None] * n
+        self._tokens = np.zeros((n,), np.int32)
+        self._positions = np.zeros((n,), np.int32)
+        self._tables = np.full((n, kv.max_blocks), kv.trash, np.int32)
+        # per-slot sampling state
+        self._temps = np.zeros((n,), np.float32)
+        self._top_ps = np.ones((n,), np.float32)
+        self._seeds = np.zeros((n,), np.uint32)
+        self._gen = np.zeros((n,), np.int32)     # tokens generated so far
+        # Pallas kernel only off interpret-mode on TPU; elsewhere the jnp
+        # oracle keeps the batched step fast (same contract).
+        force_ref = jax.default_backend() != "tpu"
+        on_cpu = jax.default_backend() == "cpu"
+        self._step = jax.jit(
+            lambda p, b: _paged_step_sampled(model, p, b, force_ref),
+            donate_argnums=() if on_cpu else (1,))
+
+    # ------------------------------------------------------------- admit
+    def _admit(self, psi_pd: PsiPD) -> None:
+        for i in range(len(self._slots)):
+            if self._slots[i] is not None:
+                continue
+            try:
+                req, tok, n_cached, mm_tokens = psi_pd.recv_nowait()
+            except queue.Empty:
+                break
+            with self.kv.lock:
+                blocks = self.kv.mgr.owner_blocks(req.req_id)
+            self._slots[i] = {"req": req, "mm_tokens": mm_tokens}
+            self._tokens[i] = tok
+            self._positions[i] = n_cached
+            self._tables[i, :] = self.kv.trash
+            self._tables[i, :len(blocks)] = blocks
+            self._temps[i] = req.sampling.temperature
+            self._top_ps[i] = req.sampling.top_p
+            self._seeds[i] = req.sampling.seed
+            self._gen[i] = len(req.tokens)
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            req = s["req"]
+            if len(req.tokens) >= req.max_new_tokens:
+                with self.kv.lock:
+                    self.kv.mgr.free(req.req_id)
+                self.on_finish(req)
+                self._slots[i] = None
+                self._tables[i, :] = self.kv.trash
+
+    def _preempt(self, i: int) -> None:
+        """OutOfBlocks under decode pressure: free this slot's blocks and
+        requeue the request through P (the deterministic replay — greedy
+        or seeded sampling — reproduces the same prefix)."""
+        s = self._slots[i]
+        req = s["req"]
+        self.kv.mgr.free(req.req_id)      # caller holds kv.lock
+        req.reset_generation()
+        self.stats.bump("preemptions")
+        self._slots[i] = None
+        self._tables[i, :] = self.kv.trash
+        self.on_requeue(req, s["mm_tokens"])
+
+    def abort_all(self, on_fail: Callable[[ServeRequest], None]) -> None:
+        """Fail every slotted request (step() raised); frees their pool
+        blocks so the stage can keep serving new arrivals."""
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            with self.kv.lock:
+                self.kv.mgr.free(s["req"].req_id)
+            on_fail(s["req"])
+            self._slots[i] = None
+            self._tables[i, :] = self.kv.trash
+
+    # -------------------------------------------------------------- step
+    def step(self, psi_pd: PsiPD) -> bool:
+        """One scheduler iteration; returns False when idle."""
+        self._admit(psi_pd)
+        self._retire()
+        active = np.array([s is not None for s in self._slots])
+        if not active.any():
+            return False
+
+        # grow allocations for this step's write; preempt on pressure
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            req = s["req"]
+            with self.kv.lock:
+                try:
+                    new = self.kv.mgr.append(req.req_id, 1,
+                                             int(self._positions[i]))
+                except OutOfBlocks:
+                    owned = len(self.kv.mgr.owner_blocks(req.req_id))
+                    if self.kv.mgr.used_blocks <= owned:
+                        raise   # pool cannot hold even one request
+                    self._preempt(i)
+                    active[i] = False
+                    continue
+            if new:
+                have = int((self._tables[i] != self.kv.trash).sum())
+                self._tables[i, have:have + len(new)] = new
+
+        if not active.any():
+            return True
+        with self.kv.lock:
+            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+
+        # THE decode step: one jitted call for the whole slot batch
+        t0 = time.perf_counter()
+        batch = {"tokens": jnp.asarray(self._tokens),
+                 "positions": jnp.asarray(self._positions),
+                 "active": jnp.asarray(active),
+                 "block_tables": jnp.asarray(self._tables),
+                 "temperature": jnp.asarray(self._temps),
+                 "top_p": jnp.asarray(self._top_ps),
+                 "seeds": jnp.asarray(self._seeds),
+                 "sample_pos": jnp.asarray(self._gen)}
+        with self.kv.pool_lock:
+            batch["k_pool"] = self.kv.k_pool
+            batch["v_pool"] = self.kv.v_pool
+            _, nxt_tok, self.kv.k_pool, self.kv.v_pool = self._step(
+                self.params, batch)
+        nxt = np.asarray(nxt_tok)
+        with self.stats.lock:
+            self.stats.data["decode_time"] += time.perf_counter() - t0
+            self.stats.data["decode_tokens"] += int(active.sum())
+            self.stats.data["decode_steps"] += 1
+
+        for i, s in enumerate(self._slots):
+            if s is None or not active[i]:
+                continue
+            s["req"].emit(int(nxt[i]))
+            self._tokens[i] = nxt[i]
+            self._positions[i] += 1
+            self._gen[i] += 1
+        return True

@@ -1,0 +1,141 @@
+"""ψ transfer channels between stages (paper §3.1–§3.2.2).
+
+``PsiEP`` is the E→P handoff: it assembles IRP shard outputs into the
+merged multimodal-token tensor (align/merge, §3.2.2) and owns the
+content-hash-keyed ``MMTokenCache`` (§3.2.1) so a repeated image/audio
+payload skips the E stage entirely — the cached merged tokens are
+delivered straight to P.
+
+``PsiPD`` is the P→D handoff: in paged mode it carries a block-table
+reference (no KV copy), in dense mode it moves the materialized cache.
+On real hardware these channels would be device-to-device puts; here they
+are typed thread-safe queues with transfer accounting.
+"""
+from __future__ import annotations
+
+import hashlib
+import queue
+import threading
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+
+class MMTokenCache:
+    """Content-hash-keyed LRU cache of merged multimodal tokens.
+
+    Paper §3.2.1: "cache multimedia tokens for efficient transfer" — the
+    key is a digest of the raw modality payload, so identical images or
+    audio clips (byte-identical embeddings) across requests reuse the
+    encoded tokens and the E stage runs zero shards."""
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = capacity
+        self._entries: "OrderedDict[str, np.ndarray]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    @staticmethod
+    def content_key(mm_embeds: np.ndarray) -> str:
+        a = np.ascontiguousarray(mm_embeds)
+        h = hashlib.sha1(a.tobytes())
+        h.update(str(a.shape).encode())
+        h.update(str(a.dtype).encode())
+        return h.hexdigest()
+
+    def get(self, key: str) -> Optional[np.ndarray]:
+        with self._lock:
+            tokens = self._entries.get(key)
+            if tokens is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            return tokens
+
+    def put(self, key: str, tokens: np.ndarray) -> None:
+        if self.capacity <= 0:
+            return
+        with self._lock:
+            self._entries[key] = tokens
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class PsiEP:
+    """ψ_EP: multimodal-token handoff from E workers to the P stage."""
+
+    def __init__(self, cache: MMTokenCache):
+        self.cache = cache
+        self._q: queue.Queue = queue.Queue()
+        self._shards: dict[int, list] = {}
+        self._lock = threading.Lock()
+        self.transfers = 0
+
+    def send(self, req: Any, mm_tokens: Optional[np.ndarray]) -> None:
+        """Deliver a prefill-ready request (merged tokens, a cache hit,
+        a text-only request, or a preemption requeue)."""
+        self.transfers += 1
+        self._q.put((req, mm_tokens))
+
+    def add_shard(self, req: Any, sid: int, n_shards: int,
+                  idx: np.ndarray, tokens: np.ndarray
+                  ) -> Optional[np.ndarray]:
+        """Collect one IRP shard; when all ``n_shards`` have arrived,
+        align + merge (paper §3.2.2) and return the merged tokens —
+        ``None`` while shards are still outstanding."""
+        with self._lock:
+            # checked under the lock: a sibling shard's failure either
+            # happened before (we see finished and retain nothing) or its
+            # drop() serializes after our insert and removes it
+            if req.finished:
+                self._shards.pop(req.req_id, None)
+                return None
+            shards = self._shards.setdefault(req.req_id, [None] * n_shards)
+            shards[sid] = (idx, tokens)
+            if any(s is None for s in shards):
+                return None
+            del self._shards[req.req_id]
+        M = req.mm_embeds.shape[0]
+        merged = np.zeros((M, tokens.shape[-1]), tokens.dtype)
+        for s_idx, s_tok in shards:
+            merged[s_idx] = s_tok
+        return merged
+
+    def drop(self, req_id: int) -> None:
+        """Discard any partial shard assembly for a failed request."""
+        with self._lock:
+            self._shards.pop(req_id, None)
+
+    def recv(self, timeout: float):
+        """Next prefill-ready (req, mm_tokens); raises queue.Empty."""
+        return self._q.get(timeout=timeout)
+
+
+class PsiPD:
+    """ψ_PD: prefill→decode handoff.
+
+    Paged mode sends ``(req, first_tok, n_cached, mm_tokens)`` — the KV
+    stays in the shared pool, only the block-table reference moves (the
+    decode stage reads the table from the block manager). Dense mode
+    sends ``(req, first_tok, cache)`` — a materialized cache move."""
+
+    def __init__(self):
+        self._q: queue.Queue = queue.Queue()
+        self.transfers = 0
+
+    def send(self, handoff: tuple) -> None:
+        self.transfers += 1
+        self._q.put(handoff)
+
+    def recv_nowait(self) -> tuple:
+        """Next handoff; raises queue.Empty when none pending."""
+        return self._q.get_nowait()

@@ -1,0 +1,203 @@
+"""Typed serving primitives: sampling params, request lifecycle, handles.
+
+The stage graph (paper §3.1) moves a request through explicit states:
+
+    QUEUED -> ENCODING -> PREFILLING -> DECODING -> DONE
+         \\______________/^    ^____________|   \\-> FAILED
+          (text-only / mm      (preemption requeues
+           cache hit skip E)    through P)
+
+``ServeRequest`` carries the request through the E/P/D stages and doubles
+as the result object; ``RequestHandle`` is what ``EPDEngine.submit``
+returns — blocking ``result()`` or an incremental ``stream()`` iterator.
+"""
+from __future__ import annotations
+
+import enum
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+
+class APIError(ValueError):
+    """Invalid request payload or parameters."""
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """Decode-head sampling controls (OpenAI-style semantics).
+
+    ``temperature == 0`` is exact greedy (bit-identical to argmax);
+    otherwise nucleus (top-p) sampling with a per-request PRNG seed, so
+    the same request replayed — including after a preemption — emits the
+    same tokens."""
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def validate(self) -> None:
+        if not (0.0 <= self.temperature <= 2.0):
+            raise APIError(f"temperature out of range: {self.temperature}")
+        if not (0.0 < self.top_p <= 1.0):
+            raise APIError(f"top_p out of range: {self.top_p}")
+        if not (0 <= self.seed < 2 ** 32):   # becomes a uint32 PRNG seed
+            raise APIError(f"seed must be a uint32: {self.seed}")
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    ENCODING = "encoding"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    DONE = "done"
+    FAILED = "failed"
+
+
+# legal lifecycle transitions; DECODING -> PREFILLING is preemption
+_TRANSITIONS: dict[RequestState, tuple[RequestState, ...]] = {
+    RequestState.QUEUED: (RequestState.ENCODING, RequestState.PREFILLING),
+    RequestState.ENCODING: (RequestState.PREFILLING, RequestState.FAILED),
+    RequestState.PREFILLING: (RequestState.DECODING, RequestState.FAILED),
+    RequestState.DECODING: (RequestState.DONE, RequestState.PREFILLING,
+                            RequestState.FAILED),
+    RequestState.DONE: (),
+    RequestState.FAILED: (),
+}
+
+
+class FinishReason(enum.Enum):
+    LENGTH = "length"
+    STOP = "stop"
+    ERROR = "error"
+
+
+@dataclass
+class EngineConfig:
+    n_encode_workers: int = 2          # IRP degree
+    max_new_tokens: int = 16
+    decode_batch: int = 8              # fixed decode slots (paged mode)
+    cache_headroom: int = 64           # dense mode only
+    # paged decode stage
+    mode: str = "paged"                # "paged" | "dense"
+    kv_blocks: int = 256               # shared pool size (blocks)
+    kv_block_size: int = 16            # tokens per block
+    max_seq_len: int = 256             # block-table width cap per sequence
+    # ψ_EP multimedia-token cache (paper §3.2.1); 0 disables caching
+    mm_cache_entries: int = 32
+
+
+@dataclass
+class ServeRequest:
+    """One request's journey through the stage graph (also the result)."""
+    req_id: int
+    prompt: np.ndarray                       # (S,) int32
+    mm_embeds: Optional[np.ndarray] = None   # (M, d_frontend)
+    mm_positions: Optional[np.ndarray] = None
+    max_new_tokens: int = 16
+    sampling: SamplingParams = field(default_factory=SamplingParams)
+    # lifecycle
+    state: RequestState = RequestState.QUEUED
+    finish_reason: Optional[FinishReason] = None
+    error: Optional[str] = None
+    mm_cache_hit: bool = False
+    # timestamps
+    t_submit: float = 0.0
+    t_encoded: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+    tokens: list[int] = field(default_factory=list)
+    n_preemptions: int = 0
+    # streaming consumers wait on this for new tokens / terminal state
+    _cv: threading.Condition = field(default_factory=threading.Condition,
+                                     repr=False, compare=False)
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot(self) -> float:
+        n = len(self.tokens)
+        if n <= 1:
+            return 0.0
+        return (self.t_done - self.t_first_token) / (n - 1)
+
+    @property
+    def finished(self) -> bool:
+        return self.state in (RequestState.DONE, RequestState.FAILED)
+
+    # ------------------------------------------------------------ lifecycle
+    def advance(self, new_state: RequestState) -> None:
+        if new_state not in _TRANSITIONS[self.state]:
+            raise ValueError(
+                f"request {self.req_id}: illegal transition "
+                f"{self.state.value} -> {new_state.value}")
+        self.state = new_state
+
+    def emit(self, tok: int) -> None:
+        """Append a generated token and wake streaming consumers."""
+        with self._cv:
+            self.tokens.append(int(tok))
+            self._cv.notify_all()
+
+    def reset_generation(self) -> None:
+        """Preemption: drop generated tokens; the deterministic replay
+        (greedy, or seeded sampling keyed on token index) re-emits the
+        identical prefix, so open streams resume seamlessly."""
+        with self._cv:
+            self.tokens.clear()
+            self.n_preemptions += 1
+
+    def mark_done(self, reason: FinishReason) -> None:
+        with self._cv:
+            self.finish_reason = reason
+            self.advance(RequestState.DONE)
+            self._cv.notify_all()
+
+    def mark_failed(self, error: str) -> bool:
+        """Atomically claim the FAILED state; returns False if the request
+        already reached a terminal state (e.g. a sibling IRP shard failed
+        it first), so concurrent failers can't double-transition."""
+        with self._cv:
+            if self.finished:
+                return False
+            self.error = error
+            self.finish_reason = FinishReason.ERROR
+            self.advance(RequestState.FAILED)
+            self._cv.notify_all()
+            return True
+
+
+@dataclass
+class RequestHandle:
+    """Returned by ``EPDEngine.submit`` — the client's view of a request."""
+    req: ServeRequest
+    engine: Any
+
+    @property
+    def req_id(self) -> int:
+        return self.req.req_id
+
+    def result(self, timeout: float = 300.0) -> ServeRequest:
+        """Block until the request completes; returns the ServeRequest.
+
+        Safe to call after (or instead of) consuming ``stream()`` — a
+        request the stream already collected is answered from the handle's
+        own reference."""
+        if self.req.finished:
+            self.engine._collect(self.req.req_id)
+            return self.req
+        return self.engine.result(self.req.req_id, timeout=timeout)
+
+    def stream(self, timeout: float = 300.0) -> Iterator[int]:
+        """Yield tokens incrementally as the decode stage emits them.
+
+        Works even after ``result()`` collected the request — the handle
+        holds the request, not a registry lookup."""
+        return self.engine._stream(self.req, timeout)

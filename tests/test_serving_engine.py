@@ -61,11 +61,12 @@ def test_irp_sharding_is_lossless(engine):
     tpi = cfg.modality.tokens_per_item
     M = 2 * tpi                                   # two patch groups
     mm = rng.standard_normal((M, cfg.modality.enc_d_model)).astype(np.float32)
-    whole = np.asarray(eng._encode(eng.params, jnp.asarray(mm)[None])[0],
+    encode = eng.encode_stage.encode_fn
+    whole = np.asarray(encode(eng.params, jnp.asarray(mm)[None])[0],
                        np.float32)
-    half1 = np.asarray(eng._encode(eng.params, jnp.asarray(mm[:tpi])[None])[0],
+    half1 = np.asarray(encode(eng.params, jnp.asarray(mm[:tpi])[None])[0],
                        np.float32)
-    half2 = np.asarray(eng._encode(eng.params, jnp.asarray(mm[tpi:])[None])[0],
+    half2 = np.asarray(encode(eng.params, jnp.asarray(mm[tpi:])[None])[0],
                        np.float32)
     merged = np.concatenate([half1, half2], axis=0)
     np.testing.assert_allclose(merged, whole, rtol=2e-2, atol=2e-2)

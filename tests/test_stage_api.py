@@ -1,0 +1,391 @@
+"""Stage-graph serving API: typed stages run standalone (no threads),
+ψ_EP MMTokenCache hit/miss/eviction + encode-skip, sampling end-to-end,
+streaming-vs-result parity, and paged-vs-dense parity through the
+OpenAI-shaped frontend.
+"""
+import ast
+import os
+import subprocess
+import sys
+import zlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.configs import get_config
+from repro.models import build_model, dense
+from repro.serving import (EPDEngine, EngineConfig, FinishReason,
+                           MMTokenCache, PsiEP, PsiPD, RequestState,
+                           SamplingParams, ServeRequest)
+from repro.serving.api import (_toy_tokenize, build_chat_response,
+                               chat_completion, parse_chat_request)
+from repro.serving.stages import (DenseDecodeStage, DensePrefillStage,
+                                  EncodeStage, PagedDecodeStage,
+                                  PagedKVState, PagedPrefillStage,
+                                  ServeStats)
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _mm(cfg, seed, groups=2):
+    rng = np.random.default_rng(seed)
+    M = groups * cfg.modality.tokens_per_item
+    return (rng.standard_normal((M, cfg.modality.enc_d_model))
+            .astype(np.float32) * 0.1)
+
+
+# ------------------------------------------------------------- lifecycle
+def test_request_lifecycle_transitions():
+    req = ServeRequest(req_id=1, prompt=np.arange(4, dtype=np.int32))
+    assert req.state is RequestState.QUEUED
+    req.advance(RequestState.ENCODING)
+    req.advance(RequestState.PREFILLING)
+    req.advance(RequestState.DECODING)
+    req.advance(RequestState.PREFILLING)      # preemption requeues via P
+    req.advance(RequestState.DECODING)
+    req.mark_done(FinishReason.LENGTH)
+    assert req.finished and req.finish_reason is FinishReason.LENGTH
+    with pytest.raises(ValueError):
+        req.advance(RequestState.ENCODING)    # DONE is terminal
+
+
+def test_illegal_transition_rejected():
+    req = ServeRequest(req_id=2, prompt=np.arange(4, dtype=np.int32))
+    with pytest.raises(ValueError):
+        req.advance(RequestState.DECODING)    # must prefill first
+
+
+# ----------------------------------------------------------- MMTokenCache
+def test_mm_cache_hit_miss_and_lru_eviction():
+    cache = MMTokenCache(capacity=2)
+    a, b, c = (np.full((2, 3), v, np.float32) for v in (1.0, 2.0, 3.0))
+    ka, kb, kc = (MMTokenCache.content_key(x) for x in (a, b, c))
+    assert len({ka, kb, kc}) == 3
+    assert cache.get(ka) is None and cache.misses == 1
+    cache.put(ka, a)
+    cache.put(kb, b)
+    assert cache.get(ka) is a and cache.hits == 1
+    cache.put(kc, c)                          # evicts LRU entry = b
+    assert cache.get(kb) is None
+    assert cache.get(ka) is not None and cache.get(kc) is not None
+    assert cache.evictions == 1 and len(cache) == 2
+
+
+def test_mm_cache_key_is_content_based():
+    a = np.random.default_rng(0).standard_normal((3, 4)).astype(np.float32)
+    assert MMTokenCache.content_key(a) == MMTokenCache.content_key(a.copy())
+    assert MMTokenCache.content_key(a) != MMTokenCache.content_key(a + 1e-3)
+    # shape matters, not just bytes
+    assert (MMTokenCache.content_key(a) !=
+            MMTokenCache.content_key(a.reshape(4, 3)))
+
+
+# ------------------------------------------------- stages without threads
+def test_encode_stage_shards_merge_losslessly(vlm_setup):
+    cfg, params = vlm_setup
+    model = build_model(cfg)
+    stage = EncodeStage(model, cfg, params, n_workers=2)
+    mm = _mm(cfg, seed=3)
+    M = mm.shape[0]
+    req = ServeRequest(req_id=10, prompt=np.arange(8, dtype=np.int32),
+                       mm_embeds=mm,
+                       mm_positions=np.arange(1, M + 1, dtype=np.int32))
+    shards = stage.plan_shards(req)
+    assert len(shards) == 2                   # two patch groups, two workers
+    assert sorted(np.concatenate(shards).tolist()) == list(range(M))
+    psi = PsiEP(MMTokenCache(4))
+    merged = None
+    for sid, idx in enumerate(shards):
+        out = psi.add_shard(req, sid, len(shards), idx,
+                            stage.encode_shard(req, idx))
+        if out is not None:
+            merged = out
+    assert merged is not None and stage.shards_run == 2
+    whole = np.asarray(stage.encode_fn(params, jnp.asarray(mm)[None])[0])
+    np.testing.assert_allclose(merged, whole, rtol=2e-2, atol=2e-2)
+
+
+def test_paged_prefill_and_decode_stages_standalone(vlm_setup):
+    """P and D paged stages drive a request to completion synchronously."""
+    cfg, params = vlm_setup
+    model = build_model(cfg)
+    ecfg = EngineConfig(decode_batch=2, kv_blocks=32, max_seq_len=64)
+    stats = ServeStats()
+    kv = PagedKVState(model, cfg, ecfg)
+    pstage = PagedPrefillStage(model, cfg, params, ecfg, stats, kv)
+    finished = []
+    dstage = PagedDecodeStage(model, cfg, params, ecfg, stats, kv,
+                              on_finish=finished.append,
+                              on_requeue=lambda r, m: None)
+    req = ServeRequest(req_id=11,
+                       prompt=np.arange(8, dtype=np.int32) % cfg.vocab,
+                       max_new_tokens=3)
+    handoff = pstage.prefill(req, None)
+    assert handoff is not None and len(req.tokens) == 1
+    psi = PsiPD()
+    psi.send(handoff)
+    for _ in range(10):
+        if finished:
+            break
+        dstage.step(psi)
+    assert [r.req_id for r in finished] == [11]
+    assert len(req.tokens) == 3
+    assert kv.mgr.used_blocks == 0            # blocks returned on finish
+    assert stats.data["decode_steps"] > 0
+
+
+def test_dense_prefill_and_decode_stages_standalone(vlm_setup):
+    cfg, params = vlm_setup
+    model = build_model(cfg)
+    ecfg = EngineConfig(decode_batch=2, mode="dense")
+    stats = ServeStats()
+    pstage = DensePrefillStage(model, cfg, params, ecfg, stats)
+    finished = []
+    dstage = DenseDecodeStage(model, cfg, params, ecfg, stats,
+                              on_finish=finished.append)
+    req = ServeRequest(req_id=12,
+                       prompt=np.arange(8, dtype=np.int32) % cfg.vocab,
+                       max_new_tokens=3)
+    psi = PsiPD()
+    psi.send(pstage.prefill(req, None))
+    for _ in range(10):
+        if finished:
+            break
+        dstage.step(psi)
+    assert [r.req_id for r in finished] == [12]
+    assert len(req.tokens) == 3
+    assert stats.live_cache_bytes == 0        # dense cache released
+
+
+# --------------------------------------------------------------- sampling
+def test_sample_tokens_greedy_and_nucleus():
+    logits = jnp.asarray([[1.0, 3.0, 2.0, -1.0]] * 3)
+    temps = jnp.asarray([0.0, 1.0, 1.0])
+    top_ps = jnp.asarray([1.0, 1e-6, 0.9])
+    seeds = jnp.asarray([0, 0, 123], jnp.uint32)
+    pos = jnp.zeros((3,), jnp.int32)
+    out = np.asarray(dense.sample_tokens(logits, temps, top_ps, seeds, pos))
+    assert out[0] == 1                        # temperature 0 -> exact argmax
+    assert out[1] == 1                        # top_p -> 0 keeps only top-1
+    out2 = np.asarray(dense.sample_tokens(logits, temps, top_ps, seeds, pos))
+    assert (out == out2).all()                # seeded draws are deterministic
+    assert 0 <= out[2] < 4
+
+
+def test_sampled_decode_is_seeded_deterministic(vlm_setup):
+    """temperature>0 reruns with the same seed emit identical tokens, and
+    the explicit temperature=0 path equals the default greedy path."""
+    cfg, params = vlm_setup
+    text = " ".join(f"w{i}" for i in range(10))
+    sampled = {"messages": [{"role": "user", "content": text}],
+               "max_tokens": 5, "temperature": 0.9, "top_p": 0.9, "seed": 7}
+    greedy = {"messages": [{"role": "user", "content": text}],
+              "max_tokens": 5}
+    explicit0 = dict(greedy, temperature=0.0, top_p=1.0)
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=64, max_seq_len=128))
+    eng.start()
+    try:
+        s1 = chat_completion(eng, sampled)["choices"][0]["token_ids"]
+        s2 = chat_completion(eng, sampled)["choices"][0]["token_ids"]
+        g1 = chat_completion(eng, greedy)["choices"][0]["token_ids"]
+        g2 = chat_completion(eng, explicit0)["choices"][0]["token_ids"]
+    finally:
+        eng.stop()
+    assert s1 == s2 and len(s1) == 5
+    assert g1 == g2                           # temp=0 is bit-identical greedy
+
+
+def test_sampling_params_carried_from_payload(vlm_setup):
+    cfg, _ = vlm_setup
+    req = parse_chat_request(cfg, {
+        "messages": [{"role": "user", "content": "a b c"}],
+        "temperature": 0.7, "top_p": 0.9, "seed": 3})
+    assert req.sampling == SamplingParams(temperature=0.7, top_p=0.9, seed=3)
+
+
+# -------------------------------------------------------------- streaming
+def test_stream_matches_result(vlm_setup):
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=64, max_seq_len=128))
+    eng.start()
+    try:
+        req = ServeRequest(req_id=501,
+                           prompt=np.arange(10, dtype=np.int32) % cfg.vocab,
+                           max_new_tokens=5)
+        handle = eng.submit(req)
+        streamed = list(handle.stream(timeout=300))
+        out = handle.result(timeout=300)
+    finally:
+        eng.stop()
+    assert streamed == out.tokens and len(streamed) == 5
+    assert out.state is RequestState.DONE
+    assert out.finish_reason is FinishReason.LENGTH
+
+
+# ----------------------------------------------------- ψ_EP encode skip
+def test_mm_cache_skips_encode_on_repeat(vlm_setup):
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=2, kv_blocks=64, max_seq_len=128))
+    eng.start()
+    mm = _mm(cfg, seed=5)
+    M = mm.shape[0]
+    prompt = np.arange(M + 6, dtype=np.int32) % cfg.vocab
+
+    def mk(rid):
+        return ServeRequest(req_id=rid, prompt=prompt.copy(),
+                            mm_embeds=mm.copy(),
+                            mm_positions=np.arange(1, M + 1, dtype=np.int32),
+                            max_new_tokens=4)
+    try:
+        eng.submit(mk(601))
+        out1 = eng.result(601, timeout=300)
+        shards_after_first = eng.encode_stage.shards_run
+        assert shards_after_first > 0 and not out1.mm_cache_hit
+        eng.submit(mk(602))
+        out2 = eng.result(602, timeout=300)
+    finally:
+        eng.stop()
+    assert out2.mm_cache_hit
+    # E ran ZERO shards on the hit path, yet the output is token-identical
+    assert eng.encode_stage.shards_run == shards_after_first
+    assert out2.tokens == out1.tokens
+    assert eng.stats["mm_cache_hits"] == 1
+    assert eng.stats["mm_cache_misses"] == 1
+    assert eng.mm_cache.hits == 1
+
+
+def test_disabled_mm_cache_never_hits(vlm_setup):
+    """mm_cache_entries=0 turns ψ_EP caching off: repeats re-encode."""
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=2, kv_blocks=64, max_seq_len=128,
+        mm_cache_entries=0))
+    eng.start()
+    mm = _mm(cfg, seed=6)
+    M = mm.shape[0]
+    prompt = np.arange(M + 6, dtype=np.int32) % cfg.vocab
+
+    def mk(rid):
+        return ServeRequest(req_id=rid, prompt=prompt.copy(),
+                            mm_embeds=mm.copy(),
+                            mm_positions=np.arange(1, M + 1, dtype=np.int32),
+                            max_new_tokens=2)
+    try:
+        eng.submit(mk(701))
+        eng.result(701, timeout=300)
+        shards_first = eng.encode_stage.shards_run
+        eng.submit(mk(702))
+        out2 = eng.result(702, timeout=300)
+    finally:
+        eng.stop()
+    assert not out2.mm_cache_hit
+    assert eng.encode_stage.shards_run == 2 * shards_first
+    assert eng.stats["mm_cache_hits"] == 0 and len(eng.mm_cache) == 0
+
+
+def test_oversized_seed_rejected():
+    with pytest.raises(ValueError, match="seed"):
+        SamplingParams(seed=2 ** 32).validate()
+    from repro.serving.api import APIError
+    cfg = get_config("pixtral-12b").reduced()
+    with pytest.raises(APIError, match="seed"):
+        parse_chat_request(cfg, {
+            "messages": [{"role": "user", "content": "x"}],
+            "seed": 2 ** 32})
+
+
+def test_result_releases_handle_registry(vlm_setup):
+    """Finished requests must not accumulate in the engine forever."""
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=64, max_seq_len=128))
+    eng.start()
+    try:
+        req = ServeRequest(req_id=801,
+                           prompt=np.arange(6, dtype=np.int32) % cfg.vocab,
+                           max_new_tokens=2)
+        handle = eng.submit(req)
+        out = handle.result(timeout=300)
+        # a handle kept by the caller still streams after collection
+        assert list(handle.stream(timeout=10)) == out.tokens
+    finally:
+        eng.stop()
+    assert eng._handles == {} and eng._done == {}
+
+
+# ------------------------------------------------------------ OpenAI shape
+def test_chat_completion_shape_and_usage(vlm_setup):
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=64, max_seq_len=128))
+    eng.start()
+    try:
+        resp = chat_completion(eng, {
+            "messages": [{"role": "user",
+                          "content": "the quick brown fox jumps"}],
+            "max_tokens": 4})
+    finally:
+        eng.stop()
+    assert resp["object"] == "chat.completion"
+    assert resp["model"] == cfg.name
+    choice = resp["choices"][0]
+    assert choice["finish_reason"] == "length"
+    assert len(choice["token_ids"]) == 4
+    assert choice["message"]["content"].split() == \
+        [str(t) for t in choice["token_ids"]]
+    assert resp["usage"] == {"prompt_tokens": 5, "completion_tokens": 4,
+                             "total_tokens": 9}
+    t = resp["timings"]
+    assert t["ttft"] > 0 and t["n_preemptions"] == 0
+    assert t["mm_cache_hit"] is False
+
+
+def test_paged_dense_parity_through_api(vlm_setup):
+    """Greedy paged and dense engines emit identical token_ids for the
+    same multimodal payload via the OpenAI-shaped frontend."""
+    cfg, params = vlm_setup
+    mm = _mm(cfg, seed=9)
+    payload = {"messages": [{"role": "user", "content": [
+        {"type": "text",
+         "text": " ".join(f"w{i}" for i in range(mm.shape[0] + 4))},
+        {"type": "image_embedding", "embedding": mm.tolist()}]}],
+        "max_tokens": 4}
+    ids = {}
+    for mode in ("paged", "dense"):
+        eng = EPDEngine(cfg, params, EngineConfig(
+            n_encode_workers=2, decode_batch=2, mode=mode,
+            kv_blocks=128, max_seq_len=256))
+        eng.start()
+        try:
+            ids[mode] = chat_completion(eng, payload)["choices"][0]["token_ids"]
+        finally:
+            eng.stop()
+    assert ids["paged"] == ids["dense"] and len(ids["paged"]) == 4
+
+
+# ---------------------------------------------------------- tokenization
+def test_tokenizer_is_stable_across_processes():
+    """crc32 tokenization must not vary per interpreter (hash() does)."""
+    text, vocab = "the quick brown fox", 50_000
+    toks = _toy_tokenize(text, vocab).tolist()
+    # regression-pin against direct crc32 (seedless, process-independent)
+    assert toks == [zlib.crc32(w.encode()) % (vocab - 3) + 2
+                    for w in text.split()]
+    src = os.path.dirname(os.path.abspath(next(iter(repro.__path__))))
+    code = ("from repro.serving.api import _toy_tokenize; "
+            f"print(_toy_tokenize({text!r}, {vocab}).tolist())")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, check=True)
+    assert ast.literal_eval(out.stdout.strip()) == toks
