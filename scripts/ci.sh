@@ -23,5 +23,11 @@ python examples/epd_serve.py --requests 4 --new-tokens 4 || exit 1
 echo "== smoke: engine TTFT + mm-cache-hit benchmark (quick) =="
 python benchmarks/ttft.py --quick --engine-only || exit 1
 
+echo "== smoke: mixed-load scheduler (long prefill mid-decode, chunked) =="
+# asserts decode keeps emitting while the long prompt chunk-prefills, the
+# unchunked baseline stalls, stop-token requests finish with "stop", and
+# the quick run stays under its wall-clock bound
+python benchmarks/mixed_load.py --quick || exit 1
+
 echo "CI done (tier-1 exit: $tier1)"
 exit "$tier1"

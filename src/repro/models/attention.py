@@ -154,6 +154,38 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return o[:, :Sq].astype(q.dtype)
 
 
+# ------------------------------------------------------- chunked-prefill attn
+def prefix_chunk_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           k_prev: jnp.ndarray, v_prev: jnp.ndarray,
+                           prev_len: jnp.ndarray) -> jnp.ndarray:
+    """One prefill chunk attending a cached prefix plus itself, causally.
+
+    q (B, C, H, hd) and k/v (B, C, K, hd) are the current chunk (rope
+    already applied at GLOBAL positions); k_prev/v_prev (B, Pmax, K, hd)
+    is a fixed-width prefix buffer (e.g. gathered from pool blocks) whose
+    first ``prev_len`` slots are valid — query i sits at global position
+    ``prev_len + i``, so it sees the whole valid prefix and chunk keys
+    j <= i. The fixed Pmax keeps the jitted shape identical across chunks
+    (one trace for the whole prefill). Returns (B, C, H, hd)."""
+    B, C, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    Pmax = k_prev.shape[1]
+    kc = jnp.concatenate([k_prev, k], axis=1).astype(jnp.float32)
+    vc = jnp.concatenate([v_prev, v], axis=1).astype(jnp.float32)
+    qg = q.reshape(B, C, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bjkh->bkgqj", qg, kc) / math.sqrt(hd)
+    j = jnp.arange(Pmax + C)
+    i = jnp.arange(C)
+    mask = jnp.where(j[None, :] < Pmax,
+                     j[None, :] < prev_len,                 # valid prefix
+                     (j[None, :] - Pmax) <= i[:, None])     # causal in-chunk
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqj,bjkh->bqkgh", p, vc)
+    return o.reshape(B, C, H, hd).astype(q.dtype)
+
+
 # -------------------------------------------------------------- decode attn
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      length: jnp.ndarray) -> jnp.ndarray:

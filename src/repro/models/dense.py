@@ -12,7 +12,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.models.attention import (attn_init, cache_write, chunked_attention,
-                                    decode_attention, out_project, qkv_project)
+                                    decode_attention, out_project,
+                                    prefix_chunk_attention, qkv_project)
 from repro.models.encoder import encoder_apply, encoder_init
 from repro.models.layers import (Params, dense_init, embed_init, mlp_apply,
                                  mlp_init, rmsnorm, rmsnorm_init,
@@ -192,6 +193,44 @@ def prefill_core(params: Params, cfg: ArchConfig, batch: Batch, *,
                              return_kv=True,
                              block_causal_skip=block_causal_skip)
     return lm_head(params, cfg, h[:, -1]), ks, vs
+
+
+def prefill_chunk_core(params: Params, cfg: ArchConfig, batch: Batch
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One position-offset chunk of a chunked prefill (paper §4 SLO story:
+    a long prompt is prefilled chunk-by-chunk so decode never stalls a
+    whole prompt's worth of compute behind it).
+
+    batch:
+      x          (B, C, d)        embedded chunk inputs (tail may be pad)
+      positions  (B, C)  int32    GLOBAL positions t0 .. t0+C-1
+      k_prev/v_prev (L, B, Pmax, K, hd) cached prefix KV (pad = garbage)
+      prev_len   ()      int32    valid prefix tokens (== t0)
+      last_idx   ()      int32    index of the final VALID chunk token
+
+    Returns (logits of the last valid token (B, V), ks, vs (L, B, C, K, hd)).
+    Logits are only meaningful on the final chunk; intermediate chunks use
+    just the returned KV (scattered into the pool by the caller)."""
+    x, positions = batch["x"], batch["positions"]
+    prev_len = batch["prev_len"]
+
+    def body(h, xs):
+        lp, kp, vp = xs
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                              positions, cfg.rope_theta)
+        o = prefix_chunk_attention(q, k, v, kp, vp, prev_len)
+        h = h + out_project(lp["attn"], o)
+        f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = h + f
+        return h, (k, v)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, x, (params["layers"], batch["k_prev"], batch["v_prev"]))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    last = jax.lax.dynamic_index_in_dim(h, batch["last_idx"], axis=1,
+                                        keepdims=False)           # (B, d)
+    return lm_head(params, cfg, last), ks, vs
 
 
 def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,

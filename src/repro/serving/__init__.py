@@ -1,8 +1,10 @@
 from repro.serving.engine import EPDEngine
-from repro.serving.transfer import MMTokenCache, PsiEP, PsiPD
+from repro.serving.scheduler import Scheduler
+from repro.serving.transfer import (MMTokenCache, PrefillProgress, PsiEP,
+                                    PsiPD)
 from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
                                  RequestState, SamplingParams, ServeRequest)
 
 __all__ = ["EPDEngine", "EngineConfig", "ServeRequest", "SamplingParams",
            "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
-           "PsiEP", "PsiPD"]
+           "PsiEP", "PsiPD", "PrefillProgress", "Scheduler"]

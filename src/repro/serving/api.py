@@ -35,12 +35,19 @@ class CompletionParams:
     temperature: float = 0.0
     top_p: float = 1.0
     seed: int = 0
+    stop_token_ids: tuple = ()
+    eos_token_id: Optional[int] = None
+
+    def to_sampling(self) -> SamplingParams:
+        return SamplingParams(temperature=self.temperature, top_p=self.top_p,
+                              seed=self.seed,
+                              stop_tokens=tuple(self.stop_token_ids),
+                              eos_id=self.eos_token_id)
 
     def validate(self) -> None:
         if not (1 <= self.max_tokens <= 8192):
             raise APIError(f"max_tokens out of range: {self.max_tokens}")
-        SamplingParams(temperature=self.temperature, top_p=self.top_p,
-                       seed=self.seed).validate()
+        self.to_sampling().validate()
 
 
 _IDS = itertools.count(1)
@@ -53,7 +60,13 @@ def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
       {"messages": [{"role": "user", "content": [
           {"type": "text", "text": "..."} |
           {"type": "image_embedding", "embedding": [[...], ...]} ]}],
-       "max_tokens": 16, "temperature": 0.0, "top_p": 1.0, "seed": 0}
+       "max_tokens": 16, "temperature": 0.0, "top_p": 1.0, "seed": 0,
+       "stop_token_ids": [7, 9], "eos_token_id": 2}
+
+    ``stop_token_ids``/``eos_token_id`` end generation with
+    ``finish_reason == "stop"`` when sampled (the toy tokenizer has no
+    string detokenizer, so stops are token ids, not OpenAI's "stop"
+    strings — same semantics: the matched token is not emitted).
     Image/audio payloads arrive as PRECOMPUTED embeddings (the modality
     frontend is stubbed per DESIGN.md); a deployment would put the
     patchifier in front of this layer. ``temperature``/``top_p``/``seed``
@@ -62,11 +75,15 @@ def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
     """
     if "messages" not in payload or not payload["messages"]:
         raise APIError("missing messages")
+    eos = payload.get("eos_token_id")
     params = CompletionParams(
         max_tokens=int(payload.get("max_tokens", 16)),
         temperature=float(payload.get("temperature", 0.0)),
         top_p=float(payload.get("top_p", 1.0)),
-        seed=int(payload.get("seed", 0)))
+        seed=int(payload.get("seed", 0)),
+        stop_token_ids=tuple(int(t) for t in
+                             payload.get("stop_token_ids", ())),
+        eos_token_id=None if eos is None else int(eos))
     params.validate()
 
     text_parts: list[str] = []
@@ -103,9 +120,7 @@ def parse_chat_request(cfg: ArchConfig, payload: dict) -> ServeRequest:
                        f"{cfg.max_context} (OOCL)")
     return ServeRequest(
         req_id=next(_IDS), prompt=prompt, mm_embeds=mm, mm_positions=pos,
-        max_new_tokens=params.max_tokens,
-        sampling=SamplingParams(temperature=params.temperature,
-                                top_p=params.top_p, seed=params.seed))
+        max_new_tokens=params.max_tokens, sampling=params.to_sampling())
 
 
 def _toy_tokenize(text: str, vocab: int) -> np.ndarray:

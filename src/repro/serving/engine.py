@@ -2,16 +2,23 @@
 
 Stage logic lives in ``serving.stages`` (each stage owns its jitted fns),
 ψ transfer semantics in ``serving.transfer`` (ψ_EP with the
-multimedia-token cache, ψ_PD block-table handoff), and request lifecycle
-types in ``serving.types``. This module only wires them together:
+multimedia-token cache, ψ_PD block-table handoff), the continuous-batching
+loop in ``serving.scheduler``, and request lifecycle types in
+``serving.types``. This module only wires them together:
 
-  E workers --ψ_EP(MMTokenCache)--> P thread --ψ_PD--> D thread
+  paged:  E workers --ψ_EP--> Scheduler thread (chunked P + batched D)
+  dense:  E workers --ψ_EP--> P thread --ψ_PD--> D thread  (baseline)
 
 ``submit()`` returns a ``RequestHandle``; results arrive via blocking
 ``result()`` or the incremental ``stream()`` token iterator. A repeated
 multimodal payload hits the ψ_EP cache at submit and skips the E stage
-entirely (paper §3.2.1); preempted requests requeue through P and replay
+entirely (paper §3.2.1) — and a byte-identical payload already being
+encoded is joined in-flight, so concurrent duplicates never stampede the
+encoder. Preempted requests requeue through P and replay
 deterministically (greedy, or seeded sampling keyed on token index).
+``stop()`` drains every channel and fails resident requests, so a
+concurrent ``result()``/``stream()`` returns promptly instead of timing
+out.
 
 ``ServeRequest`` / ``EngineConfig`` are re-exported here as compat shims
 for pre-stage-graph callers.
@@ -27,11 +34,14 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import build_model
+from repro.serving.scheduler import Scheduler
 from repro.serving.stages import (PAGED_FAMILIES, DenseDecodeStage,
                                   DensePrefillStage, EncodeStage,
                                   PagedDecodeStage, PagedKVState,
-                                  PagedPrefillStage, ServeStats)
-from repro.serving.transfer import MMTokenCache, PsiEP, PsiPD
+                                  PagedPrefillStage, ServeStats,
+                                  cache_nbytes)
+from repro.serving.transfer import (MMTokenCache, PsiEP, PsiPD,
+                                    drain_queue)
 from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
                                  RequestState, SamplingParams, ServeRequest)
 
@@ -56,8 +66,10 @@ class EPDEngine:
         self.mm_cache = MMTokenCache(engine.mm_cache_entries)
         self.psi_ep = PsiEP(self.mm_cache)
         self.psi_pd = PsiPD()
+        self._stop = threading.Event()
         self.encode_stage = EncodeStage(self.model, cfg, params,
                                         engine.n_encode_workers)
+        self.scheduler: Scheduler | None = None
         if self.paged:
             self._kv = PagedKVState(self.model, cfg, engine)
             self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
@@ -66,6 +78,10 @@ class EPDEngine:
             self.decode_stage = PagedDecodeStage(
                 self.model, cfg, params, engine, self._stats, self._kv,
                 on_finish=self._finish, on_requeue=self._requeue)
+            self.scheduler = Scheduler(
+                engine, self.prefill_stage, self.decode_stage,
+                self.psi_ep, self.psi_pd, self._stats, self._stop,
+                on_fail=self._fail)
         else:
             self.prefill_stage = DensePrefillStage(
                 self.model, cfg, params, engine, self._stats)
@@ -75,10 +91,13 @@ class EPDEngine:
         self._encode = self.encode_stage.encode_fn   # compat alias
 
         self._eq: queue.Queue = queue.Queue()        # encode shard jobs
+        # in-flight encode dedup: content key -> requests waiting for the
+        # first submitter's merged tokens (anti-stampede)
+        self._mm_inflight: dict[str, list[ServeRequest]] = {}
+        self._mm_lock = threading.Lock()
         self._done: dict[int, ServeRequest] = {}
         self._done_cv = threading.Condition()
         self._handles: dict[int, RequestHandle] = {}
-        self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
 
     @property
@@ -92,35 +111,82 @@ class EPDEngine:
                                  name=f"E{i}")
             t.start()
             self._threads.append(t)
-        for name, loop in (("P0", self._prefill_worker),
-                           ("D0", self._decode_worker)):
+        if self.scheduler is not None:
+            # paged: ONE worker drives the continuous-batching scheduler
+            # (chunked prefill + batched decode co-scheduled per iteration)
+            loops = (("S0", self._sched_worker),)
+        else:
+            loops = (("P0", self._prefill_worker),
+                     ("D0", self._decode_worker))
+        for name, loop in loops:
             t = threading.Thread(target=loop, daemon=True, name=name)
             t.start()
             self._threads.append(t)
 
     def stop(self, timeout: float = 5.0) -> None:
-        """Signal all stage threads and join them (deterministic shutdown)."""
+        """Signal all stage threads, join them, then fail every resident
+        (unfinished) request so concurrent ``result()``/``stream()``
+        callers return promptly instead of hitting their timeouts.
+
+        ``timeout`` is the expected join horizon, not a hard cap: a
+        worker stuck past it (e.g. a long XLA compile) is joined to
+        completion anyway — every loop re-checks the stop flag after its
+        current bounded step, and draining while a worker lives would
+        free blocks under its feet."""
         self._stop.set()
         deadline = time.time() + timeout
         for t in self._threads:
             t.join(max(0.0, deadline - time.time()))
-        self._threads = [t for t in self._threads if t.is_alive()]
+        for t in self._threads:
+            if t.is_alive():
+                t.join()
+        self._threads = []
+        self._drain_on_stop()
+
+    def _drain_on_stop(self) -> None:
+        """Empty every channel and fail stranded requests (clean shutdown).
+
+        Residents can be parked in the encode shard queue, the ψ_EP/ψ_PD
+        channels, the scheduler's admission queue or in-flight chunked
+        prefill, a decode slot, or waiting on an in-flight encode key —
+        all of them are registered in ``_handles`` until collected, so one
+        sweep fails them all; channel drains release the block/cache
+        resources the handoffs still reference."""
+        error = "engine stopped before the request completed"
+        drain_queue(self._eq)                         # encode shard jobs
+        self.psi_ep.drain()
+        for handoff in self.psi_pd.drain():
+            if not self.paged:                        # materialized cache
+                self._stats.sub_live(cache_nbytes(handoff[2]))
+        with self._mm_lock:
+            self._mm_inflight.clear()
+        if self.scheduler is not None:
+            for req in self.scheduler.drain():        # frees task blocks
+                self._fail(req, error)
+        for handle in list(self._handles.values()):   # everything else
+            if not handle.req.finished:
+                self._fail(handle.req, error)
 
     # -------------------------------------------------------------- submit
     def submit(self, req: ServeRequest) -> RequestHandle:
+        # admission-time length validation in BOTH modes: the lifetime
+        # peak is prompt + generated tokens. max_new >= 1 is required —
+        # it covers prefill's S+1 first-decode-write headroom, so a
+        # zero-generation request can't pass validation yet be
+        # unadmittable forever (wedging the FIFO head)
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.req_id}: max_new_tokens must be >= 1")
+        total = len(req.prompt) + req.max_new_tokens
+        cap = self.ecfg.max_seq_len
         if self.paged:
-            # prefill allocates S+1 (first decode write); lifetime peak is
-            # the larger of that and the full generated length
-            total = max(len(req.prompt) + req.max_new_tokens,
-                        len(req.prompt) + 1)
-            cap = min(self.ecfg.max_seq_len,
-                      self.ecfg.kv_blocks * self.ecfg.kv_block_size)
-            if total > cap:
-                raise ValueError(
-                    f"request {req.req_id}: {total} tokens exceeds "
-                    f"capacity {cap} (max_seq_len={self.ecfg.max_seq_len}, "
-                    f"pool={self.ecfg.kv_blocks}x"
-                    f"{self.ecfg.kv_block_size})")
+            cap = min(cap, self.ecfg.kv_blocks * self.ecfg.kv_block_size)
+        if total > cap:
+            raise ValueError(
+                f"request {req.req_id}: {total} tokens exceeds capacity "
+                f"{cap} (max_seq_len={self.ecfg.max_seq_len}"
+                + (f", pool={self.ecfg.kv_blocks}x"
+                   f"{self.ecfg.kv_block_size})" if self.paged else ")"))
         req.sampling.validate()   # seeds must fit uint32 before they jit
         req.t_submit = time.perf_counter()
         handle = RequestHandle(req=req, engine=self)
@@ -146,6 +212,17 @@ class EPDEngine:
                 self.psi_ep.send(req, cached)
                 return handle
             self._stats.bump("mm_cache_misses")
+            # anti-stampede: if a byte-identical payload is ALREADY being
+            # encoded, wait for its merged tokens instead of running the
+            # IRP shards a second time
+            with self._mm_lock:
+                waiters = self._mm_inflight.get(key)
+                if waiters is not None:
+                    req.advance(RequestState.ENCODING)
+                    waiters.append(req)
+                    self._stats.bump("mm_inflight_hits")
+                    return handle
+                self._mm_inflight[key] = []
         req.advance(RequestState.ENCODING)
         shards = self.encode_stage.plan_shards(req)
         for sid, idx in enumerate(shards):
@@ -154,15 +231,33 @@ class EPDEngine:
 
     # ------------------------------------------------------------- results
     def result(self, req_id: int, timeout: float = 300.0) -> ServeRequest:
+        handle = self._handles.get(req_id)
+        if handle is not None:
+            return self._result_of(handle.req, timeout)
+        with self._done_cv:                    # already collected elsewhere?
+            if req_id in self._done:
+                self._handles.pop(req_id, None)
+                return self._done.pop(req_id)
+        raise KeyError(f"unknown request {req_id}")
+
+    def _result_of(self, req: ServeRequest, timeout: float) -> ServeRequest:
+        """Block until ``req`` reaches a terminal state, then collect it.
+
+        Waits on the request's terminal state rather than the ``_done``
+        registry, so a concurrent stream consumer collecting the same
+        request cannot strand this waiter (the registry pop is idempotent
+        and happens strictly after the terminal transition — both are
+        made under ``_done_cv``)."""
         deadline = time.time() + timeout
         with self._done_cv:
-            while req_id not in self._done:
+            while not req.finished:
                 remaining = deadline - time.time()
                 if remaining <= 0:
-                    raise TimeoutError(f"request {req_id}")
+                    raise TimeoutError(f"request {req.req_id}")
                 self._done_cv.wait(remaining)
-            self._handles.pop(req_id, None)    # collection point: no leak
-            return self._done.pop(req_id)
+            self._done.pop(req.req_id, None)   # collection point: no leak
+            self._handles.pop(req.req_id, None)
+        return req
 
     def _collect(self, req_id: int) -> None:
         """Drop a finished request from the registries (idempotent)."""
@@ -185,6 +280,7 @@ class EPDEngine:
         i = 0
         deadline = time.time() + timeout
         while True:
+            done = False
             with req._cv:
                 while len(req.tokens) <= i and not req.finished:
                     remaining = deadline - time.time()
@@ -197,38 +293,75 @@ class EPDEngine:
                     raise RuntimeError(
                         req.error or f"request {req.req_id} failed")
                 else:
-                    # fully streamed: this is a collection point too, so
-                    # streaming-only consumers (the README pattern) don't
-                    # accumulate registry entries; handle.result() still
-                    # works afterwards via the handle's own reference
-                    self._collect(req.req_id)
-                    return
+                    done = True
+            if done:
+                # fully streamed: this is a collection point too, so
+                # streaming-only consumers (the README pattern) don't
+                # accumulate registry entries; handle.result() still works
+                # afterwards via the handle's own reference. Collected
+                # OUTSIDE req._cv — _collect takes _done_cv, and the lock
+                # order is _done_cv -> req._cv everywhere else.
+                self._collect(req.req_id)
+                return
             yield tok
             i += 1
 
     def _finish(self, req: ServeRequest) -> None:
         req.t_done = time.perf_counter()
-        req.mark_done(FinishReason.LENGTH)
+        # terminal transition + registry insert are one atomic unit under
+        # _done_cv (lock order: _done_cv -> req._cv), so _result_of can
+        # never observe `finished` without the _done entry in place
         with self._done_cv:
+            req.mark_done(FinishReason.STOP if req.stop_hit
+                          else FinishReason.LENGTH)
             self._done[req.req_id] = req
             self._done_cv.notify_all()
 
     def _fail(self, req: ServeRequest, error: str) -> None:
         req.t_done = time.perf_counter()
-        if not req.mark_failed(error):
+        with self._done_cv:
+            claimed = req.mark_failed(error)
+            if claimed:
+                self._done[req.req_id] = req
+                self._done_cv.notify_all()
+        if not claimed:
             return    # a concurrent failer (sibling IRP shard) beat us
         if self.paged:
             # release any pool blocks a partial prefill already allocated
             with self._kv.lock:
                 self._kv.mgr.free(req.req_id)
-        with self._done_cv:
-            self._done[req.req_id] = req
-            self._done_cv.notify_all()
 
     def _requeue(self, req: ServeRequest, mm_tokens) -> None:
-        """Preemption: route the request back through P over ψ_EP."""
+        """Preemption: re-admit through P — at the FRONT of the
+        scheduler's queue (paged), or over ψ_EP (dense baseline)."""
         req.advance(RequestState.PREFILLING)
-        self.psi_ep.send(req, mm_tokens)
+        if self.scheduler is not None:
+            self.scheduler.requeue(req, mm_tokens)
+        else:
+            self.psi_ep.send(req, mm_tokens)
+
+    def _deliver_inflight(self, key: str | None, merged) -> None:
+        """Hand the leader's merged mm tokens to every waiter that joined
+        the in-flight encode of the same content key."""
+        if key is None:
+            return
+        with self._mm_lock:
+            waiters = self._mm_inflight.pop(key, [])
+        for w in waiters:
+            if w.finished:
+                continue
+            w.mm_cache_hit = True
+            w.t_encoded = time.perf_counter()
+            w.advance(RequestState.PREFILLING)
+            self.psi_ep.send(w, merged)
+
+    def _fail_inflight(self, key: str | None, error: str) -> None:
+        if key is None:
+            return
+        with self._mm_lock:
+            waiters = self._mm_inflight.pop(key, [])
+        for w in waiters:
+            self._fail(w, error)
 
     # --------------------------------------------------------- worker loops
     def _encode_worker(self) -> None:
@@ -247,38 +380,44 @@ class EPDEngine:
                 req.t_encoded = time.perf_counter()
                 req.advance(RequestState.PREFILLING)
                 self.psi_ep.send(req, merged)
+                self._deliver_inflight(key, merged)
             except Exception as e:                      # noqa: BLE001
                 self._fail(req, f"encode failed: {e!r}")
                 self.psi_ep.drop(req.req_id)
+                # byte-identical waiters would fail identically
+                self._fail_inflight(key, f"encode failed: {e!r}")
+
+    def _sched_worker(self) -> None:
+        """Paged mode: ONE loop drives the continuous-batching scheduler
+        (chunked prefill co-scheduled with the batched decode step)."""
+        while not self._stop.is_set():
+            try:
+                worked = self.scheduler.step()
+            except Exception as e:                      # noqa: BLE001
+                # per-request failures are handled inside step(); this
+                # catches scheduler bugs so the loop never dies silently
+                self.decode_stage.abort_all(
+                    lambda r: self._fail(r, f"scheduler failed: {e!r}"))
+                continue
+            if not worked:
+                time.sleep(0.002)
 
     def _prefill_worker(self) -> None:
+        """Dense baseline: free-running P thread (unchunked prefill)."""
         while not self._stop.is_set():
             try:
                 req, mm_tokens = self.psi_ep.recv(timeout=0.05)
             except queue.Empty:
                 continue
             try:
-                if self.paged:
-                    # head-of-line retry on a momentarily full pool:
-                    # holding the request (instead of requeueing it behind
-                    # later arrivals) keeps admission in FIFO order, so a
-                    # long request cannot be starved by short ones
-                    while not self._stop.is_set():
-                        handoff = self.prefill_stage.prefill(req, mm_tokens)
-                        if handoff is not None:
-                            req.advance(RequestState.DECODING)
-                            self.psi_pd.send(handoff)
-                            break
-                        time.sleep(0.01)
-                else:
-                    handoff = self.prefill_stage.prefill(req, mm_tokens)
-                    req.advance(RequestState.DECODING)
-                    self.psi_pd.send(handoff)
+                handoff = self.prefill_stage.prefill(req, mm_tokens)
+                req.advance(RequestState.DECODING)
+                self.psi_pd.send(handoff)
             except Exception as e:                      # noqa: BLE001
                 self._fail(req, f"prefill failed: {e!r}")
 
     def _decode_worker(self) -> None:
-        idle_sleep = 0.002 if self.paged else 0.005
+        """Dense baseline: free-running D thread."""
         while not self._stop.is_set():
             try:
                 worked = self.decode_stage.step(self.psi_pd)
@@ -290,4 +429,4 @@ class EPDEngine:
                     lambda r: self._fail(r, f"decode failed: {e!r}"))
                 continue
             if not worked:
-                time.sleep(idle_sleep)
+                time.sleep(0.005)

@@ -1,0 +1,170 @@
+"""Unified continuous-batching scheduler for the paged serving path.
+
+One iteration loop co-schedules **chunked prefill** and the batched
+decode step under a per-iteration token budget (paper §4: the SLO story
+needs decode to never stall behind a long prefill; RServe/ElasticMM in
+PAPERS.md make the same case for co-scheduling stage work):
+
+  * decode runs first every iteration — its ONE jitted batched step is
+    never queued behind prefill compute, so TPOT stays flat while a long
+    prompt trickles in chunk-by-chunk;
+  * the leftover budget (``EngineConfig.step_token_budget`` minus the
+    decode slots just stepped) is spent on prefill chunks of the task at
+    the head of the admission queue; when decode is idle, at least one
+    chunk always runs (guaranteed progress);
+  * admission is a real FIFO queue with pool-pressure backoff: if the
+    head request's blocks don't fit, the scheduler simply keeps it at
+    the head (later arrivals cannot starve it) and lets decode
+    retirements free blocks — replacing the old head-of-line
+    ``time.sleep(0.01)`` busy-wait thread;
+  * preempted requests re-enter at the FRONT of the queue
+    (preempt-aware: they already held capacity once and replay
+    deterministically, so re-admitting them first minimizes wasted
+    work).
+
+The scheduler is single-threaded by construction — the engine drives it
+from one worker — so prefill/decode interleaving is deterministic given
+arrival order, and every stage method it calls stays unit-testable
+without threads (the stages are duck-typed; tests drive the scheduler
+with stubs).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from collections import deque
+from typing import Any, Callable, Optional
+
+from repro.serving.stages import PagedDecodeStage, PagedPrefillStage, ServeStats
+from repro.serving.transfer import PrefillProgress, PsiEP, PsiPD
+from repro.serving.types import EngineConfig, RequestState, ServeRequest
+
+__all__ = ["Scheduler"]
+
+
+class Scheduler:
+    """Iteration-level co-scheduler over the paged P and D stages."""
+
+    def __init__(self, ecfg: EngineConfig, prefill: PagedPrefillStage,
+                 decode: PagedDecodeStage, psi_ep: PsiEP, psi_pd: PsiPD,
+                 stats: ServeStats, stop_event: threading.Event,
+                 on_fail: Callable[[ServeRequest, str], None]):
+        self.ecfg = ecfg
+        self.prefill = prefill
+        self.decode = decode
+        self.psi_ep = psi_ep
+        self.psi_pd = psi_pd
+        self.stats = stats
+        self._stop = stop_event
+        self.on_fail = on_fail
+        # FIFO admission queue of prefill-ready (req, mm_tokens);
+        # preemption re-admits at the front — ``_front`` preserves the
+        # relative order of several victims preempted in one decode step
+        # (a bare appendleft would reverse them into LIFO)
+        self.queue: deque = deque()
+        self._front = 0
+        self.task: Optional[PrefillProgress] = None
+        # effective chunk (block-aligned by the stage) and budget; the
+        # budget is clamped so one full decode round plus one chunk always
+        # fits — a smaller value would silently starve prefill whenever
+        # any decode slot is active (the exact stall this loop removes)
+        self.chunk = max(prefill.chunk, 1)     # unchunked counts as 1 slot
+        floor = ecfg.decode_batch + self.chunk
+        self.budget = max(ecfg.step_token_budget or floor, floor)
+
+    # ------------------------------------------------------------ admission
+    def requeue(self, req: ServeRequest, mm_tokens: Any) -> None:
+        """Preemption path: re-admit at the FRONT of the FIFO (victims
+        preempted in the same step keep their relative order)."""
+        self.queue.insert(self._front, (req, mm_tokens))
+        self._front += 1
+
+    def _drain_arrivals(self) -> None:
+        while True:
+            try:
+                self.queue.append(self.psi_ep.recv_nowait())
+            except queue.Empty:
+                return
+
+    def _try_admit(self) -> Optional[PrefillProgress]:
+        while self.queue:
+            req, mm_tokens = self.queue[0]
+            if req.finished:        # failed while queued (e.g. IRP sibling)
+                self.queue.popleft()
+                continue
+            try:
+                task = self.prefill.start(req, mm_tokens)
+            except Exception as e:                    # noqa: BLE001
+                # a request that cannot even be admitted must not wedge
+                # the queue head forever
+                self.queue.popleft()
+                self.on_fail(req, f"prefill admission failed: {e!r}")
+                continue
+            if task is None:
+                # pool-pressure backoff: hold the head in place — FIFO
+                # order means later arrivals cannot starve it; decode
+                # retirements will free blocks
+                self.stats.bump("admission_backoffs")
+                return None
+            self.queue.popleft()
+            return task
+        return None
+
+    # ------------------------------------------------------------ iteration
+    def step(self) -> bool:
+        """One scheduler iteration; returns False when fully idle."""
+        self._drain_arrivals()
+        self._front = 0      # this step's preemption-requeue insertions
+        # decode first: the batched step is never queued behind prefill
+        try:
+            stepped = self.decode.step(self.psi_pd)
+        except Exception as e:                        # noqa: BLE001
+            # e.g. a request whose appends alone exhaust the pool: fail
+            # the in-flight requests instead of stranding them, then keep
+            # serving new arrivals
+            self.decode.abort_all(
+                lambda r: self.on_fail(r, f"decode failed: {e!r}"))
+            stepped = 0
+        spent = int(stepped)
+        chunks = 0
+        # chunked prefill under the leftover budget; when decode is idle
+        # at least one chunk runs regardless (guaranteed progress)
+        while not self._stop.is_set():
+            if self.task is None:
+                self.task = self._try_admit()
+            if self.task is None:
+                break
+            if (spent + self.chunk > self.budget
+                    and not (stepped == 0 and chunks == 0)):
+                break
+            spent += self.chunk
+            chunks += 1
+            self._advance_task()
+        return bool(stepped or chunks)
+
+    def _advance_task(self) -> None:
+        task = self.task
+        try:
+            done = self.prefill.run_chunk(task)
+        except Exception as e:                        # noqa: BLE001
+            self.task = None
+            self.on_fail(task.req, f"prefill failed: {e!r}")
+            return
+        if done:
+            self.task = None
+            task.req.advance(RequestState.DECODING)
+            self.psi_pd.send(task)
+
+    # ------------------------------------------------------------- shutdown
+    def drain(self) -> list[ServeRequest]:
+        """Shutdown: abandon the in-flight task and empty the admission
+        queue; returns the stranded requests (the engine fails them)."""
+        stranded = []
+        if self.task is not None:
+            self.prefill.abandon(self.task)
+            stranded.append(self.task.req)
+            self.task = None
+        while self.queue:
+            req, _ = self.queue.popleft()
+            stranded.append(req)
+        return stranded

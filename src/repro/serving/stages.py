@@ -7,7 +7,8 @@ threads. Variants behind one interface:
 
   EncodeStage        IRP shard planning + jitted encoder (§3.2.2)
   DensePrefillStage  full prefill -> padded per-request cache
-  PagedPrefillStage  prefill_core + pool scatter (ψ_PD = block table)
+  PagedPrefillStage  CHUNKED prefill into pool blocks (ψ_PD = block
+                     table; start()/run_chunk() driven by the scheduler)
   DenseDecodeStage   continuous batching over per-request caches
   PagedDecodeStage   ONE jitted batched step over fixed slots / shared pool
 
@@ -30,7 +31,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.block_manager import KVBlockManager, OutOfBlocks
 from repro.models import dense
-from repro.serving.transfer import PsiPD
+from repro.serving.transfer import PrefillProgress, PsiPD
 from repro.serving.types import EngineConfig, ServeRequest
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
@@ -44,7 +45,9 @@ class ServeStats:
         self.data: dict[str, Any] = {
             "decode_tokens": 0, "decode_time": 0.0, "decode_steps": 0,
             "peak_cache_bytes": 0, "preemptions": 0,
-            "mm_cache_hits": 0, "mm_cache_misses": 0}
+            "mm_cache_hits": 0, "mm_cache_misses": 0,
+            "prefill_chunks": 0, "admission_backoffs": 0,
+            "mm_inflight_hits": 0}
         self.live_cache_bytes = 0        # dense-mode KV accounting
 
     def peak(self, live_bytes: int) -> None:
@@ -67,7 +70,7 @@ class ServeStats:
             self.data[key] += n
 
 
-def _cache_nbytes(cache) -> int:
+def cache_nbytes(cache) -> int:
     return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(cache)))
 
 
@@ -133,9 +136,12 @@ class EncodeStage:
 # ===================================================================== P
 class PrefillStage(Protocol):
     def prefill(self, req: ServeRequest,
-                mm_tokens: Optional[np.ndarray]) -> Optional[tuple]:
-        """Run prefill, emit the first token, return the ψ_PD handoff —
-        or None if admission must be retried (paged pool full)."""
+                mm_tokens: Optional[np.ndarray]):
+        """Run the whole prefill, emit the first token, return the ψ_PD
+        handoff (a tuple in dense mode, a completed ``PrefillProgress``
+        in paged mode) — or None if admission must back off (pool full).
+        The paged stage additionally exposes ``start``/``run_chunk`` so
+        the scheduler can interleave decode steps between chunks."""
 
 
 def _prefill_premerged(cfg: ArchConfig, params, batch, max_len):
@@ -187,11 +193,11 @@ class DensePrefillStage:
         else:
             logits, cache = self._prefill(self.params, batch, max_len)
         tok = _sample_one(logits, req)
-        req.emit(tok)
+        req.accept(tok)      # stop-at-first-token retires at D admission
         req.t_first_token = time.perf_counter()
         # live-KV accounting: a dense cache exists from prefill to
         # completion (it pads every request to S + max_new + headroom)
-        self.stats.add_live(_cache_nbytes(cache))
+        self.stats.add_live(cache_nbytes(cache))
         return (req, tok, cache)
 
 
@@ -212,12 +218,35 @@ class PagedKVState:
                                 * self.k_pool.dtype.itemsize)
 
 
-class PagedPrefillStage:
-    """P (paged): prefill straight into shared pool blocks.
+def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch):
+    """One jitted chunk: gather the prefix KV from the pool through the
+    (fixed-width, trash-padded) block table, run the position-offset chunk
+    forward, scatter the chunk's KV into its pool blocks. Fixed shapes
+    everywhere — one trace serves every chunk of every request."""
+    table = batch["table"]                          # (max_blocks,) int32
+    bs = k_pool.shape[2]
+    L, _, _, K, hd = k_pool.shape
+    nb = table.shape[0]
+    k_prev = k_pool[:, table].reshape(L, 1, nb * bs, K, hd)
+    v_prev = v_pool[:, table].reshape(L, 1, nb * bs, K, hd)
+    logits, ks, vs = dense.prefill_chunk_core(params, cfg, {
+        "x": batch["x"], "positions": batch["positions"],
+        "k_prev": k_prev, "v_prev": v_prev,
+        "prev_len": batch["prev_len"], "last_idx": batch["last_idx"]})
+    k_pool, v_pool = dense.pool_write_prefill(k_pool, v_pool, ks, vs,
+                                              batch["chunk_blocks"])
+    return logits, k_pool, v_pool
 
-    The forward pass runs WITHOUT the pool lock (it doesn't read the
-    pool); only the block scatter holds it, so prefill latency never
-    stalls the batched decode loop. ψ_PD becomes a block-table handoff."""
+
+class PagedPrefillStage:
+    """P (paged): chunked prefill straight into shared pool blocks.
+
+    ``start`` admits a request (allocates its blocks, embeds the prompt);
+    ``run_chunk`` advances it one ``prefill_chunk``-token chunk per call,
+    so the scheduler can interleave decode steps between chunks of a long
+    prompt. Prompts that fit in one chunk (and the ``prefill_chunk=0``
+    baseline) take the original whole-prompt path — bit-identical to the
+    unchunked engine. ψ_PD stays a block-table handoff (PrefillProgress)."""
 
     def __init__(self, model, cfg: ArchConfig, params,
                  ecfg: EngineConfig, stats: ServeStats, kv: PagedKVState):
@@ -225,6 +254,11 @@ class PagedPrefillStage:
         self.params = params
         self.stats = stats
         self.kv = kv
+        bs = ecfg.kv_block_size
+        # chunks are block-aligned so each chunk's pool write is whole
+        # blocks (the final partial chunk pads into its own allocation)
+        self.chunk = (-(-ecfg.prefill_chunk // bs) * bs
+                      if ecfg.prefill_chunk > 0 else 0)
         # donate the pool buffers so XLA updates them in place instead of
         # copying the whole pool every step (CPU ignores donation and
         # warns, so only donate on accelerators)
@@ -234,33 +268,118 @@ class PagedPrefillStage:
         self._pool_write = jax.jit(
             dense.pool_write_prefill,
             donate_argnums=() if on_cpu else (0, 1))
+        self._chunk_step = jax.jit(
+            lambda p, kp, vp, b: _prefill_chunk_step(cfg, p, kp, vp, b),
+            donate_argnums=() if on_cpu else (1, 2))
 
-    def prefill(self, req: ServeRequest,
-                mm_tokens: Optional[np.ndarray]) -> Optional[tuple]:
-        """Returns None if the pool cannot hold the prompt right now."""
+    # ------------------------------------------------------------ admission
+    def start(self, req: ServeRequest, mm_tokens: Optional[np.ndarray]
+              ) -> Optional[PrefillProgress]:
+        """Admit a request: allocate its pool blocks and embed the prompt.
+
+        Returns None (without allocating) when the pool cannot hold the
+        prompt right now — the scheduler keeps the request at the head of
+        its FIFO admission queue (pool-pressure backoff)."""
         S = len(req.prompt)
         with self.kv.lock:
             # +1 headroom so the first decode write never needs append
             if not self.kv.mgr.can_allocate(S + 1):
                 return None
-            blocks = self.kv.mgr.allocate(req.req_id, S + 1)
+            self.kv.mgr.allocate(req.req_id, S + 1)
+            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+        toks = jnp.asarray(req.prompt)[None]
+        mm_t = (jnp.asarray(mm_tokens)[None]
+                if mm_tokens is not None else None)
+        mm_p = (jnp.asarray(req.mm_positions)[None]
+                if mm_tokens is not None else None)
+        # eager embed (a gather + scatter): chunks then slice the embedded
+        # prompt on the host, so mm-token merging never retraces per chunk
+        x = np.asarray(dense.embed_inputs(self.params, self.cfg, toks,
+                                          mm_t, mm_p)[0])
+        return PrefillProgress(req=req, x=x, mm_tokens=mm_tokens)
+
+    def abandon(self, task: PrefillProgress) -> None:
+        """Release a started task's blocks (failure / shutdown)."""
+        with self.kv.lock:
+            self.kv.mgr.free(task.req.req_id)
+
+    # --------------------------------------------------------------- chunks
+    def run_chunk(self, task: PrefillProgress) -> bool:
+        """Advance one chunk; True when the prompt is fully prefilled
+        (first token sampled + emitted, task ready for ψ_PD)."""
+        req = task.req
+        S = task.total
+        if self.chunk <= 0 or (task.n_done == 0 and S <= self.chunk):
+            return self._run_whole(task)
+        t0 = task.n_done
+        C = self.chunk
+        valid = min(C, S - t0)
+        bs = self.kv.mgr.block_size
+        xc = np.zeros((1, C) + task.x.shape[1:], task.x.dtype)
+        xc[0, :valid] = task.x[t0:t0 + valid]
+        with self.kv.lock:
+            owned = self.kv.mgr.owner_blocks(req.req_id)
+        table = np.full((self.kv.max_blocks,), self.kv.trash, np.int32)
+        table[:len(owned)] = owned
+        # this chunk's write targets; overflow past the allocation (final
+        # chunk padding) lands in the trash block
+        cb = np.full((C // bs,), self.kv.trash, np.int32)
+        first = t0 // bs
+        n_real = min(len(owned) - first, C // bs)
+        cb[:n_real] = owned[first:first + n_real]
+        batch = {
+            "x": jnp.asarray(xc),
+            "positions": jnp.arange(t0, t0 + C, dtype=jnp.int32)[None],
+            "table": jnp.asarray(table),
+            "chunk_blocks": jnp.asarray(cb),
+            "prev_len": jnp.int32(t0),
+            "last_idx": jnp.int32(valid - 1)}
+        with self.kv.pool_lock:
+            logits, self.kv.k_pool, self.kv.v_pool = self._chunk_step(
+                self.params, self.kv.k_pool, self.kv.v_pool, batch)
+        task.n_done += valid
+        self.stats.bump("prefill_chunks")
+        if not task.done:
+            return False
+        return self._finish_prefill(task, logits)
+
+    def _run_whole(self, task: PrefillProgress) -> bool:
+        """Unchunked path (short prompt, or the prefill_chunk=0 baseline):
+        bit-identical to the pre-scheduler whole-prompt prefill."""
+        req = task.req
         batch = {"tokens": jnp.asarray(req.prompt)[None]}
-        if mm_tokens is not None:
-            batch["mm_tokens"] = jnp.asarray(mm_tokens)[None]
+        if task.mm_tokens is not None:
+            batch["mm_tokens"] = jnp.asarray(task.mm_tokens)[None]
             batch["mm_positions"] = jnp.asarray(req.mm_positions)[None]
         with self.kv.lock:
-            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
-        ids = jnp.asarray(blocks, jnp.int32)
+            ids = jnp.asarray(self.kv.mgr.owner_blocks(req.req_id),
+                              jnp.int32)
         logits, ks, vs = self._prefill_core(self.params, batch)
         with self.kv.pool_lock:
             self.kv.k_pool, self.kv.v_pool = self._pool_write(
                 self.kv.k_pool, self.kv.v_pool, ks, vs, ids)
-        tok = _sample_one(logits, req)
-        req.emit(tok)
-        req.t_first_token = time.perf_counter()
-        # ψ_PD: block-table handoff — no cache copy. mm_tokens ride along
-        # so the decode stage can requeue the request on preemption.
-        return (req, tok, S, mm_tokens)
+        task.n_done = task.total
+        self.stats.bump("prefill_chunks")
+        return self._finish_prefill(task, logits)
+
+    def _finish_prefill(self, task: PrefillProgress, logits) -> bool:
+        tok = _sample_one(logits, task.req)
+        task.first_tok = tok
+        task.req.accept(tok)   # stop-at-first-token retires at D admission
+        task.req.t_first_token = time.perf_counter()
+        return True
+
+    # ------------------------------------------------------------- compat
+    def prefill(self, req: ServeRequest,
+                mm_tokens: Optional[np.ndarray]) -> Optional[PrefillProgress]:
+        """Whole-prompt convenience (standalone/stage tests): start + run
+        chunks to completion. None if the pool is full right now."""
+        task = self.start(req, mm_tokens)
+        if task is None:
+            return None
+        while not self.run_chunk(task):
+            pass
+        return task
 
 
 # ===================================================================== D
@@ -291,15 +410,18 @@ class DenseDecodeStage:
         nxt = []
         stepped = 0
         for req, tok, cache in self._active:
-            if len(req.tokens) >= req.max_new_tokens:
-                self.stats.sub_live(_cache_nbytes(cache))
+            if req.finished:               # failed externally (shutdown)
+                self.stats.sub_live(cache_nbytes(cache))
+                continue
+            if req.done_generating:        # length budget or stop token
+                self.stats.sub_live(cache_nbytes(cache))
                 self.on_finish(req)
                 continue
             logits, cache = self._decode(
                 self.params,
                 {"token": jnp.asarray([tok], jnp.int32), "cache": cache})
             tok = _sample_one(logits, req)
-            req.emit(tok)
+            req.accept(tok)                # stop latches; retires next pass
             stepped += 1
             nxt.append((req, tok, cache))
         if stepped:
@@ -314,7 +436,7 @@ class DenseDecodeStage:
         """Fail every in-flight request (step() raised); releases their
         cache accounting so the stage can keep serving new arrivals."""
         for req, _, cache in self._active:
-            self.stats.sub_live(_cache_nbytes(cache))
+            self.stats.sub_live(cache_nbytes(cache))
             on_fail(req)
         self._active = []
 
@@ -368,14 +490,15 @@ class PagedDecodeStage:
             if self._slots[i] is not None:
                 continue
             try:
-                req, tok, n_cached, mm_tokens = psi_pd.recv_nowait()
+                handoff: PrefillProgress = psi_pd.recv_nowait()
             except queue.Empty:
                 break
+            req = handoff.req
             with self.kv.lock:
                 blocks = self.kv.mgr.owner_blocks(req.req_id)
-            self._slots[i] = {"req": req, "mm_tokens": mm_tokens}
-            self._tokens[i] = tok
-            self._positions[i] = n_cached
+            self._slots[i] = {"req": req, "mm_tokens": handoff.mm_tokens}
+            self._tokens[i] = handoff.first_tok
+            self._positions[i] = handoff.total
             self._tables[i, :] = self.kv.trash
             self._tables[i, :len(blocks)] = blocks
             self._temps[i] = req.sampling.temperature
@@ -388,7 +511,12 @@ class PagedDecodeStage:
             if s is None:
                 continue
             req = s["req"]
-            if len(req.tokens) >= req.max_new_tokens:
+            if req.finished:                # failed externally (shutdown)
+                with self.kv.lock:
+                    self.kv.mgr.free(req.req_id)
+                self._slots[i] = None
+                self._tables[i, :] = self.kv.trash
+            elif req.done_generating:       # length budget or stop token
                 with self.kv.lock:
                     self.kv.mgr.free(req.req_id)
                 self.on_finish(req)
@@ -420,14 +548,20 @@ class PagedDecodeStage:
             self._slots[i] = None
             self._tables[i, :] = self.kv.trash
 
+    @property
+    def active_count(self) -> int:
+        """Occupied decode slots (the scheduler's decode token spend)."""
+        return sum(s is not None for s in self._slots)
+
     # -------------------------------------------------------------- step
-    def step(self, psi_pd: PsiPD) -> bool:
-        """One scheduler iteration; returns False when idle."""
+    def step(self, psi_pd: PsiPD) -> int:
+        """One scheduler iteration; returns the number of slots stepped
+        (0 = idle, falsy for the engine's idle-sleep check)."""
         self._admit(psi_pd)
         self._retire()
         active = np.array([s is not None for s in self._slots])
         if not active.any():
-            return False
+            return 0
 
         # grow allocations for this step's write; preempt on pressure
         for i, s in enumerate(self._slots):
@@ -450,7 +584,7 @@ class PagedDecodeStage:
                 self._tables[i, have:have + len(new)] = new
 
         if not active.any():
-            return True
+            return 0
         with self.kv.lock:
             self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
 
@@ -478,8 +612,8 @@ class PagedDecodeStage:
         for i, s in enumerate(self._slots):
             if s is None or not active[i]:
                 continue
-            s["req"].emit(int(nxt[i]))
-            self._tokens[i] = nxt[i]
+            s["req"].accept(int(nxt[i]))   # stop tokens latch, not emit;
+            self._tokens[i] = nxt[i]       # slot retires next iteration
             self._positions[i] += 1
             self._gen[i] += 1
-        return True
+        return int(active.sum())

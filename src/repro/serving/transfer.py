@@ -17,9 +17,46 @@ import hashlib
 import queue
 import threading
 from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import numpy as np
+
+
+def drain_queue(q: queue.Queue) -> list:
+    """Empty a queue without blocking (shutdown drains)."""
+    out = []
+    while True:
+        try:
+            out.append(q.get_nowait())
+        except queue.Empty:
+            return out
+
+
+@dataclass
+class PrefillProgress:
+    """ψ_PD payload: a request's (possibly partial) prefill state.
+
+    Chunked prefill writes prompt KV into pool blocks chunk-by-chunk;
+    this object carries the request between chunks (``n_done`` tokens
+    already cached) and, once complete (``done``), travels over ψ_PD to
+    the decode stage — the KV never moves, only this reference does.
+    ``x`` is the pre-embedded prompt (mm tokens merged at embed time) so
+    each chunk is a plain slice; ``mm_tokens`` rides along for the
+    preemption requeue path."""
+    req: Any
+    x: np.ndarray                        # (S, d) embedded prompt inputs
+    mm_tokens: Optional[np.ndarray]
+    n_done: int = 0                      # prompt tokens already in the pool
+    first_tok: Optional[int] = None      # sampled on the final chunk
+
+    @property
+    def total(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def done(self) -> bool:
+        return self.n_done >= self.total
 
 
 class MMTokenCache:
@@ -119,23 +156,35 @@ class PsiEP:
         """Next prefill-ready (req, mm_tokens); raises queue.Empty."""
         return self._q.get(timeout=timeout)
 
+    def recv_nowait(self):
+        """Non-blocking variant (scheduler drain); raises queue.Empty."""
+        return self._q.get_nowait()
+
+    def drain(self) -> list:
+        """Empty the channel (shutdown): every undelivered (req, mm)."""
+        return drain_queue(self._q)
+
 
 class PsiPD:
     """ψ_PD: prefill→decode handoff.
 
-    Paged mode sends ``(req, first_tok, n_cached, mm_tokens)`` — the KV
-    stays in the shared pool, only the block-table reference moves (the
-    decode stage reads the table from the block manager). Dense mode
-    sends ``(req, first_tok, cache)`` — a materialized cache move."""
+    Paged mode sends a completed ``PrefillProgress`` — the KV stays in
+    the shared pool, only the block-table reference moves (the decode
+    stage reads the table from the block manager). Dense mode sends
+    ``(req, first_tok, cache)`` — a materialized cache move."""
 
     def __init__(self):
         self._q: queue.Queue = queue.Queue()
         self.transfers = 0
 
-    def send(self, handoff: tuple) -> None:
+    def send(self, handoff) -> None:
         self.transfers += 1
         self._q.put(handoff)
 
-    def recv_nowait(self) -> tuple:
+    def recv_nowait(self):
         """Next handoff; raises queue.Empty when none pending."""
         return self._q.get_nowait()
+
+    def drain(self) -> list:
+        """Empty the channel (shutdown): every unadmitted handoff."""
+        return drain_queue(self._q)

@@ -32,14 +32,21 @@ class SamplingParams:
     ``temperature == 0`` is exact greedy (bit-identical to argmax);
     otherwise nucleus (top-p) sampling with a per-request PRNG seed, so
     the same request replayed — including after a preemption — emits the
-    same tokens."""
+    same tokens. A sampled token matching ``eos_id`` or any entry of
+    ``stop_tokens`` finishes the request with ``FinishReason.STOP``; the
+    matched token itself is not emitted (OpenAI "stop" semantics)."""
     temperature: float = 0.0
     top_p: float = 1.0
     seed: int = 0
+    stop_tokens: tuple = ()
+    eos_id: Optional[int] = None
 
     @property
     def greedy(self) -> bool:
         return self.temperature <= 0.0
+
+    def is_stop(self, tok: int) -> bool:
+        return tok == self.eos_id or tok in self.stop_tokens
 
     def validate(self) -> None:
         if not (0.0 <= self.temperature <= 2.0):
@@ -48,6 +55,13 @@ class SamplingParams:
             raise APIError(f"top_p out of range: {self.top_p}")
         if not (0 <= self.seed < 2 ** 32):   # becomes a uint32 PRNG seed
             raise APIError(f"seed must be a uint32: {self.seed}")
+        for t in (*self.stop_tokens,
+                  *(() if self.eos_id is None else (self.eos_id,))):
+            # accept numpy integers (token ids sliced out of a prompt
+            # array), reject bools masquerading as ints
+            if (isinstance(t, bool) or not isinstance(t, (int, np.integer))
+                    or t < 0):
+                raise APIError(f"stop/eos token ids must be ints >= 0: {t!r}")
 
 
 class RequestState(enum.Enum):
@@ -90,6 +104,15 @@ class EngineConfig:
     max_seq_len: int = 256             # block-table width cap per sequence
     # ψ_EP multimedia-token cache (paper §3.2.1); 0 disables caching
     mm_cache_entries: int = 32
+    # continuous-batching scheduler (paged mode): prompts longer than
+    # ``prefill_chunk`` prefill chunk-by-chunk between decode steps
+    # (0 = unchunked — whole prompt in one call, the stall baseline);
+    # ``step_token_budget`` caps tokens per scheduler iteration across
+    # decode slots + prefill chunks (0 = decode_batch + prefill_chunk;
+    # values below that floor are clamped up to it — a smaller budget
+    # would silently starve prefill whenever decode is busy)
+    prefill_chunk: int = 64
+    step_token_budget: int = 0
 
 
 @dataclass
@@ -113,6 +136,7 @@ class ServeRequest:
     t_done: float = 0.0
     tokens: list[int] = field(default_factory=list)
     n_preemptions: int = 0
+    stop_hit: bool = False          # a stop/eos token was sampled
     # streaming consumers wait on this for new tokens / terminal state
     _cv: threading.Condition = field(default_factory=threading.Condition,
                                      repr=False, compare=False)
@@ -146,12 +170,31 @@ class ServeRequest:
             self.tokens.append(int(tok))
             self._cv.notify_all()
 
+    def accept(self, tok: int) -> bool:
+        """Record one sampled token; returns True when generation is over.
+
+        Stop/eos tokens are latched (``stop_hit``) but NOT emitted —
+        OpenAI "stop" semantics exclude the matched token — so streams
+        simply terminate. The retire path turns ``stop_hit`` into
+        ``FinishReason.STOP`` (vs LENGTH)."""
+        if self.sampling.is_stop(int(tok)):
+            self.stop_hit = True
+            return True
+        self.emit(tok)
+        return len(self.tokens) >= self.max_new_tokens
+
+    @property
+    def done_generating(self) -> bool:
+        """Decode retire condition (stop token or length budget)."""
+        return self.stop_hit or len(self.tokens) >= self.max_new_tokens
+
     def reset_generation(self) -> None:
         """Preemption: drop generated tokens; the deterministic replay
         (greedy, or seeded sampling keyed on token index) re-emits the
         identical prefix, so open streams resume seamlessly."""
         with self._cv:
             self.tokens.clear()
+            self.stop_hit = False
             self.n_preemptions += 1
 
     def mark_done(self, reason: FinishReason) -> None:
@@ -187,13 +230,11 @@ class RequestHandle:
     def result(self, timeout: float = 300.0) -> ServeRequest:
         """Block until the request completes; returns the ServeRequest.
 
-        Safe to call after (or instead of) consuming ``stream()`` — a
-        request the stream already collected is answered from the handle's
-        own reference."""
-        if self.req.finished:
-            self.engine._collect(self.req.req_id)
-            return self.req
-        return self.engine.result(self.req.req_id, timeout=timeout)
+        Safe to call after (or instead of) consuming ``stream()``, and
+        safe concurrently WITH a stream consumer — the wait is on the
+        request's own terminal state, not a registry entry a concurrent
+        collector could steal."""
+        return self.engine._result_of(self.req, timeout)
 
     def stream(self, timeout: float = 300.0) -> Iterator[int]:
         """Yield tokens incrementally as the decode stage emits them.

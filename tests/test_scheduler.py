@@ -1,0 +1,435 @@
+"""Continuous-batching scheduler: chunked prefill correctness, FIFO
+admission with pool-pressure backoff (no head-of-line busy-wait),
+preempt-aware requeue, shutdown stranding, encode-stampede dedup, and
+submit-time length validation in both modes.
+
+The Scheduler itself is duck-typed over the P/D stages, so the policy
+tests (FIFO, backoff, budget, requeue-front) drive it with thread-free
+stubs; the math tests boot the real engine on a reduced model.
+"""
+import threading
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model, dense
+from repro.serving import (EPDEngine, EngineConfig, PrefillProgress,
+                           RequestState, SamplingParams, Scheduler,
+                           ServeRequest)
+from repro.serving.stages import PagedKVState, PagedPrefillStage, ServeStats
+from repro.serving.transfer import PsiEP, PsiPD, MMTokenCache
+
+
+@pytest.fixture(scope="module")
+def text_setup():
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _req(rid, n_prompt, max_new=4, cfg=None, seed=0, **kw):
+    rng = np.random.default_rng(seed + rid)
+    vocab = cfg.vocab if cfg else 512
+    # stub-scheduler requests arrive prefill-ready (as from ψ_EP)
+    kw.setdefault("state", RequestState.PREFILLING)
+    return ServeRequest(req_id=rid,
+                        prompt=rng.integers(0, vocab, n_prompt)
+                        .astype(np.int32),
+                        max_new_tokens=max_new, **kw)
+
+
+# ================================================== scheduler policy (stubs)
+class StubPrefill:
+    """Pool of ``capacity`` abstract blocks, 1 block per 16 tokens."""
+    chunk = 16
+
+    def __init__(self, capacity=4):
+        self.free = capacity
+        self.held = {}
+        self.chunk_calls = []          # req_id per run_chunk call
+
+    def start(self, req, mm_tokens):
+        need = -(-(len(req.prompt) + 1) // 16)
+        if need > self.free:
+            return None
+        self.free -= need
+        self.held[req.req_id] = need
+        return PrefillProgress(req=req, mm_tokens=mm_tokens,
+                               x=np.zeros((len(req.prompt), 1), np.float32))
+
+    def run_chunk(self, task):
+        self.chunk_calls.append(task.req.req_id)
+        task.n_done = min(task.total, task.n_done + self.chunk)
+        if task.done:
+            task.first_tok = 1
+            task.req.emit(1)
+            return True
+        return False
+
+    def abandon(self, task):
+        self.free += self.held.pop(task.req.req_id, 0)
+
+
+class StubDecode:
+    def __init__(self, prefill):
+        self.prefill = prefill
+        self.admitted = []             # req_ids in ψ_PD arrival order
+        self.live = []
+
+    @property
+    def active_count(self):
+        return len(self.live)
+
+    def step(self, psi_pd):
+        import queue as _q
+        while True:
+            try:
+                t = psi_pd.recv_nowait()
+            except _q.Empty:
+                break
+            self.admitted.append(t.req.req_id)
+            self.live.append(t)
+        done = [t for t in self.live
+                if len(t.req.tokens) >= t.req.max_new_tokens]
+        for t in done:
+            self.live.remove(t)
+            self.prefill.abandon(t)    # release stub blocks
+        stepped = len(self.live)
+        for t in self.live:
+            t.req.emit(2)
+        return stepped
+
+    def abort_all(self, on_fail):
+        for t in self.live:
+            on_fail(t.req)
+        self.live = []
+
+
+def _stub_sched(capacity=4, budget=0, decode_batch=4):
+    ecfg = EngineConfig(decode_batch=decode_batch, prefill_chunk=16,
+                        step_token_budget=budget)
+    pre = StubPrefill(capacity)
+    dec = StubDecode(pre)
+    stats = ServeStats()
+    psi_ep, psi_pd = PsiEP(MMTokenCache(0)), PsiPD()
+    failed = []
+    sched = Scheduler(ecfg, pre, dec, psi_ep, psi_pd, stats,
+                      threading.Event(),
+                      on_fail=lambda r, e: failed.append((r.req_id, e)))
+    sched.chunk = pre.chunk
+    sched.budget = budget or (decode_batch + pre.chunk)
+    return sched, pre, dec, psi_ep, stats, failed
+
+
+def test_admission_is_fifo_with_pool_backoff():
+    """A full pool holds the FIFO head in place (backoff) — later
+    arrivals must not jump the queue and starve it."""
+    sched, pre, dec, psi_ep, stats, _ = _stub_sched(capacity=3)
+    big = _req(1, 40, max_new=1)     # 3 blocks: fills the pool alone
+    small = _req(2, 8, max_new=1)    # would fit in the leftover... never
+    third = _req(3, 8, max_new=1)
+    for r in (big, small, third):
+        psi_ep.send(r, None)
+    for _ in range(50):
+        sched.step()
+        if len(dec.admitted) == 3:
+            break
+    # strict FIFO: big admitted first even though small fits sooner
+    assert dec.admitted == [1, 2, 3]
+    assert stats.data["admission_backoffs"] >= 1
+
+
+def test_preempted_request_requeues_at_front():
+    sched, pre, dec, psi_ep, stats, _ = _stub_sched(capacity=10)
+    r1, r2 = _req(1, 8, max_new=1), _req(2, 8, max_new=1)
+    psi_ep.send(r1, None)
+    victim = _req(9, 8, max_new=1)
+    victim.state = RequestState.PREFILLING
+    sched.requeue(victim, None)      # preemption: front of the line
+    psi_ep.send(r2, None)
+    for _ in range(20):
+        sched.step()
+        if len(dec.admitted) == 3:
+            break
+    assert dec.admitted[0] == 9
+
+
+def test_token_budget_caps_chunks_per_iteration():
+    """With decode slots active, prefill chunks per iteration are limited
+    to the leftover budget — decode is never starved by a long prompt."""
+    sched, pre, dec, psi_ep, stats, _ = _stub_sched(
+        capacity=64, budget=32, decode_batch=4)
+    # keep decode busy so the stepped>0 path is exercised
+    runner = _req(50, 8, max_new=30)
+    psi_ep.send(runner, None)
+    sched.step()                      # admits + completes runner's prefill
+    sched.step()                      # decode now live
+    assert dec.active_count == 1
+    long_req = _req(51, 160, max_new=1)     # 10 chunks of 16
+    psi_ep.send(long_req, None)
+    calls_before = len(pre.chunk_calls)
+    sched.step()
+    calls = len(pre.chunk_calls) - calls_before
+    # budget 32, decode spent 1 -> floor((32-1)/16) = 1 chunk this iter
+    assert calls == 1
+    # and the long prompt still completes across iterations
+    for _ in range(30):
+        sched.step()
+        if 51 in dec.admitted:
+            break
+    assert 51 in dec.admitted
+
+
+def test_idle_decode_still_guarantees_prefill_progress():
+    """budget smaller than one chunk: a chunk must still run when decode
+    is idle (guaranteed progress, no livelock)."""
+    sched, pre, dec, psi_ep, stats, _ = _stub_sched(capacity=8, budget=4)
+    psi_ep.send(_req(1, 60, max_new=1), None)    # 4 chunks
+    n = 0
+    while 1 not in dec.admitted and n < 50:
+        sched.step()
+        n += 1
+    assert 1 in dec.admitted
+
+
+def test_scheduler_drain_returns_stranded():
+    sched, pre, dec, psi_ep, stats, _ = _stub_sched(capacity=3)
+    a, b = _req(1, 40, max_new=1), _req(2, 40, max_new=1)
+    psi_ep.send(a, None)
+    psi_ep.send(b, None)
+    sched.step()                      # admits a (pool now full), b queued
+    stranded = sched.drain()
+    assert {r.req_id for r in stranded} == {1, 2}
+    assert pre.free == 3              # a's blocks released by abandon
+
+
+# ===================================================== chunked prefill math
+def test_chunked_prefill_logits_match_unchunked(text_setup):
+    """Chunk-by-chunk prefill through pool blocks reproduces the one-shot
+    prefill_core logits to bf16 rounding (the KV pool stores bf16; only
+    reduction order differs)."""
+    cfg, params = text_setup
+    model = build_model(cfg)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, 100).astype(np.int32)
+    ref_logits, _, _ = dense.prefill_core(
+        params, cfg, {"tokens": jnp.asarray(prompt)[None]})
+
+    ecfg = EngineConfig(decode_batch=2, kv_blocks=64, max_seq_len=256,
+                        prefill_chunk=32)
+    stats = ServeStats()
+    kv = PagedKVState(model, cfg, ecfg)
+    stage = PagedPrefillStage(model, cfg, params, ecfg, stats, kv)
+    req = ServeRequest(req_id=1, prompt=prompt, max_new_tokens=4)
+    captured = {}
+    orig = stage._finish_prefill
+    stage._finish_prefill = (
+        lambda t, lg: captured.update(l=np.asarray(lg, np.float32))
+        or orig(t, lg))
+    task = stage.start(req, None)
+    n_chunks = 0
+    while not stage.run_chunk(task):
+        n_chunks += 1
+    assert n_chunks + 1 == 4                   # 100 tokens / 32-chunks
+    np.testing.assert_allclose(captured["l"],
+                               np.asarray(ref_logits, np.float32),
+                               atol=0.05)      # few bf16 ULPs
+    kv.mgr.free(1)
+    assert kv.mgr.used_blocks == 0
+
+
+def test_chunked_engine_is_deterministic_and_completes(text_setup):
+    """Long prompts through the chunked scheduler: token output is
+    run-to-run deterministic and the chunk counter advances."""
+    cfg, params = text_setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 90).astype(np.int32)
+    runs = []
+    for _ in range(2):
+        eng = EPDEngine(cfg, params, EngineConfig(
+            decode_batch=2, kv_blocks=64, max_seq_len=256,
+            prefill_chunk=32))
+        eng.start()
+        try:
+            eng.submit(ServeRequest(req_id=1, prompt=prompt.copy(),
+                                    max_new_tokens=6))
+            runs.append(eng.result(1, timeout=300).tokens)
+        finally:
+            eng.stop()
+        assert eng.stats["prefill_chunks"] >= 3
+        assert eng.kv_mgr.used_blocks == 0
+    assert runs[0] == runs[1] and len(runs[0]) == 6
+
+
+def test_chunked_replay_after_preemption_is_identical(text_setup):
+    """A preempted long-prompt request replays through chunked prefill
+    and re-emits the identical token prefix."""
+    cfg, params = text_setup
+    rng = np.random.default_rng(4)
+    # 44-token prompts: prefill takes 3 blocks (45 tokens), the 49th
+    # token's append needs a 4th — with 20 new tokens both requests are
+    # mid-decode when the 7-block pool runs dry, forcing an OutOfBlocks
+    # preemption whose victim replays through chunked prefill
+    prompts = [rng.integers(0, cfg.vocab, 44).astype(np.int32)
+               for _ in range(2)]
+    outs = {}
+    for name, blocks in (("ample", 64), ("tight", 7)):
+        eng = EPDEngine(cfg, params, EngineConfig(
+            decode_batch=2, kv_blocks=blocks, kv_block_size=16,
+            max_seq_len=112, prefill_chunk=16))
+        eng.start()
+        try:
+            for i, p in enumerate(prompts):
+                eng.submit(ServeRequest(req_id=i + 1, prompt=p.copy(),
+                                        max_new_tokens=20))
+            outs[name] = [eng.result(i + 1, timeout=300).tokens
+                          for i in range(2)]
+        finally:
+            eng.stop()
+        if name == "tight":
+            assert eng.stats["preemptions"] >= 1
+        assert eng.kv_mgr.used_blocks == 0
+    assert outs["ample"] == outs["tight"]
+
+
+# ==================================================== shutdown stranding
+def test_stop_fails_inflight_decode_and_queued_requests(text_setup):
+    """Regression: stop() must fail requests parked anywhere in the
+    pipeline (decoding, pool-pressure backoff queue) so result()/stream()
+    return promptly instead of hanging to their timeout."""
+    cfg, params = text_setup
+    rng = np.random.default_rng(6)
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=3, kv_block_size=16, max_seq_len=48))
+    eng.start()
+    # r1 occupies the pool and decodes; r2 waits in the admission queue
+    h1 = eng.submit(ServeRequest(
+        req_id=1, prompt=rng.integers(0, cfg.vocab, 30).astype(np.int32),
+        max_new_tokens=16))
+    h2 = eng.submit(ServeRequest(
+        req_id=2, prompt=rng.integers(0, cfg.vocab, 30).astype(np.int32),
+        max_new_tokens=16))
+    time.sleep(0.3)
+    eng.stop()
+    t0 = time.perf_counter()
+    for h in (h1, h2):
+        out = h.result(timeout=10)       # would TimeoutError pre-fix
+        if out.state is RequestState.FAILED:
+            assert "stopped" in out.error
+        else:                            # finished before stop() landed
+            assert out.state is RequestState.DONE
+    assert time.perf_counter() - t0 < 5.0
+    assert eng.kv_mgr.used_blocks == 0   # stranded blocks released
+    assert eng._threads == []
+
+
+def test_stop_fails_streaming_consumer(text_setup):
+    cfg, params = text_setup
+    rng = np.random.default_rng(8)
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=64, max_seq_len=256))
+    eng.start()
+    h = eng.submit(ServeRequest(
+        req_id=1, prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+        max_new_tokens=200))
+    it = h.stream(timeout=30)
+    next(it)                             # at least one token flowing
+    eng.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        for _ in it:
+            pass
+
+def test_stop_fails_dense_mode_residents(text_setup):
+    cfg, params = text_setup
+    rng = np.random.default_rng(9)
+    eng = EPDEngine(cfg, params, EngineConfig(
+        mode="dense", decode_batch=2, max_seq_len=256))
+    eng.start()
+    handles = [eng.submit(ServeRequest(
+        req_id=i, prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+        max_new_tokens=120)) for i in (1, 2, 3)]
+    time.sleep(0.2)
+    eng.stop()
+    for h in handles:
+        out = h.result(timeout=10)
+        assert out.state in (RequestState.FAILED, RequestState.DONE)
+
+
+# ================================================== encode anti-stampede
+def test_concurrent_identical_mm_submits_share_one_encode(vlm_setup):
+    """Two byte-identical multimodal submissions in flight together must
+    run ONE request's worth of IRP shards — the second waits for the
+    first's merged tokens instead of stampeding the encoder."""
+    cfg, params = vlm_setup
+    rng = np.random.default_rng(12)
+    M = 2 * cfg.modality.tokens_per_item
+    mm = (rng.standard_normal((M, cfg.modality.enc_d_model))
+          .astype(np.float32) * 0.1)
+    prompt = np.arange(M + 6, dtype=np.int32) % cfg.vocab
+
+    def mk(rid):
+        return ServeRequest(req_id=rid, prompt=prompt.copy(),
+                            mm_embeds=mm.copy(),
+                            mm_positions=np.arange(1, M + 1,
+                                                   dtype=np.int32),
+                            max_new_tokens=4)
+
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=2, kv_blocks=64, max_seq_len=128))
+    # submit BOTH before starting the workers: deterministically
+    # simultaneous — both miss the ψ_EP cache
+    h1, h2 = eng.submit(mk(1)), eng.submit(mk(2))
+    n_shards = len(eng.encode_stage.plan_shards(mk(99)))
+    eng.start()
+    try:
+        o1, o2 = h1.result(timeout=300), h2.result(timeout=300)
+    finally:
+        eng.stop()
+    assert eng.encode_stage.shards_run == n_shards   # one request's worth
+    assert o1.tokens == o2.tokens
+    assert o2.mm_cache_hit                           # joined in flight
+    assert eng.stats["mm_inflight_hits"] == 1
+    assert eng.stats["mm_cache_misses"] == 2         # both probed & missed
+
+
+# ============================================== submit-time validation
+def test_submit_length_validation_in_both_modes(text_setup):
+    """Dense mode now rejects oversized prompts at submit (previously an
+    opaque prefill failure); paged keeps the pool-capacity bound."""
+    cfg, params = text_setup
+    dense_eng = EPDEngine(cfg, params, EngineConfig(
+        mode="dense", max_seq_len=32))
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        dense_eng.submit(ServeRequest(req_id=1,
+                                      prompt=np.zeros(30, np.int32),
+                                      max_new_tokens=8))
+    # boundary: prompt + max_new == cap is admissible (the dead
+    # max(S+max_new, S+1) expression is gone; S+1 never binds)
+    ok = ServeRequest(req_id=2, prompt=np.zeros(24, np.int32),
+                      max_new_tokens=8)
+    handle = dense_eng.submit(ok)
+    assert handle.req_id == 2
+    paged_eng = EPDEngine(cfg, params, EngineConfig(
+        kv_blocks=2, kv_block_size=16, max_seq_len=64))
+    with pytest.raises(ValueError, match="pool"):
+        paged_eng.submit(ServeRequest(req_id=3,
+                                      prompt=np.zeros(30, np.int32),
+                                      max_new_tokens=8))
+    # max_new_tokens=0 must be rejected: prefill always needs S+1 block
+    # capacity, so a prompt exactly filling the pool would pass the
+    # length check yet wedge the admission queue head forever
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        paged_eng.submit(ServeRequest(req_id=4,
+                                      prompt=np.zeros(8, np.int32),
+                                      max_new_tokens=0))

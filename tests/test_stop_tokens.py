@@ -1,0 +1,206 @@
+"""Stop-token finish semantics end-to-end (tentpole rider): a sampled
+token matching ``SamplingParams.stop_tokens``/``eos_id`` produces
+``FinishReason.STOP`` with the matched token excluded (OpenAI "stop"
+semantics) — identical across dense/paged engines, under seeded
+sampling, across a forced preemption replay, and through streaming.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (EPDEngine, EngineConfig, FinishReason,
+                           RequestState, SamplingParams, ServeRequest)
+from repro.serving.api import chat_completion, parse_chat_request
+from repro.serving.types import APIError
+
+
+@pytest.fixture(scope="module")
+def text_setup():
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, prompt, max_new, sampling=SamplingParams(),
+         mode="paged", **ecfg_kw):
+    kw = dict(decode_batch=2, kv_blocks=32, max_seq_len=64, mode=mode)
+    kw.update(ecfg_kw)
+    eng = EPDEngine(cfg, params, EngineConfig(**kw))
+    eng.start()
+    try:
+        eng.submit(ServeRequest(req_id=1, prompt=prompt.copy(),
+                                max_new_tokens=max_new, sampling=sampling))
+        return eng.result(1, timeout=300), eng
+    finally:
+        eng.stop()
+
+
+def _prompt(cfg, n=12, seed=0):
+    return np.random.default_rng(seed).integers(0, cfg.vocab, n) \
+        .astype(np.int32)
+
+
+def test_greedy_stop_identical_across_modes(text_setup):
+    """Pick the 4th greedy token as the stop token: both engines must
+    emit exactly the first 3 tokens and finish with STOP."""
+    cfg, params = text_setup
+    prompt = _prompt(cfg)
+    ref, _ = _run(cfg, params, prompt, 8)
+    assert ref.finish_reason is FinishReason.LENGTH
+    stop = ref.tokens[3]
+    expect = ref.tokens[:ref.tokens.index(stop)]
+    for mode in ("paged", "dense"):
+        out, _ = _run(cfg, params, prompt, 8, mode=mode,
+                      sampling=SamplingParams(stop_tokens=(stop,)))
+        assert out.tokens == expect, mode
+        assert out.finish_reason is FinishReason.STOP, mode
+        assert not any(t == stop for t in out.tokens)
+
+
+def test_eos_id_finishes_with_stop(text_setup):
+    cfg, params = text_setup
+    prompt = _prompt(cfg, seed=1)
+    ref, _ = _run(cfg, params, prompt, 6)
+    out, _ = _run(cfg, params, prompt, 6,
+                  sampling=SamplingParams(eos_id=ref.tokens[2]))
+    assert out.tokens == ref.tokens[:ref.tokens.index(ref.tokens[2])]
+    assert out.finish_reason is FinishReason.STOP
+
+
+def test_stop_at_first_token_yields_empty_output(text_setup):
+    """The stop token can be the prefill's first sample: zero tokens,
+    STOP, and the request still flows through D's retire path cleanly."""
+    cfg, params = text_setup
+    prompt = _prompt(cfg, seed=2)
+    ref, _ = _run(cfg, params, prompt, 4)
+    out, eng = _run(cfg, params, prompt, 4,
+                    sampling=SamplingParams(stop_tokens=(ref.tokens[0],)))
+    assert out.tokens == [] and out.finish_reason is FinishReason.STOP
+    assert eng.kv_mgr.used_blocks == 0
+
+
+def test_seeded_sampling_stop_is_deterministic(text_setup):
+    """Nucleus-sampled stop in both engines: same seed -> same truncated
+    output + STOP. Each mode is compared against its own seeded reference
+    (the two decode kernels differ by float ULPs, which can flip samples
+    near a nucleus boundary — greedy cross-mode parity is covered above)."""
+    cfg, params = text_setup
+    prompt = _prompt(cfg, seed=3)
+    samp = SamplingParams(temperature=0.9, top_p=0.9, seed=71)
+    for mode in ("paged", "dense"):
+        ref, _ = _run(cfg, params, prompt, 8, sampling=samp, mode=mode)
+        assert len(ref.tokens) == 8, mode
+        stop = ref.tokens[4]
+        stop_samp = SamplingParams(temperature=0.9, top_p=0.9, seed=71,
+                                   stop_tokens=(stop,))
+        out, _ = _run(cfg, params, prompt, 8, sampling=stop_samp,
+                      mode=mode)
+        # sampling is keyed on (seed, token index): the prefix matches
+        # the unstopped run exactly, then the stop token is excluded
+        assert out.tokens == ref.tokens[:ref.tokens.index(stop)], mode
+        assert out.finish_reason is FinishReason.STOP, mode
+
+
+def test_stop_survives_preemption_replay(text_setup):
+    """A preempted request's deterministic replay must re-derive the
+    same stop decision (tokens + STOP) as an uncontended run."""
+    cfg, params = text_setup
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, 15).astype(np.int32)
+               for _ in range(2)]
+    # uncontended reference (big pool)
+    refs = []
+    for i, p in enumerate(prompts):
+        out, _ = _run(cfg, params, p, 8, kv_blocks=32)
+        refs.append(out.tokens)
+    stops = [r[6] for r in refs]
+    # tight pool (3 blocks): the first append crosses a block boundary,
+    # so two concurrent requests force a preemption (same geometry as
+    # test_out_of_blocks_preempts_and_recovers)
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=1, decode_batch=2, kv_blocks=3, kv_block_size=16,
+        max_seq_len=64))
+    eng.start()
+    try:
+        for i, p in enumerate(prompts):
+            eng.submit(ServeRequest(
+                req_id=i + 1, prompt=p.copy(), max_new_tokens=8,
+                sampling=SamplingParams(stop_tokens=(stops[i],))))
+        outs = [eng.result(i + 1, timeout=300) for i in range(2)]
+    finally:
+        eng.stop()
+    assert eng.stats["preemptions"] >= 1
+    for i, out in enumerate(outs):
+        assert out.tokens == refs[i][:refs[i].index(stops[i])]
+        assert out.finish_reason is FinishReason.STOP
+
+
+def test_streaming_terminates_on_stop_without_timeout(text_setup):
+    """A stream over a stopped request ends cleanly (no timeout path):
+    the stop token is never yielded."""
+    cfg, params = text_setup
+    prompt = _prompt(cfg, seed=5)
+    ref, _ = _run(cfg, params, prompt, 6)
+    stop = ref.tokens[2]
+    expect = ref.tokens[:ref.tokens.index(stop)]
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=32, max_seq_len=64))
+    eng.start()
+    try:
+        handle = eng.submit(ServeRequest(
+            req_id=1, prompt=prompt.copy(), max_new_tokens=6,
+            sampling=SamplingParams(stop_tokens=(stop,))))
+        streamed = list(handle.stream(timeout=30))   # must not TimeoutError
+        out = handle.result(timeout=30)
+    finally:
+        eng.stop()
+    assert streamed == expect == out.tokens
+    assert out.finish_reason is FinishReason.STOP
+    assert out.state is RequestState.DONE
+
+
+def test_long_prompt_chunked_stop(text_setup):
+    """Stop tokens compose with chunked prefill: the first token sampled
+    off the final chunk can itself be the stop."""
+    cfg, params = text_setup
+    prompt = _prompt(cfg, n=80, seed=6)
+    ref, _ = _run(cfg, params, prompt, 4, kv_blocks=64, max_seq_len=128,
+                  prefill_chunk=32)
+    out, eng = _run(cfg, params, prompt, 4, kv_blocks=64, max_seq_len=128,
+                    prefill_chunk=32,
+                    sampling=SamplingParams(stop_tokens=(ref.tokens[0],)))
+    assert eng.stats["prefill_chunks"] >= 3
+    assert out.tokens == [] and out.finish_reason is FinishReason.STOP
+
+
+def test_api_carries_stop_token_ids(text_setup):
+    cfg, params = text_setup
+    payload = {"messages": [{"role": "user",
+                             "content": "alpha beta gamma delta"}],
+               "max_tokens": 6}
+    eng = EPDEngine(cfg, params, EngineConfig(
+        decode_batch=2, kv_blocks=32, max_seq_len=64))
+    eng.start()
+    try:
+        ref = chat_completion(eng, payload)
+        ids = ref["choices"][0]["token_ids"]
+        stopped = chat_completion(eng, dict(payload,
+                                            stop_token_ids=[ids[1]]))
+    finally:
+        eng.stop()
+    choice = stopped["choices"][0]
+    assert choice["finish_reason"] == "stop"
+    assert choice["token_ids"] == ids[:ids.index(ids[1])]
+    assert stopped["usage"]["completion_tokens"] == len(choice["token_ids"])
+
+
+def test_api_rejects_bad_stop_ids(text_setup):
+    cfg, _ = text_setup
+    with pytest.raises(APIError, match="stop/eos"):
+        parse_chat_request(cfg, {
+            "messages": [{"role": "user", "content": "x"}],
+            "stop_token_ids": [-3]})
+    with pytest.raises(APIError, match="stop/eos"):
+        SamplingParams(eos_id=-1).validate()
