@@ -1,0 +1,173 @@
+"""Role-switch benchmark: goodput under a workload SHIFT (paper §3.2.4 /
+Table 6), on the REAL multi-instance cluster engine.
+
+Workload: an encode-heavy phase (multimodal payloads, short outputs)
+followed by a decode-heavy phase (text-only, long outputs), run twice on
+a "2E1P1D" cluster:
+
+  static      role_switch off — the second E instance idles while the
+              single D instance grinds through the decode backlog
+  dynamic     role_switch on — the monitor observes the LoadEstimator's
+              demand shift and re-roles an idle E instance to D
+              (drain -> swap stage set/pools -> cooldown), doubling
+              decode slots mid-run
+
+Reported metrics are structural + throughput: completed requests (all
+must finish — zero stranded), observed switches (>= 1 in the dynamic
+run), decode tok/s over the shifted phase, and phase wall-clock for
+reference only (this container's timings are noisy; CI asserts the
+structural rows, never timing ratios).
+
+    PYTHONPATH=src python benchmarks/role_switch.py [--quick]
+"""
+from __future__ import annotations
+
+if __package__ in (None, ""):
+    import os
+    import sys
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+
+WALL_BOUND_S = 420.0       # --quick must finish inside this (CI smoke)
+
+
+def role_switch_stats(quick: bool = False,
+                      arch: str = "pixtral-12b") -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                               RequestState, ServeRequest)
+
+    cfg = get_config(arch).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n_enc = 4 if quick else 8              # encode-heavy phase requests
+    n_dec = 8 if quick else 16             # decode-heavy phase requests
+    long_out = 24 if quick else 48
+
+    out = {}
+    for label, switch in (("static", False), ("dynamic", True)):
+        rng = np.random.default_rng(0)
+        clu = ClusterEngine(
+            cfg, params,
+            EngineConfig(n_encode_workers=2, max_new_tokens=long_out,
+                         decode_batch=2),
+            ClusterConfig(spec="2E1P1D", role_switch=switch,
+                          monitor_interval=0.1, switch_cooldown=0.5))
+        clu.start()
+        rid = 0
+        t0 = time.perf_counter()
+        # ---- phase 1: encode-heavy (mm payloads, 2-token outputs)
+        M = 2 * cfg.modality.tokens_per_item
+        ids = []
+        for _ in range(n_enc):
+            clu.submit(ServeRequest(
+                req_id=rid,
+                prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                mm_embeds=rng.standard_normal(
+                    (M, cfg.modality.enc_d_model)).astype(np.float32) * 0.1,
+                mm_positions=np.arange(1, M + 1, dtype=np.int32),
+                max_new_tokens=2))
+            ids.append(rid)
+            rid += 1
+        outs = [clu.result(i, timeout=600) for i in ids]
+        # ---- phase 2: decode-heavy (text-only, long outputs)
+        t1 = time.perf_counter()
+        tok0 = clu.stats["decode_tokens"]
+        ids = []
+        for _ in range(n_dec):
+            clu.submit(ServeRequest(
+                req_id=rid,
+                prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new_tokens=long_out))
+            ids.append(rid)
+            rid += 1
+            time.sleep(0.01)
+        outs += [clu.result(i, timeout=600) for i in ids]
+        phase2_wall = time.perf_counter() - t1
+        # let an in-flight re-role finish so the counters are final
+        deadline = time.time() + 10.0
+        while (switch and clu.stats["role_switches"] == 0
+               and any(i._pending_role is not None for i in clu.instances)
+               and time.time() < deadline):
+            time.sleep(0.05)
+        clu.stop()
+        s = clu.stats
+        done = sum(o.state is RequestState.DONE for o in outs)
+        out[label] = {
+            "completed": done,
+            "stranded": len(outs) - done,
+            "switches": s["role_switches"],
+            "switch_log": list(clu.switch_log),
+            "final_roles": clu.current_roles(),
+            "phase2_decode_tokens": s["decode_tokens"] - tok0,
+            "phase2_wall_s": phase2_wall,
+            "phase2_tok_s": (s["decode_tokens"] - tok0) / max(phase2_wall,
+                                                              1e-9),
+            "pd_migrations": s["pd_migrations"],
+            "role_seconds": dict(s["role_seconds"]),
+            "total_wall_s": time.perf_counter() - t0,
+        }
+    return out
+
+
+def run(quick: bool = False) -> list:
+    """benchmarks.run entry point."""
+    return rows(quick=quick)
+
+
+def rows(quick: bool = False) -> list:
+    st = role_switch_stats(quick=quick)
+    out = []
+    for label in ("static", "dynamic"):
+        d = st[label]
+        out.append(Row(
+            name=f"role_switch/{label}",
+            us_per_call=d["phase2_wall_s"] * 1e6,
+            derived=f"{d['phase2_tok_s']:.1f} tok/s "
+                    f"switches={d['switches']} stranded={d['stranded']}",
+            extra=d))
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    st = role_switch_stats(quick=args.quick)
+    for label in ("static", "dynamic"):
+        d = st[label]
+        moves = ", ".join(f"i{i}:{o}->{n}" for _, i, o, n in
+                          d["switch_log"][:4])
+        print(f"{label:8s} completed={d['completed']:3d} "
+              f"stranded={d['stranded']} switches={d['switches']} "
+              f"phase2={d['phase2_tok_s']:7.1f} tok/s "
+              f"roles={''.join(d['final_roles'])}"
+              + (f"  [{moves}]" if moves else ""))
+
+    # CI smoke assertions: structural only (never timing ratios)
+    assert st["static"]["stranded"] == 0, "static run stranded requests"
+    assert st["dynamic"]["stranded"] == 0, "dynamic run stranded requests"
+    assert st["static"]["switches"] == 0
+    assert st["dynamic"]["switches"] >= 1, \
+        "dynamic run observed no role switch under the workload shift"
+    first = st["dynamic"]["switch_log"][0]
+    assert (first[2], first[3]) == ("E", "D"), first
+    if args.quick:
+        wall = time.perf_counter() - t0
+        assert wall < WALL_BOUND_S, f"role-switch smoke too slow: {wall:.0f}s"
+    print("role-switch benchmark OK")
+
+
+if __name__ == "__main__":
+    main()

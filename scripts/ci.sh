@@ -1,16 +1,44 @@
 #!/usr/bin/env bash
-# Tier-1 verify + benchmark smoke. Run from the repo root.
+# Tiered CI. Run from the repo root:
 #
-# NOTE: 5 seed-era tests are known-failing (dryrun x2, hlo_analysis x2,
-# moe_shard_map x1 — jax.shard_map API drift); the exit code goes red until
-# a PR fixes them, but the benchmark smoke still runs so every CI log has
-# the full picture.
+#   scripts/ci.sh          # fast tier (default): unit + parity, < 2 min
+#   scripts/ci.sh full     # full tier: whole suite (~10 min) + benchmarks
+#
+# The fast tier is the inner-loop check: pure-python unit tests plus the
+# ClusterEngine("1EPD") greedy bit-identical parity test. The full tier
+# is what a merge gate runs — the entire pytest suite (including the
+# `slow`-marked cluster soak tests) and the benchmark smokes.
+#
+# NOTE: 2 seed-era tests are known-failing (hlo_analysis x2 — XLA
+# cost-analysis drift); the full-tier exit code goes red until a PR
+# fixes them, but the benchmark smoke still runs so every CI log has
+# the full picture. (The 4 former jax.shard_map failures are fixed via
+# repro/compat.py.)
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "== tier-1: pytest =="
+TIER="${1:-fast}"
+
+if [ "$TIER" = "fast" ]; then
+    echo "== fast tier: unit + cluster parity (target < 2 min) =="
+    python -m pytest -q -m "not slow" \
+        tests/test_block_manager.py \
+        tests/test_simulator.py \
+        tests/test_api_load.py \
+        tests/test_scheduler.py \
+        "tests/test_cluster_engine.py::test_1epd_greedy_parity_bit_identical" \
+        "tests/test_cluster_engine.py::test_spec_and_config_validation"
+    exit $?
+fi
+
+if [ "$TIER" != "full" ]; then
+    echo "usage: scripts/ci.sh [fast|full]" >&2
+    exit 2
+fi
+
+echo "== tier-1: pytest (full suite, includes slow cluster soak) =="
 python -m pytest -q
 tier1=$?
 
@@ -20,6 +48,9 @@ python benchmarks/offline_throughput.py --quick || exit 1
 echo "== smoke: EPD serve example (streaming + mm-token cache) =="
 python examples/epd_serve.py --requests 4 --new-tokens 4 || exit 1
 
+echo "== smoke: cluster serve example (2E1P1D, migrations) =="
+python examples/cluster_serve.py --requests 4 --new-tokens 4 || exit 1
+
 echo "== smoke: engine TTFT + mm-cache-hit benchmark (quick) =="
 python benchmarks/ttft.py --quick --engine-only || exit 1
 
@@ -28,6 +59,11 @@ echo "== smoke: mixed-load scheduler (long prefill mid-decode, chunked) =="
 # unchunked baseline stalls, stop-token requests finish with "stop", and
 # the quick run stays under its wall-clock bound
 python benchmarks/mixed_load.py --quick || exit 1
+
+echo "== smoke: role-switch benchmark (workload shift, switching on/off) =="
+# asserts >= 1 observed role switch with switching on and zero stranded
+# requests in both runs
+python benchmarks/role_switch.py --quick || exit 1
 
 echo "CI done (tier-1 exit: $tier1)"
 exit "$tier1"

@@ -1,0 +1,46 @@
+"""Version-compat shims for jax API drift.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check keyword was renamed
+``check_rep`` -> ``check_vma`` along the way. Call sites in this repo use
+the NEW spelling (``jax.shard_map``-style signature with ``check_vma``);
+this shim translates for interpreters that only ship the experimental
+variant, so the same code runs on both sides of the move.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "cost_analysis"]
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``.
+
+    Newer jax returns one flat ``{counter: value}`` dict; older versions
+    return a per-device list of such dicts (single-device compiles: a
+    one-element list). Returns the flat dict either way, ``{}`` when the
+    backend provides nothing.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` on new jax; the experimental fallback otherwise.
+
+    Three vintages exist: experimental-only (``check_rep``), top-level
+    with ``check_rep`` (the move predates the rename), and top-level with
+    ``check_vma`` — hence the TypeError fallback, not just hasattr."""
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check_vma)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)

@@ -9,6 +9,7 @@ monitor and the allocator consume.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 from repro.configs.base import ArchConfig
@@ -28,20 +29,35 @@ class LoadEstimator:
     _output_len: float = 0.0
     _last_t: float = -1.0
     _n: int = 0
+    # the real engine observes from concurrent submit() threads while the
+    # role-switch monitor reads demand; the simulator is single-threaded
+    # and pays only an uncontended acquire
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False, compare=False)
 
     def observe(self, req: Request, now: float) -> None:
-        if self._last_t >= 0:
-            dt = max(now - self._last_t, 1e-6)
-            inst_rate = 1.0 / dt
-            a = self._alpha(dt)
-            self._rate = (1 - a) * self._rate + a * inst_rate
-        self._last_t = now
-        a = 0.2 if self._n >= 5 else 1.0 / (self._n + 1)
-        self._patches = (1 - a) * self._patches + a * req.n_patches
-        self._prefill_tokens = ((1 - a) * self._prefill_tokens
-                                + a * req.prefill_tokens)
-        self._output_len = (1 - a) * self._output_len + a * req.output_len
-        self._n += 1
+        self.observe_raw(now, n_patches=req.n_patches,
+                         prefill_tokens=req.prefill_tokens,
+                         output_len=req.output_len)
+
+    def observe_raw(self, now: float, *, n_patches: int,
+                    prefill_tokens: int, output_len: int) -> None:
+        """Workload observation without a ``core.request.Request`` — the
+        serving engines feed arrivals straight from ``ServeRequest``
+        fields (thread-safe)."""
+        with self._lock:
+            if self._last_t >= 0:
+                dt = max(now - self._last_t, 1e-6)
+                inst_rate = 1.0 / dt
+                a = self._alpha(dt)
+                self._rate = (1 - a) * self._rate + a * inst_rate
+            self._last_t = now
+            a = 0.2 if self._n >= 5 else 1.0 / (self._n + 1)
+            self._patches = (1 - a) * self._patches + a * n_patches
+            self._prefill_tokens = ((1 - a) * self._prefill_tokens
+                                    + a * prefill_tokens)
+            self._output_len = (1 - a) * self._output_len + a * output_len
+            self._n += 1
 
     def _alpha(self, dt: float) -> float:
         return 1.0 - 0.5 ** (dt / self.halflife_s)
@@ -49,15 +65,17 @@ class LoadEstimator:
     # ------------------------------------------------------------- demand
     def stage_demand(self) -> dict[str, float]:
         """Device-seconds of work arriving per second, per stage."""
-        if self._n == 0:
-            return {"E": 0.0, "P": 0.0, "D": 0.0}
-        r = self._rate
-        t_e = cm.encode_time(self.cfg, self.hw, max(1, int(self._patches))) \
-            if self.cfg.modality and self._patches >= 0.5 else 0.0
+        with self._lock:
+            if self._n == 0:
+                return {"E": 0.0, "P": 0.0, "D": 0.0}
+            r, patches = self._rate, self._patches
+            prefill_tokens, output_len = self._prefill_tokens, self._output_len
+        t_e = cm.encode_time(self.cfg, self.hw, max(1, int(patches))) \
+            if self.cfg.modality and patches >= 0.5 else 0.0
         t_p = cm.prefill_time(self.cfg, self.hw,
-                              max(1, int(self._prefill_tokens)))
-        t_d = self._output_len * cm.decode_step_time(
-            self.cfg, self.hw, int(self._prefill_tokens + self._output_len))
+                              max(1, int(prefill_tokens)))
+        t_d = output_len * cm.decode_step_time(
+            self.cfg, self.hw, int(prefill_tokens + output_len))
         return {"E": r * t_e, "P": r * t_p, "D": r * t_d}
 
     def suggest_allocation(self, n_instances: int) -> dict[str, int]:

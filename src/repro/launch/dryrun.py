@@ -181,7 +181,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
-        cost = compiled.cost_analysis() or {}
+        from repro.compat import cost_analysis
+        cost = cost_analysis(compiled)
         try:
             mem = compiled.memory_analysis()
         except Exception:

@@ -218,8 +218,10 @@ def moe_apply_shard_map(p: Params, x: jnp.ndarray, cfg: ArchConfig,
         y = jax.lax.all_gather(y_m, "model", tiled=True)   # (Tl, d)
         return y.reshape(xb.shape), aux
 
+    from repro.compat import shard_map
+
     dp_spec = dp if len(dp) > 1 else dp[0]
-    fn = jax.shard_map(
+    fn = shard_map(
         block, mesh=mesh,
         in_specs=(P(dp_spec, None, None), P(), P("model", None, None),
                   P("model", None, None), P("model", None, None)),

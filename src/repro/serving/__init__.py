@@ -1,10 +1,14 @@
-from repro.serving.engine import EPDEngine
+from repro.serving.cluster import ClusterEngine, InstanceWorker
+from repro.serving.engine import EngineBase, EPDEngine
 from repro.serving.scheduler import Scheduler
-from repro.serving.transfer import (MMTokenCache, PrefillProgress, PsiEP,
-                                    PsiPD)
-from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
-                                 RequestState, SamplingParams, ServeRequest)
+from repro.serving.transfer import (MigratedPrefill, MMTokenCache,
+                                    PrefillProgress, PsiEP, PsiPD)
+from repro.serving.types import (ClusterConfig, EngineConfig, FinishReason,
+                                 RequestHandle, RequestState, SamplingParams,
+                                 ServeRequest)
 
-__all__ = ["EPDEngine", "EngineConfig", "ServeRequest", "SamplingParams",
+__all__ = ["EPDEngine", "EngineBase", "ClusterEngine", "InstanceWorker",
+           "EngineConfig", "ClusterConfig", "ServeRequest", "SamplingParams",
            "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
-           "PsiEP", "PsiPD", "PrefillProgress", "Scheduler"]
+           "PsiEP", "PsiPD", "PrefillProgress", "MigratedPrefill",
+           "Scheduler"]

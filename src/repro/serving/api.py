@@ -26,7 +26,8 @@ from repro.core.request import Request, SLO
 from repro.serving.types import APIError, SamplingParams, ServeRequest
 
 __all__ = ["APIError", "CompletionParams", "parse_chat_request",
-           "chat_completion", "build_chat_response", "to_sim_request"]
+           "chat_completion", "build_chat_response", "to_sim_request",
+           "sim_request_of"]
 
 
 @dataclass
@@ -182,10 +183,13 @@ def chat_completion(engine, payload: dict, timeout: float = 600.0) -> dict:
     return build_chat_response(engine.cfg, req)
 
 
-def to_sim_request(cfg: ArchConfig, payload: dict, arrival: float,
+def sim_request_of(cfg: ArchConfig, sreq: ServeRequest, arrival: float,
                    slo: Optional[SLO] = None) -> Request:
-    """Same payload -> simulator Request (for capacity planning)."""
-    sreq = parse_chat_request(cfg, payload)
+    """ServeRequest -> simulator ``Request`` (same logical workload in the
+    simulator's dialect). Used for capacity planning, by the cluster
+    engine's LoadEstimator feed, and by the sim-vs-real cross-validation
+    tests — keeping the two dialects convertible is what makes the
+    structural metrics comparable."""
     m = cfg.modality
     n_tokens = 0 if sreq.mm_embeds is None else sreq.mm_embeds.shape[0]
     tpi = m.tokens_per_item if m else 1
@@ -196,3 +200,10 @@ def to_sim_request(cfg: ArchConfig, payload: dict, arrival: float,
         patches_per_item=1,
         tokens_per_patch=tpi,
         output_len=sreq.max_new_tokens, slo=slo)
+
+
+def to_sim_request(cfg: ArchConfig, payload: dict, arrival: float,
+                   slo: Optional[SLO] = None) -> Request:
+    """Same payload -> simulator Request (for capacity planning)."""
+    return sim_request_of(cfg, parse_chat_request(cfg, payload), arrival,
+                          slo)

@@ -1,0 +1,646 @@
+"""Multi-instance cluster engine with dynamic role switching (§3.2.4).
+
+The paper's headline mechanism — dedicating separate instances to E, P
+and D and re-roling them as the workload shifts — previously existed only
+in the discrete-event simulator (``core.simulator``). ``ClusterEngine``
+is the real-execution counterpart: N instances, each an
+``InstanceWorker`` owning its OWN stage objects, KV/MM pools and ONE
+serialized executor thread (exactly the structure of
+``core.instance.Instance``), wired by the ψ channels of
+``serving.transfer`` and fronted by a router that reuses the
+``core.scheduler`` assignment policies:
+
+  ``"2E1P1D"``  true EPD disaggregation (ours)
+  ``"4EPD"``    every instance aggregated — the vLLM baseline
+  ``"3EP1D"``   prefill/decode disaggregation only — DistServe
+
+all through the one ``submit()/result()/stream()`` API of
+``EngineBase``. Within one process "an instance" is a worker thread with
+private pools; on real hardware it would be a submesh — the queueing
+structure, block-manager gating, and migration logic are identical,
+which is what the sim-vs-real cross-validation tests rely on.
+
+Transfers: ψ_EP moves merged multimodal tokens (IRP shards may encode on
+DIFFERENT E instances; the shared assembler in ``EngineBase`` merges
+them). ψ_PD between co-located P and D stages stays a block-table
+reference; between instances it becomes a real cache migration — the
+prompt KV is copied out of the prefill worker's pool
+(``PagedKVState.extract``) and injected into the decode worker's pool
+(``inject``), byte-exact, so migrated decode is bit-identical to local
+decode. A ``"1EPD"`` cluster therefore emits the same greedy token
+streams as the single-pipeline ``EPDEngine``.
+
+Dynamic role switching (paper §3.2.4: offload -> migrate -> onload,
+switch < 0.7 s): a monitor thread reads per-stage demand from
+``core.load_estimator.LoadEstimator`` (fed by ``submit()``), and when
+the suggested allocation disagrees with the current one, re-roles an
+idle single-letter instance: stop accepting, offload queued work to
+siblings, wait for in-flight work to drain, swap stage set + pools
+(compiled programs live in the shared ``PagedJitKit`` — no recompile),
+then sit out a cooldown (anti-thrash). A stage never drops to zero
+instances: donors must have >= 2 instances serving their letter.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from typing import Any, Optional, Union
+
+from repro.configs.base import ArchConfig
+from repro.core.cluster import ClusterSpec
+from repro.core.costmodel import A100_80G, HardwareProfile
+from repro.core.instance import D_ROLES, E_ROLES, P_ROLES
+from repro.core.load_estimator import LoadEstimator
+from repro.core.scheduler import LEAST_LOADED, ROUND_ROBIN, Assigner
+from repro.serving.engine import EngineBase
+from repro.serving.scheduler import Scheduler
+from repro.serving.stages import (EncodeStage, PagedDecodeStage, PagedJitKit,
+                                  PagedKVState, PagedPrefillStage)
+from repro.serving.transfer import MigratedPrefill, PsiEP, PsiPD
+from repro.serving.types import (ClusterConfig, EngineConfig, RequestState,
+                                 ServeRequest)
+
+__all__ = ["ClusterEngine", "ClusterConfig", "InstanceWorker"]
+
+_POLICIES = {"least_loaded": LEAST_LOADED, "round_robin": ROUND_ROBIN}
+
+
+class _NullDecode:
+    """Decode stand-in for P-only instances: the shared ``Scheduler``
+    co-schedules decode and prefill; with no D stage on the instance the
+    whole token budget goes to prefill chunks."""
+
+    active_count = 0
+
+    def step(self, psi_pd) -> int:
+        return 0
+
+    def abort_all(self, on_fail) -> None:
+        pass
+
+
+class _MigratingPsiPD:
+    """ψ_PD for a P-instance with no local D stage: ``send`` performs the
+    PD cache migration — copy the prompt KV out of the source pool, free
+    it there, and route the payload to a decode instance (the paper's
+    'KV cache migrates'). Runs on the P instance's executor thread."""
+
+    def __init__(self, cluster: "ClusterEngine", src: "InstanceWorker"):
+        self.cluster = cluster
+        self.src = src
+        self.transfers = 0
+
+    def send(self, task) -> None:
+        req = task.req
+        k, v = self.src.kv.extract(req.req_id)
+        self.transfers += 1
+        self.cluster._stats.bump("pd_migrations")
+        payload = MigratedPrefill(req=req, first_tok=task.first_tok,
+                                  total=task.total, mm_tokens=task.mm_tokens,
+                                  k_blocks=k, v_blocks=v)
+        try:
+            self.cluster._route_migration(payload)
+        except RuntimeError as e:
+            self.cluster._fail(req, f"pd migration failed: {e!r}")
+
+    def qsize(self) -> int:
+        return 0
+
+    def drain(self) -> list:
+        return []
+
+
+class InstanceWorker:
+    """One engine instance: a (switchable) role, its own stages + pools,
+    and one serialized executor thread driving every stage it serves."""
+
+    def __init__(self, iid: int, role: str, cluster: "ClusterEngine"):
+        self.iid = iid
+        self.cluster = cluster
+        self.accepting = True
+        self.cooldown_until = 0.0
+        self.role_since = time.perf_counter()
+        self._pending_role: Optional[str] = None
+        # cluster-facing channels — created ONCE and kept across role
+        # switches so router threads never hold a stale reference
+        self.enc_q: queue.Queue = queue.Queue()       # (req, sid, n, idx, key)
+        self.psi_in = PsiEP(cluster.mm_cache)         # admissions (req, mm)
+        self.requeue_q: queue.Queue = queue.Queue()   # preemption re-admits
+        self.mig_q: deque = deque()                   # inbound MigratedPrefill
+        self._mig_lock = threading.Lock()
+        self.thread: Optional[threading.Thread] = None
+        self.role = role
+        self._build_role(role)
+
+    # -------------------------------------------------------------- roles
+    def serves(self, letter: str) -> bool:
+        roles = {"E": E_ROLES, "P": P_ROLES, "D": D_ROLES}[letter]
+        return self.role in roles
+
+    def _build_role(self, role: str) -> None:
+        """Instantiate the stage set + pools for ``role``. The jitted
+        programs come from the cluster's shared ``PagedJitKit``, so this
+        is cheap — a role switch never recompiles."""
+        c = self.cluster
+        self.role = role
+        e = role in E_ROLES
+        p = role in P_ROLES
+        d = role in D_ROLES
+        self.encode_stage = (
+            EncodeStage(c.model, c.cfg, c.params, c.ecfg.n_encode_workers,
+                        kit=c.kit, stats=c._stats) if e else None)
+        self.kv = (PagedKVState(c.model, c.cfg, c.ecfg, kit=c.kit)
+                   if (p or d) else None)
+        self.prefill_stage = (
+            PagedPrefillStage(c.model, c.cfg, c.params, c.ecfg, c._stats,
+                              self.kv, kit=c.kit) if p else None)
+        self.decode_stage = (
+            PagedDecodeStage(c.model, c.cfg, c.params, c.ecfg, c._stats,
+                             self.kv, on_finish=c._finish,
+                             on_requeue=c._requeue, kit=c.kit) if d else None)
+        self.psi_pd = PsiPD() if d else None
+        self.scheduler: Optional[Scheduler] = None
+        if p:
+            psi_pd_out = (self.psi_pd if d
+                          else _MigratingPsiPD(c, self))
+            self.scheduler = Scheduler(
+                c.ecfg, self.prefill_stage,
+                self.decode_stage if d else _NullDecode(),
+                self.psi_in, psi_pd_out, c._stats, c._stop,
+                on_fail=c._fail)
+
+    # --------------------------------------------------------------- load
+    def load(self) -> float:
+        """Queued + resident work in job units (least-loaded routing and
+        the role-switch donor choice read this; lock-free by design)."""
+        n = (self.enc_q.qsize() + self.psi_in.qsize()
+             + self.requeue_q.qsize() + len(self.mig_q))
+        if self.scheduler is not None:
+            n += len(self.scheduler.queue)
+            n += int(self.scheduler.task is not None)
+        if self.decode_stage is not None:
+            n += self.decode_stage.active_count + self.psi_pd.qsize()
+        return float(n)
+
+    def _idle(self) -> bool:
+        return self.load() == 0.0
+
+    # ---------------------------------------------------------- switching
+    def request_switch(self, new_role: str) -> None:
+        """Monitor-side: stop accepting and flag the executor to drain,
+        offload, and swap (writes ordered: accepting first, so an
+        executor that sees the pending role also sees accepting=False)."""
+        self.accepting = False
+        self._pending_role = new_role
+
+    def _progress_switch(self) -> bool:
+        if not self._offload():
+            # no sibling can take the queued work right now — abort; the
+            # monitor re-evaluates after the cooldown-free retry
+            self._pending_role = None
+            self.accepting = True
+            return True
+        if not self._idle():
+            return False                  # in-flight work still draining
+        now = time.perf_counter()
+        old = self.role
+        c = self.cluster
+        c._stats.add_role_time(old, now - self.role_since)
+        self._build_role(self._pending_role)
+        self.role_since = now
+        self._pending_role = None
+        self.cooldown_until = now + c.ccfg.switch_cooldown
+        c._stats.bump("role_switches")
+        c.switch_log.append((now - c._t0, self.iid, old, self.role))
+        self.accepting = True
+        return True
+
+    def _channels(self, only_unserved: bool = False) -> list[tuple]:
+        """Descriptors for every cluster-facing work channel:
+        ``(pop, putback, req_of, route)``, where ``pop()`` returns one
+        item or None. One table serves offload (route with putback on
+        failure), mis-route healing (route or fail), and shutdown drain
+        (collect stranded) — so a channel added later cannot be missed by
+        one of the three. ``only_unserved`` keeps just the channels whose
+        stage this instance's CURRENT role does not serve."""
+        c = self.cluster
+
+        def q_pop(q):
+            def pop():
+                try:
+                    return q.get_nowait()
+                except queue.Empty:
+                    return None
+            return pop
+
+        def psi_pop():
+            try:
+                return self.psi_in.recv_nowait()
+            except queue.Empty:
+                return None
+
+        def mig_pop():
+            with self._mig_lock:
+                return self.mig_q.popleft() if self.mig_q else None
+
+        def mig_put(m):
+            with self._mig_lock:
+                self.mig_q.appendleft(m)
+
+        first = lambda item: item[0]
+        out = []
+        if not only_unserved or self.encode_stage is None:
+            out.append((q_pop(self.enc_q), self.enc_q.put, first,
+                        c._route_encode_job))
+        if not only_unserved or self.scheduler is None:
+            out.append((psi_pop, lambda it: self.psi_in.send(*it), first,
+                        lambda it: c._route_admission(it[0], it[1])))
+            out.append((q_pop(self.requeue_q), self.requeue_q.put, first,
+                        lambda it: c._route_admission(it[0], it[1],
+                                                      front=True)))
+        if not only_unserved and self.scheduler is not None:
+            sq = self.scheduler.queue
+            out.append((lambda: sq.popleft() if sq else None,
+                        sq.appendleft, first,
+                        lambda it: c._route_admission(it[0], it[1])))
+        if not only_unserved or self.decode_stage is None:
+            out.append((mig_pop, mig_put, lambda m: m.req,
+                        c._route_migration))
+        return out
+
+    def _offload(self) -> bool:
+        """Move queued-but-unstarted work to sibling instances (paper:
+        offload -> migrate -> onload). Items pop ONE at a time so a
+        routing failure puts exactly that item back and aborts the switch
+        — nothing is ever dropped or stranded."""
+        for pop, putback, _req_of, route in self._channels():
+            while True:
+                item = pop()
+                if item is None:
+                    break
+                try:
+                    route(item)
+                except RuntimeError:
+                    putback(item)
+                    return False
+        return True
+
+    # ----------------------------------------------------------- executor
+    def start(self) -> None:
+        self.thread = threading.Thread(target=self._run, daemon=True,
+                                       name=f"I{self.iid}:{self.role}")
+        self.thread.start()
+
+    def _run(self) -> None:
+        c = self.cluster
+        while not c._stop.is_set():
+            try:
+                worked = self._step_once()
+            except Exception as e:                    # noqa: BLE001
+                # instance-level bug guard: fail resident decode work so
+                # nothing strands behind a wedged executor, keep serving
+                if self.decode_stage is not None:
+                    self.decode_stage.abort_all(
+                        lambda r: c._fail(r, f"instance failed: {e!r}"))
+                worked = False
+            if not worked:
+                time.sleep(0.002)
+
+    def _step_once(self) -> bool:
+        worked = False
+        if self._pending_role is not None:
+            worked |= self._progress_switch()
+        else:
+            worked |= self._reroute_misrouted()
+        if self._pending_role is None and self.encode_stage is not None:
+            worked |= self._encode_one()
+        if self.decode_stage is not None:
+            worked |= self._admit_migrations()
+        if self.scheduler is not None:
+            self._drain_requeues()
+            worked |= self._scheduler_step()
+        elif self.decode_stage is not None:
+            worked |= self._decode_once()
+        return worked
+
+    def _reroute_misrouted(self) -> bool:
+        """Self-healing: re-route items a just-finished role switch left
+        behind (a router could have enqueued between the final offload
+        and ``accepting`` flipping back on with a different role)."""
+        worked = False
+        for pop, _putback, req_of, route in self._channels(
+                only_unserved=True):
+            while True:
+                item = pop()
+                if item is None:
+                    break
+                worked = True
+                try:
+                    route(item)
+                except RuntimeError as e:
+                    # no instance serves the stage at all: fail loudly
+                    # rather than strand (should be unreachable —
+                    # switching never zeroes a stage)
+                    self.cluster._fail(
+                        req_of(item),
+                        f"no instance serves the stage: {e!r}")
+        return worked
+
+    def _encode_one(self) -> bool:
+        try:
+            job = self.enc_q.get_nowait()
+        except queue.Empty:
+            return False
+        self.cluster._run_encode_shard(self.encode_stage, *job)
+        return True
+
+    def _admit_migrations(self) -> bool:
+        """Inject inbound PD migrations into this instance's pool and hand
+        them to the decode stage; pool-pressure backoff holds the head in
+        place (decode retirements free blocks)."""
+        c = self.cluster
+        worked = False
+        while True:
+            with self._mig_lock:
+                if not self.mig_q:
+                    return worked
+                m = self.mig_q[0]
+            if m.req.finished:            # failed while queued (shutdown)
+                with self._mig_lock:
+                    self.mig_q.popleft()
+                continue
+            if not self.kv.inject(m.req.req_id, m.k_blocks, m.v_blocks,
+                                  m.total):
+                c._stats.bump("admission_backoffs")
+                return worked
+            with self._mig_lock:
+                self.mig_q.popleft()
+            m.k_blocks = m.v_blocks = None      # release the copy
+            with self.kv.lock:
+                c._stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+            self.psi_pd.send(m)
+            worked = True
+
+    def _drain_requeues(self) -> None:
+        """Move cross-instance preemption re-admits into the scheduler's
+        front slots (executor thread — the scheduler deque is private)."""
+        if self.requeue_q.empty():
+            return
+        self.scheduler.begin_requeue_batch()
+        while True:
+            try:
+                req, mm = self.requeue_q.get_nowait()
+            except queue.Empty:
+                return
+            self.scheduler.requeue(req, mm)
+
+    def _scheduler_step(self) -> bool:
+        c = self.cluster
+        try:
+            return bool(self.scheduler.step())
+        except Exception as e:                        # noqa: BLE001
+            if self.decode_stage is not None:
+                self.decode_stage.abort_all(
+                    lambda r: c._fail(r, f"scheduler failed: {e!r}"))
+            return True
+
+    def _decode_once(self) -> bool:
+        c = self.cluster
+        try:
+            return bool(self.decode_stage.step(self.psi_pd))
+        except Exception as e:                        # noqa: BLE001
+            # e.g. a request whose appends alone exhaust the pool
+            self.decode_stage.abort_all(
+                lambda r: c._fail(r, f"decode failed: {e!r}"))
+            return True
+
+    # ------------------------------------------------------------ shutdown
+    def drain(self) -> list[ServeRequest]:
+        """Shutdown: abandon in-flight prefill, empty every channel;
+        returns the stranded requests (the engine fails them)."""
+        stranded: list[ServeRequest] = []
+        for pop, _putback, req_of, _route in self._channels():
+            while True:
+                item = pop()
+                if item is None:
+                    break
+                stranded.append(req_of(item))
+        if self.psi_pd is not None:
+            stranded.extend(h.req for h in self.psi_pd.drain())
+        if self.scheduler is not None:
+            stranded.extend(self.scheduler.drain())   # frees task blocks
+        return stranded
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"InstanceWorker(id={self.iid}, role={self.role}, "
+                f"load={self.load():.0f}, accepting={self.accepting})")
+
+
+class ClusterEngine(EngineBase):
+    """N real engine instances behind one submit()/result()/stream() API.
+
+    ``cluster`` is a :class:`ClusterConfig` or a bare spec string
+    (``"2E1P1D"``). Requires a paged-capable config (the dense baseline
+    stays single-pipeline in ``EPDEngine``)."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig,
+                 cluster: Union[ClusterConfig, str] = "1EPD", *,
+                 hw: HardwareProfile = A100_80G):
+        if isinstance(cluster, str):
+            cluster = ClusterConfig(spec=cluster)
+        super().__init__(cfg, params, engine)
+        if not self.paged:
+            raise ValueError(
+                f"ClusterEngine requires a paged-capable config "
+                f"(family={cfg.family!r}, mode={engine.mode!r}); use "
+                f"EPDEngine for the dense baseline")
+        if cluster.assign_policy not in _POLICIES:
+            raise ValueError(f"unknown assign policy "
+                             f"{cluster.assign_policy!r}")
+        self.ccfg = cluster
+        self.kit = PagedJitKit(self.model, cfg)
+        # IRP shard planning is cluster-level: shards of one request may
+        # encode on different E instances (the simulator does the same)
+        self.encode_planner = EncodeStage(self.model, cfg, params,
+                                          engine.n_encode_workers,
+                                          kit=self.kit)
+        roles = ClusterSpec(cluster.spec).roles()
+        self._t0 = time.perf_counter()
+        self.instances = [InstanceWorker(i, r, self)
+                          for i, r in enumerate(roles)]
+        for letter in "PD":
+            if not self._serving(letter):
+                raise ValueError(
+                    f"cluster spec {cluster.spec!r} has no {letter}-capable "
+                    f"instance")
+        self._assigners = {letter: Assigner(_POLICIES[cluster.assign_policy])
+                           for letter in "EPD"}
+        self.load_estimator = LoadEstimator(cfg, hw)
+        self.switch_log: list[tuple[float, int, str, str]] = []
+        self._monitor_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------- routing
+    def _serving(self, letter: str) -> list[InstanceWorker]:
+        return [i for i in self.instances if i.serves(letter)]
+
+    def _pick(self, letter: str) -> InstanceWorker:
+        insts = self._serving(letter)
+        if not insts:
+            raise RuntimeError(f"no {letter}-capable instance")
+        return insts[self._assigners[letter].pick(insts)]
+
+    def _route_admission(self, req: ServeRequest, mm_tokens,
+                         front: bool = False) -> None:
+        inst = self._pick("P")
+        if front:
+            inst.requeue_q.put((req, mm_tokens))
+        else:
+            inst.psi_in.send(req, mm_tokens)
+
+    def _route_encode_job(self, job: tuple) -> None:
+        self._pick("E").enc_q.put(job)
+
+    def _route_migration(self, payload: MigratedPrefill) -> None:
+        inst = self._pick("D")
+        with inst._mig_lock:
+            inst.mig_q.append(payload)
+
+    # -------------------------------------------------------- engine hooks
+    def _has_encoder(self) -> bool:
+        return (self.kit.encode_fn is not None
+                and bool(self._serving("E")))
+
+    def _check_mm(self, req: ServeRequest) -> None:
+        if self.kit.encode_fn is not None and not self._serving("E"):
+            raise ValueError(
+                f"request {req.req_id}: multimodal payload but cluster "
+                f"spec {self.ccfg.spec!r} has no E-capable instance")
+
+    def _dispatch_prefill(self, req: ServeRequest, mm_tokens) -> None:
+        try:
+            self._route_admission(req, mm_tokens)
+        except RuntimeError as e:
+            self._fail(req, f"admission routing failed: {e!r}")
+
+    def _dispatch_encode(self, req: ServeRequest,
+                         key: Optional[str]) -> None:
+        shards = self.encode_planner.plan_shards(req)
+        try:
+            for sid, idx in enumerate(shards):
+                self._route_encode_job((req, sid, len(shards), idx, key))
+        except RuntimeError as e:
+            self._fail(req, f"encode routing failed: {e!r}")
+            self.psi_ep.drop(req.req_id)
+            self._fail_inflight(key, f"encode routing failed: {e!r}")
+
+    def _release_blocks(self, req: ServeRequest) -> None:
+        # at most one instance pool holds this request's blocks; free is
+        # a no-op everywhere else
+        for inst in self.instances:
+            kv = inst.kv
+            if kv is not None:
+                with kv.lock:
+                    kv.mgr.free(req.req_id)
+
+    def _requeue(self, req: ServeRequest, mm_tokens) -> None:
+        """Preemption: re-admit at the FRONT of a P instance's queue (the
+        deterministic replay reproduces the same prefix)."""
+        req.advance(RequestState.PREFILLING)
+        try:
+            self._route_admission(req, mm_tokens, front=True)
+        except RuntimeError as e:
+            self._fail(req, f"requeue routing failed: {e!r}")
+
+    def _on_submit(self, req: ServeRequest) -> None:
+        from repro.serving.api import sim_request_of
+        now = time.perf_counter() - self._t0
+        self.load_estimator.observe(sim_request_of(self.cfg, req, now), now)
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for inst in self.instances:
+            inst.start()
+            self._threads.append(inst.thread)
+        if self.ccfg.role_switch:
+            self._monitor_thread = threading.Thread(
+                target=self._monitor_loop, daemon=True, name="monitor")
+            self._monitor_thread.start()
+            self._threads.append(self._monitor_thread)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Signal every executor + the monitor, join them, then drain all
+        channels and fail resident requests — including mid-switch state
+        (a pending switch simply never completes; its queues drain like
+        any other instance's)."""
+        self._join_threads(timeout)
+        error = "engine stopped before the request completed"
+        self.psi_ep.drain()
+        now = time.perf_counter()
+        for inst in self.instances:
+            for req in inst.drain():
+                self._fail(req, error)
+            self._stats.add_role_time(inst.role, now - inst.role_since)
+            inst.role_since = now
+        self._fail_residents(error)
+
+    # -------------------------------------------------------- role monitor
+    def _monitor_loop(self) -> None:
+        while not self._stop.wait(self.ccfg.monitor_interval):
+            try:
+                self.monitor_once()
+            except Exception:                         # noqa: BLE001
+                # a broken evaluation skips this tick, never dies — but
+                # the failure must be diagnosable (a silently dead
+                # monitor = role switching silently off)
+                self._stats.bump("monitor_errors")
+
+    def monitor_once(self) -> Optional[tuple[int, str, str]]:
+        """One role-switch evaluation (public so tests and benchmarks can
+        drive it deterministically without the timer thread).
+
+        Compares the LoadEstimator's suggested allocation over the
+        single-letter instances with the current one and re-roles ONE
+        idle, cooled-down donor toward the hottest deficit. Returns
+        ``(instance_id, old_role, new_role)`` when a switch was
+        requested, else None."""
+        if any(i._pending_role is not None for i in self.instances):
+            return None                       # one switch in flight at a time
+        singles = [i for i in self.instances if len(i.role) == 1]
+        if len(singles) < 2:
+            return None
+        demand = self.load_estimator.stage_demand()
+        if not any(v > 0.0 for v in demand.values()):
+            return None                       # nothing observed yet
+        target = self.load_estimator.suggest_allocation(len(singles))
+        cur = {"E": 0, "P": 0, "D": 0}
+        for i in singles:
+            cur[i.role] += 1
+        deficit = {s: target.get(s, 0) - cur[s] for s in "EPD"}
+        hot = max((s for s in "EPD" if deficit[s] > 0),
+                  key=lambda s: (deficit[s], demand[s]), default=None)
+        if hot is None:
+            return None
+        # donors: overloaded letters that keep >= 1 serving instance after
+        # losing one (a stage never drops to zero)
+        donors = [s for s in "EPD"
+                  if s != hot and deficit[s] < 0 and cur[s] >= 1
+                  and len(self._serving(s)) >= 2]
+        if not donors:
+            return None
+        cold = min(donors, key=lambda s: demand[s] / max(cur[s], 1))
+        now = time.perf_counter()
+        ready = [i for i in singles
+                 if i.role == cold and i.accepting
+                 and i.cooldown_until <= now]
+        if not ready:
+            return None
+        donor = min(ready, key=lambda i: i.load())    # prefer idle
+        donor.request_switch(hot)
+        return (donor.iid, cold, hot)
+
+    # ------------------------------------------------------------- queries
+    def current_roles(self) -> list[str]:
+        """Live role of every instance (changes as the monitor re-roles)."""
+        return [i.role for i in self.instances]

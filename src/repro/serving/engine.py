@@ -1,10 +1,22 @@
-"""EPD serving engine: a thin orchestrator over the typed stage graph.
+"""EPD serving engines: shared request machinery + the single-pipeline engine.
 
 Stage logic lives in ``serving.stages`` (each stage owns its jitted fns),
 ψ transfer semantics in ``serving.transfer`` (ψ_EP with the
 multimedia-token cache, ψ_PD block-table handoff), the continuous-batching
 loop in ``serving.scheduler``, and request lifecycle types in
-``serving.types``. This module only wires them together:
+``serving.types``.
+
+``EngineBase`` is everything a serving engine needs regardless of how many
+instances execute the stages: the request registry (blocking ``result()``,
+incremental ``stream()``, terminal transitions under one condition
+variable), admission-time validation, the ψ_EP multimedia-token cache
+probe + in-flight encode dedup (anti-stampede), and the shared encode-job
+body. Where requests actually GO is left to three hooks —
+``_dispatch_encode`` / ``_dispatch_prefill`` / ``_release_blocks`` — so
+the same machinery fronts both the single-pipeline ``EPDEngine`` below
+and the multi-instance ``serving.cluster.ClusterEngine``.
+
+``EPDEngine`` wires one pipeline:
 
   paged:  E workers --ψ_EP--> Scheduler thread (chunked P + batched D)
   dense:  E workers --ψ_EP--> P thread --ψ_PD--> D thread  (baseline)
@@ -28,30 +40,38 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Iterator
-
-import numpy as np
+from typing import Any, Iterator, Optional
 
 from repro.configs.base import ArchConfig
 from repro.models import build_model
 from repro.serving.scheduler import Scheduler
 from repro.serving.stages import (PAGED_FAMILIES, DenseDecodeStage,
                                   DensePrefillStage, EncodeStage,
-                                  PagedDecodeStage, PagedKVState,
-                                  PagedPrefillStage, ServeStats,
-                                  cache_nbytes)
+                                  PagedDecodeStage, PagedJitKit,
+                                  PagedKVState, PagedPrefillStage,
+                                  ServeStats, cache_nbytes)
 from repro.serving.transfer import (MMTokenCache, PsiEP, PsiPD,
                                     drain_queue)
 from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
                                  RequestState, SamplingParams, ServeRequest)
 
-__all__ = ["EPDEngine", "EngineConfig", "ServeRequest", "SamplingParams",
-           "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
-           "PAGED_FAMILIES"]
+__all__ = ["EngineBase", "EPDEngine", "EngineConfig", "ServeRequest",
+           "SamplingParams", "RequestState", "FinishReason", "RequestHandle",
+           "MMTokenCache", "PAGED_FAMILIES"]
 
 
-class EPDEngine:
-    """Threaded EPD pipeline over a real model (orchestration only)."""
+class EngineBase:
+    """Request registry + submit-side machinery shared by every engine.
+
+    Subclasses implement the routing hooks:
+      * ``_dispatch_encode(req, key)``  — queue the planned IRP shards,
+      * ``_dispatch_prefill(req, mm_tokens)`` — hand a prefill-ready
+        request to a P stage (possibly choosing an instance),
+      * ``_release_blocks(req)`` — free any pool blocks a failed request
+        still holds,
+    and may override ``_on_submit`` (workload observation) and
+    ``_check_mm`` (reject modality payloads the topology cannot encode).
+    """
 
     def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig):
         self.cfg = cfg
@@ -61,36 +81,10 @@ class EPDEngine:
         self.paged = (engine.mode == "paged"
                       and cfg.family in PAGED_FAMILIES
                       and not cfg.sliding_window)
-
         self._stats = ServeStats()
         self.mm_cache = MMTokenCache(engine.mm_cache_entries)
         self.psi_ep = PsiEP(self.mm_cache)
-        self.psi_pd = PsiPD()
         self._stop = threading.Event()
-        self.encode_stage = EncodeStage(self.model, cfg, params,
-                                        engine.n_encode_workers)
-        self.scheduler: Scheduler | None = None
-        if self.paged:
-            self._kv = PagedKVState(self.model, cfg, engine)
-            self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
-            self.prefill_stage = PagedPrefillStage(
-                self.model, cfg, params, engine, self._stats, self._kv)
-            self.decode_stage = PagedDecodeStage(
-                self.model, cfg, params, engine, self._stats, self._kv,
-                on_finish=self._finish, on_requeue=self._requeue)
-            self.scheduler = Scheduler(
-                engine, self.prefill_stage, self.decode_stage,
-                self.psi_ep, self.psi_pd, self._stats, self._stop,
-                on_fail=self._fail)
-        else:
-            self.prefill_stage = DensePrefillStage(
-                self.model, cfg, params, engine, self._stats)
-            self.decode_stage = DenseDecodeStage(
-                self.model, cfg, params, engine, self._stats,
-                on_finish=self._finish)
-        self._encode = self.encode_stage.encode_fn   # compat alias
-
-        self._eq: queue.Queue = queue.Queue()        # encode shard jobs
         # in-flight encode dedup: content key -> requests waiting for the
         # first submitter's merged tokens (anti-stampede)
         self._mm_inflight: dict[str, list[ServeRequest]] = {}
@@ -104,68 +98,25 @@ class EPDEngine:
     def stats(self) -> dict[str, Any]:
         return self._stats.data
 
-    # ----------------------------------------------------------- lifecycle
-    def start(self) -> None:
-        for i in range(max(1, self.ecfg.n_encode_workers)):
-            t = threading.Thread(target=self._encode_worker, daemon=True,
-                                 name=f"E{i}")
-            t.start()
-            self._threads.append(t)
-        if self.scheduler is not None:
-            # paged: ONE worker drives the continuous-batching scheduler
-            # (chunked prefill + batched decode co-scheduled per iteration)
-            loops = (("S0", self._sched_worker),)
-        else:
-            loops = (("P0", self._prefill_worker),
-                     ("D0", self._decode_worker))
-        for name, loop in loops:
-            t = threading.Thread(target=loop, daemon=True, name=name)
-            t.start()
-            self._threads.append(t)
+    # -------------------------------------------------------------- hooks
+    def _dispatch_encode(self, req: ServeRequest,
+                         key: Optional[str]) -> None:
+        raise NotImplementedError
 
-    def stop(self, timeout: float = 5.0) -> None:
-        """Signal all stage threads, join them, then fail every resident
-        (unfinished) request so concurrent ``result()``/``stream()``
-        callers return promptly instead of hitting their timeouts.
+    def _dispatch_prefill(self, req: ServeRequest, mm_tokens) -> None:
+        raise NotImplementedError
 
-        ``timeout`` is the expected join horizon, not a hard cap: a
-        worker stuck past it (e.g. a long XLA compile) is joined to
-        completion anyway — every loop re-checks the stop flag after its
-        current bounded step, and draining while a worker lives would
-        free blocks under its feet."""
-        self._stop.set()
-        deadline = time.time() + timeout
-        for t in self._threads:
-            t.join(max(0.0, deadline - time.time()))
-        for t in self._threads:
-            if t.is_alive():
-                t.join()
-        self._threads = []
-        self._drain_on_stop()
+    def _release_blocks(self, req: ServeRequest) -> None:
+        """Free pool blocks a failed request may still hold (paged)."""
 
-    def _drain_on_stop(self) -> None:
-        """Empty every channel and fail stranded requests (clean shutdown).
+    def _on_submit(self, req: ServeRequest) -> None:
+        """Called once per admitted request (workload observation)."""
 
-        Residents can be parked in the encode shard queue, the ψ_EP/ψ_PD
-        channels, the scheduler's admission queue or in-flight chunked
-        prefill, a decode slot, or waiting on an in-flight encode key —
-        all of them are registered in ``_handles`` until collected, so one
-        sweep fails them all; channel drains release the block/cache
-        resources the handoffs still reference."""
-        error = "engine stopped before the request completed"
-        drain_queue(self._eq)                         # encode shard jobs
-        self.psi_ep.drain()
-        for handoff in self.psi_pd.drain():
-            if not self.paged:                        # materialized cache
-                self._stats.sub_live(cache_nbytes(handoff[2]))
-        with self._mm_lock:
-            self._mm_inflight.clear()
-        if self.scheduler is not None:
-            for req in self.scheduler.drain():        # frees task blocks
-                self._fail(req, error)
-        for handle in list(self._handles.values()):   # everything else
-            if not handle.req.finished:
-                self._fail(handle.req, error)
+    def _check_mm(self, req: ServeRequest) -> None:
+        """Reject modality payloads the topology cannot encode."""
+
+    def _has_encoder(self) -> bool:
+        raise NotImplementedError
 
     # -------------------------------------------------------------- submit
     def submit(self, req: ServeRequest) -> RequestHandle:
@@ -188,16 +139,19 @@ class EPDEngine:
                 + (f", pool={self.ecfg.kv_blocks}x"
                    f"{self.ecfg.kv_block_size})" if self.paged else ")"))
         req.sampling.validate()   # seeds must fit uint32 before they jit
+        if req.mm_embeds is not None and req.mm_embeds.shape[0] > 0:
+            self._check_mm(req)
         req.t_submit = time.perf_counter()
+        self._on_submit(req)
         handle = RequestHandle(req=req, engine=self)
         self._handles[req.req_id] = handle
         has_mm = (req.mm_embeds is not None
-                  and self.encode_stage.encode_fn is not None
+                  and self._has_encoder()
                   and req.mm_embeds.shape[0] > 0)
         if not has_mm:
             req.t_encoded = time.perf_counter()
             req.advance(RequestState.PREFILLING)
-            self.psi_ep.send(req, None)
+            self._dispatch_prefill(req, None)
             return handle
         # ψ_EP cache probe: a byte-identical modality payload skips E
         key = None
@@ -209,7 +163,7 @@ class EPDEngine:
                 self._stats.bump("mm_cache_hits")
                 req.t_encoded = time.perf_counter()
                 req.advance(RequestState.PREFILLING)
-                self.psi_ep.send(req, cached)
+                self._dispatch_prefill(req, cached)
                 return handle
             self._stats.bump("mm_cache_misses")
             # anti-stampede: if a byte-identical payload is ALREADY being
@@ -224,9 +178,7 @@ class EPDEngine:
                     return handle
                 self._mm_inflight[key] = []
         req.advance(RequestState.ENCODING)
-        shards = self.encode_stage.plan_shards(req)
-        for sid, idx in enumerate(shards):
-            self._eq.put((req, sid, len(shards), idx, key))
+        self._dispatch_encode(req, key)
         return handle
 
     # ------------------------------------------------------------- results
@@ -326,21 +278,31 @@ class EPDEngine:
                 self._done_cv.notify_all()
         if not claimed:
             return    # a concurrent failer (sibling IRP shard) beat us
-        if self.paged:
-            # release any pool blocks a partial prefill already allocated
-            with self._kv.lock:
-                self._kv.mgr.free(req.req_id)
+        self._release_blocks(req)
 
-    def _requeue(self, req: ServeRequest, mm_tokens) -> None:
-        """Preemption: re-admit through P — at the FRONT of the
-        scheduler's queue (paged), or over ψ_EP (dense baseline)."""
-        req.advance(RequestState.PREFILLING)
-        if self.scheduler is not None:
-            self.scheduler.requeue(req, mm_tokens)
-        else:
-            self.psi_ep.send(req, mm_tokens)
+    # --------------------------------------------------- encode-side shared
+    def _run_encode_shard(self, stage: EncodeStage, req: ServeRequest,
+                          sid: int, n: int, idx, key: Optional[str]) -> None:
+        """One IRP shard job: encode, assemble, and on the final shard
+        cache + dispatch the merged tokens (identical on every engine)."""
+        try:
+            tokens = stage.encode_shard(req, idx)
+            merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
+            if merged is None or req.finished:
+                return
+            if key is not None:
+                self.mm_cache.put(key, merged)
+            req.t_encoded = time.perf_counter()
+            req.advance(RequestState.PREFILLING)
+            self._dispatch_prefill(req, merged)
+            self._deliver_inflight(key, merged)
+        except Exception as e:                      # noqa: BLE001
+            self._fail(req, f"encode failed: {e!r}")
+            self.psi_ep.drop(req.req_id)
+            # byte-identical waiters would fail identically
+            self._fail_inflight(key, f"encode failed: {e!r}")
 
-    def _deliver_inflight(self, key: str | None, merged) -> None:
+    def _deliver_inflight(self, key: Optional[str], merged) -> None:
         """Hand the leader's merged mm tokens to every waiter that joined
         the in-flight encode of the same content key."""
         if key is None:
@@ -353,15 +315,150 @@ class EPDEngine:
             w.mm_cache_hit = True
             w.t_encoded = time.perf_counter()
             w.advance(RequestState.PREFILLING)
-            self.psi_ep.send(w, merged)
+            self._dispatch_prefill(w, merged)
 
-    def _fail_inflight(self, key: str | None, error: str) -> None:
+    def _fail_inflight(self, key: Optional[str], error: str) -> None:
         if key is None:
             return
         with self._mm_lock:
             waiters = self._mm_inflight.pop(key, [])
         for w in waiters:
             self._fail(w, error)
+
+    def _fail_residents(self, error: str) -> None:
+        """Fail every registered-but-unfinished request (shutdown sweep)."""
+        with self._mm_lock:
+            self._mm_inflight.clear()
+        for handle in list(self._handles.values()):
+            if not handle.req.finished:
+                self._fail(handle.req, error)
+
+    def _join_threads(self, timeout: float) -> None:
+        """Shutdown step 1, shared by every engine: signal the stop flag
+        and join all worker threads.
+
+        ``timeout`` is the expected join horizon, not a hard cap: a
+        worker stuck past it (e.g. a long XLA compile) is joined to
+        completion anyway — every loop re-checks the stop flag after its
+        current bounded step, and draining while a worker lives would
+        free blocks under its feet."""
+        self._stop.set()
+        deadline = time.time() + timeout
+        for t in self._threads:
+            t.join(max(0.0, deadline - time.time()))
+        for t in self._threads:
+            if t.is_alive():
+                t.join()
+        self._threads = []
+
+
+class EPDEngine(EngineBase):
+    """Threaded single-pipeline EPD engine over a real model."""
+
+    def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig):
+        super().__init__(cfg, params, engine)
+        self.encode_stage = EncodeStage(self.model, cfg, params,
+                                        engine.n_encode_workers,
+                                        stats=self._stats)
+        self.psi_pd = PsiPD()
+        self.scheduler: Scheduler | None = None
+        if self.paged:
+            kit = PagedJitKit(self.model, cfg)
+            self._kv = PagedKVState(self.model, cfg, engine, kit=kit)
+            self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
+            self.prefill_stage = PagedPrefillStage(
+                self.model, cfg, params, engine, self._stats, self._kv,
+                kit=kit)
+            self.decode_stage = PagedDecodeStage(
+                self.model, cfg, params, engine, self._stats, self._kv,
+                on_finish=self._finish, on_requeue=self._requeue, kit=kit)
+            self.scheduler = Scheduler(
+                engine, self.prefill_stage, self.decode_stage,
+                self.psi_ep, self.psi_pd, self._stats, self._stop,
+                on_fail=self._fail)
+        else:
+            self.prefill_stage = DensePrefillStage(
+                self.model, cfg, params, engine, self._stats)
+            self.decode_stage = DenseDecodeStage(
+                self.model, cfg, params, engine, self._stats,
+                on_finish=self._finish)
+        self._encode = self.encode_stage.encode_fn   # compat alias
+        self._eq: queue.Queue = queue.Queue()        # encode shard jobs
+
+    # ------------------------------------------------------- routing hooks
+    def _has_encoder(self) -> bool:
+        return self.encode_stage.encode_fn is not None
+
+    def _dispatch_prefill(self, req: ServeRequest, mm_tokens) -> None:
+        self.psi_ep.send(req, mm_tokens)
+
+    def _dispatch_encode(self, req: ServeRequest,
+                         key: Optional[str]) -> None:
+        shards = self.encode_stage.plan_shards(req)
+        for sid, idx in enumerate(shards):
+            self._eq.put((req, sid, len(shards), idx, key))
+
+    def _release_blocks(self, req: ServeRequest) -> None:
+        if self.paged:
+            # release any pool blocks a partial prefill already allocated
+            with self._kv.lock:
+                self._kv.mgr.free(req.req_id)
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for i in range(max(1, self.ecfg.n_encode_workers)):
+            t = threading.Thread(target=self._encode_worker, daemon=True,
+                                 name=f"E{i}")
+            t.start()
+            self._threads.append(t)
+        if self.scheduler is not None:
+            # paged: ONE worker drives the continuous-batching scheduler
+            # (chunked prefill + batched decode co-scheduled per iteration)
+            loops = (("S0", self._sched_worker),)
+        else:
+            loops = (("P0", self._prefill_worker),
+                     ("D0", self._decode_worker))
+        for name, loop in loops:
+            t = threading.Thread(target=loop, daemon=True, name=name)
+            t.start()
+            self._threads.append(t)
+
+    def stop(self, timeout: float = 5.0) -> None:
+        """Signal all stage threads, join them (see ``_join_threads``),
+        then fail every resident (unfinished) request so concurrent
+        ``result()``/``stream()`` callers return promptly instead of
+        hitting their timeouts."""
+        self._join_threads(timeout)
+        self._drain_on_stop()
+
+    def _drain_on_stop(self) -> None:
+        """Empty every channel and fail stranded requests (clean shutdown).
+
+        Residents can be parked in the encode shard queue, the ψ_EP/ψ_PD
+        channels, the scheduler's admission queue or in-flight chunked
+        prefill, a decode slot, or waiting on an in-flight encode key —
+        all of them are registered in ``_handles`` until collected, so one
+        sweep fails them all; channel drains release the block/cache
+        resources the handoffs still reference."""
+        error = "engine stopped before the request completed"
+        drain_queue(self._eq)                         # encode shard jobs
+        self.psi_ep.drain()
+        for handoff in self.psi_pd.drain():
+            if not self.paged:                        # materialized cache
+                self._stats.sub_live(cache_nbytes(handoff[2]))
+        if self.scheduler is not None:
+            for req in self.scheduler.drain():        # frees task blocks
+                self._fail(req, error)
+        self._fail_residents(error)
+
+    def _requeue(self, req: ServeRequest, mm_tokens) -> None:
+        """Preemption: re-admit through P — at the FRONT of the
+        scheduler's queue (paged), or over ψ_EP (dense baseline)."""
+        req.advance(RequestState.PREFILLING)
+        if self.scheduler is not None:
+            self.scheduler.requeue(req, mm_tokens)
+        else:
+            self.psi_ep.send(req, mm_tokens)
 
     # --------------------------------------------------------- worker loops
     def _encode_worker(self) -> None:
@@ -370,22 +467,7 @@ class EPDEngine:
                 req, sid, n, idx, key = self._eq.get(timeout=0.05)
             except queue.Empty:
                 continue
-            try:
-                tokens = self.encode_stage.encode_shard(req, idx)
-                merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
-                if merged is None or req.finished:
-                    continue
-                if key is not None:
-                    self.mm_cache.put(key, merged)
-                req.t_encoded = time.perf_counter()
-                req.advance(RequestState.PREFILLING)
-                self.psi_ep.send(req, merged)
-                self._deliver_inflight(key, merged)
-            except Exception as e:                      # noqa: BLE001
-                self._fail(req, f"encode failed: {e!r}")
-                self.psi_ep.drop(req.req_id)
-                # byte-identical waiters would fail identically
-                self._fail_inflight(key, f"encode failed: {e!r}")
+            self._run_encode_shard(self.encode_stage, req, sid, n, idx, key)
 
     def _sched_worker(self) -> None:
         """Paged mode: ONE loop drives the continuous-batching scheduler

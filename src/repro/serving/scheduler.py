@@ -79,6 +79,13 @@ class Scheduler:
         self.queue.insert(self._front, (req, mm_tokens))
         self._front += 1
 
+    def begin_requeue_batch(self) -> None:
+        """Reset the front-insertion cursor before a batch of ``requeue``
+        calls made OUTSIDE ``step()`` (a cluster instance draining its
+        cross-instance requeue channel between iterations); without this
+        the cursor still points past the previous step's insertions."""
+        self._front = 0
+
     def _drain_arrivals(self) -> None:
         while True:
             try:

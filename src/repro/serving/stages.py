@@ -47,7 +47,14 @@ class ServeStats:
             "peak_cache_bytes": 0, "preemptions": 0,
             "mm_cache_hits": 0, "mm_cache_misses": 0,
             "prefill_chunks": 0, "admission_backoffs": 0,
-            "mm_inflight_hits": 0}
+            "mm_inflight_hits": 0,
+            # per-stage job counters (sim cross-validation reads these;
+            # both engines bump them) + cluster-only bookkeeping
+            # (pd_migrations / role_switches / role_seconds stay 0/empty
+            # on single-pipeline engines)
+            "encode_shards": 0, "prefill_completions": 0,
+            "pd_migrations": 0, "role_switches": 0,
+            "monitor_errors": 0, "role_seconds": {}}
         self.live_cache_bytes = 0        # dense-mode KV accounting
 
     def peak(self, live_bytes: int) -> None:
@@ -68,6 +75,12 @@ class ServeStats:
     def bump(self, key: str, n: int = 1) -> None:
         with self.lock:
             self.data[key] += n
+
+    def add_role_time(self, role: str, seconds: float) -> None:
+        """Accumulate per-role occupancy (cluster role-switch accounting)."""
+        with self.lock:
+            occ = self.data["role_seconds"]
+            occ[role] = occ.get(role, 0.0) + seconds
 
 
 def cache_nbytes(cache) -> int:
@@ -103,11 +116,17 @@ def _sample_one(logits, req: ServeRequest) -> int:
 class EncodeStage:
     """E: IRP patch-group sharding + the jitted multimodal encoder."""
 
-    def __init__(self, model, cfg: ArchConfig, params, n_workers: int):
+    def __init__(self, model, cfg: ArchConfig, params, n_workers: int, *,
+                 kit: Optional["PagedJitKit"] = None,
+                 stats: Optional[ServeStats] = None):
         self.cfg = cfg
         self.params = params
         self.n_workers = max(1, n_workers)
-        self.encode_fn = jax.jit(model.encode) if model.encode else None
+        if kit is not None:
+            self.encode_fn = kit.encode_fn
+        else:
+            self.encode_fn = jax.jit(model.encode) if model.encode else None
+        self.stats = stats
         self.shards_run = 0              # total shard forwards executed
         self._lock = threading.Lock()
 
@@ -130,6 +149,8 @@ class EncodeStage:
         tokens = np.asarray(self.encode_fn(self.params, shard)[0])
         with self._lock:
             self.shards_run += 1
+        if self.stats is not None:
+            self.stats.bump("encode_shards")
         return tokens
 
 
@@ -204,7 +225,8 @@ class DensePrefillStage:
 class PagedKVState:
     """Shared paged KV pool + block manager (P writes, D reads/appends)."""
 
-    def __init__(self, model, cfg: ArchConfig, ecfg: EngineConfig):
+    def __init__(self, model, cfg: ArchConfig, ecfg: EngineConfig, *,
+                 kit: Optional["PagedJitKit"] = None):
         bs = ecfg.kv_block_size
         self.mgr = KVBlockManager(ecfg.kv_blocks, bs)
         self.lock = threading.Lock()         # guards mgr
@@ -212,10 +234,55 @@ class PagedKVState:
         self.max_blocks = math.ceil(ecfg.max_seq_len / bs)
         self.trash = ecfg.kv_blocks          # reserved block id N-1
         self.k_pool, self.v_pool = model.init_kv_pool(ecfg.kv_blocks, bs)
+        # migration scatter: jitted + pool-donating via the shared kit (one
+        # compile per migrated block count serves every instance; on
+        # accelerators donation updates the pool in place instead of
+        # copying it per migration) — eager fallback for standalone use
+        self._inject_fn = kit.pool_inject if kit is not None else None
         # bytes of one (k + v) block pair, for peak-memory accounting
         self.block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
                                 * cfg.head_dim
                                 * self.k_pool.dtype.itemsize)
+
+    # -------------------------------------------------- PD cache migration
+    def extract(self, req_id: int) -> tuple[np.ndarray, np.ndarray]:
+        """Copy a request's KV blocks out of this pool and free them — the
+        source half of a cross-instance ψ_PD migration (the paper's PD
+        cache transfer). Returns (k, v) of shape (L, nb, bs, K, hd); the
+        byte-exact copy keeps migrated decode bit-identical to local."""
+        with self.lock:
+            blocks = self.mgr.owner_blocks(req_id)
+        ids = jnp.asarray(blocks, jnp.int32)
+        with self.pool_lock:
+            k = np.asarray(self.k_pool[:, ids])
+            v = np.asarray(self.v_pool[:, ids])
+        with self.lock:
+            self.mgr.free(req_id)
+        return k, v
+
+    def inject(self, req_id: int, k_blocks: np.ndarray,
+               v_blocks: np.ndarray, n_tokens: int) -> bool:
+        """Allocate blocks and scatter migrated KV into this pool — the
+        destination half of a ψ_PD migration. Returns False (allocating
+        nothing) when the pool cannot hold the sequence right now; the
+        caller backs off until decode retirements free blocks. ``+1``
+        headroom mirrors prefill admission (the first decode write never
+        needs an append)."""
+        with self.lock:
+            if not self.mgr.can_allocate(n_tokens + 1):
+                return False
+            blocks = self.mgr.allocate(req_id, n_tokens + 1)
+        ids = jnp.asarray(blocks[:k_blocks.shape[1]], jnp.int32)
+        k = jnp.asarray(k_blocks, self.k_pool.dtype)
+        v = jnp.asarray(v_blocks, self.v_pool.dtype)
+        with self.pool_lock:
+            if self._inject_fn is not None:
+                self.k_pool, self.v_pool = self._inject_fn(
+                    self.k_pool, self.v_pool, k, v, ids)
+            else:
+                self.k_pool = self.k_pool.at[:, ids].set(k)
+                self.v_pool = self.v_pool.at[:, ids].set(v)
+        return True
 
 
 def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch):
@@ -249,7 +316,8 @@ class PagedPrefillStage:
     unchunked engine. ψ_PD stays a block-table handoff (PrefillProgress)."""
 
     def __init__(self, model, cfg: ArchConfig, params,
-                 ecfg: EngineConfig, stats: ServeStats, kv: PagedKVState):
+                 ecfg: EngineConfig, stats: ServeStats, kv: PagedKVState, *,
+                 kit: Optional["PagedJitKit"] = None):
         self.cfg = cfg
         self.params = params
         self.stats = stats
@@ -259,18 +327,13 @@ class PagedPrefillStage:
         # blocks (the final partial chunk pads into its own allocation)
         self.chunk = (-(-ecfg.prefill_chunk // bs) * bs
                       if ecfg.prefill_chunk > 0 else 0)
-        # donate the pool buffers so XLA updates them in place instead of
-        # copying the whole pool every step (CPU ignores donation and
-        # warns, so only donate on accelerators)
-        on_cpu = jax.default_backend() == "cpu"
-        self._prefill_core = jax.jit(
-            lambda p, b: dense.prefill_core(p, cfg, b))
-        self._pool_write = jax.jit(
-            dense.pool_write_prefill,
-            donate_argnums=() if on_cpu else (0, 1))
-        self._chunk_step = jax.jit(
-            lambda p, kp, vp, b: _prefill_chunk_step(cfg, p, kp, vp, b),
-            donate_argnums=() if on_cpu else (1, 2))
+        # the jitted programs live in a PagedJitKit so a multi-instance
+        # cluster compiles each graph ONCE and every instance (including
+        # ones created by a role switch) reuses the same executables
+        kit = kit or PagedJitKit(model, cfg)
+        self._prefill_core = kit.prefill_core
+        self._pool_write = kit.pool_write
+        self._chunk_step = kit.chunk_step
 
     # ------------------------------------------------------------ admission
     def start(self, req: ServeRequest, mm_tokens: Optional[np.ndarray]
@@ -367,6 +430,7 @@ class PagedPrefillStage:
         task.first_tok = tok
         task.req.accept(tok)   # stop-at-first-token retires at D admission
         task.req.t_first_token = time.perf_counter()
+        self.stats.bump("prefill_completions")
         return True
 
     # ------------------------------------------------------------- compat
@@ -450,6 +514,43 @@ def _paged_step_sampled(model, params, batch, force_ref: bool):
     return logits, nxt, ks, vs
 
 
+class PagedJitKit:
+    """The jitted programs behind the paged E/P/D stages.
+
+    Stage objects hold per-pool *state*; the kit holds the pure compiled
+    *functions*. One kit serves every stage instance built from the same
+    (model, cfg) — a multi-instance cluster compiles each graph once, and
+    a dynamic role switch builds fresh stage objects without recompiling.
+
+    Pool buffers are donated so XLA updates them in place instead of
+    copying the whole pool every step (CPU ignores donation and warns, so
+    donation is only enabled on accelerators)."""
+
+    def __init__(self, model, cfg: ArchConfig):
+        on_cpu = jax.default_backend() == "cpu"
+        # Pallas kernel only off interpret-mode on TPU; elsewhere the jnp
+        # oracle keeps the batched step fast (same contract).
+        force_ref = jax.default_backend() != "tpu"
+        self.encode_fn = jax.jit(model.encode) if model.encode else None
+        self.prefill_core = jax.jit(
+            lambda p, b: dense.prefill_core(p, cfg, b))
+        self.pool_write = jax.jit(
+            dense.pool_write_prefill,
+            donate_argnums=() if on_cpu else (0, 1))
+        self.chunk_step = jax.jit(
+            lambda p, kp, vp, b: _prefill_chunk_step(cfg, p, kp, vp, b),
+            donate_argnums=() if on_cpu else (1, 2))
+        self.decode_step = jax.jit(
+            lambda p, b: _paged_step_sampled(model, p, b, force_ref),
+            donate_argnums=() if on_cpu else (1,))
+        # PD-migration scatter (PagedKVState.inject): retraces per
+        # migrated block count, donates the destination pool
+        self.pool_inject = jax.jit(
+            lambda kp, vp, k, v, ids: (kp.at[:, ids].set(k),
+                                       vp.at[:, ids].set(v)),
+            donate_argnums=() if on_cpu else (0, 1))
+
+
 class PagedDecodeStage:
     """D (paged): fixed decode slots over the shared paged pool — admit
     from ψ_PD into free slots, grow allocations via KVBlockManager.append,
@@ -460,7 +561,8 @@ class PagedDecodeStage:
     def __init__(self, model, cfg: ArchConfig, params, ecfg: EngineConfig,
                  stats: ServeStats, kv: PagedKVState,
                  on_finish: Callable[[ServeRequest], None],
-                 on_requeue: Callable[[ServeRequest, Any], None]):
+                 on_requeue: Callable[[ServeRequest, Any], None], *,
+                 kit: Optional[PagedJitKit] = None):
         self.params = params
         self.stats = stats
         self.kv = kv
@@ -476,13 +578,8 @@ class PagedDecodeStage:
         self._top_ps = np.ones((n,), np.float32)
         self._seeds = np.zeros((n,), np.uint32)
         self._gen = np.zeros((n,), np.int32)     # tokens generated so far
-        # Pallas kernel only off interpret-mode on TPU; elsewhere the jnp
-        # oracle keeps the batched step fast (same contract).
-        force_ref = jax.default_backend() != "tpu"
-        on_cpu = jax.default_backend() == "cpu"
-        self._step = jax.jit(
-            lambda p, b: _paged_step_sampled(model, p, b, force_ref),
-            donate_argnums=() if on_cpu else (1,))
+        kit = kit or PagedJitKit(model, cfg)
+        self._step = kit.decode_step
 
     # ------------------------------------------------------------- admit
     def _admit(self, psi_pd: PsiPD) -> None:

@@ -59,6 +59,22 @@ class PrefillProgress:
         return self.n_done >= self.total
 
 
+@dataclass
+class MigratedPrefill:
+    """ψ_PD payload BETWEEN instances: the prompt KV copied out of the
+    prefill worker's pool (the paper's PD cache migration), waiting to be
+    injected into a decode worker's pool. Once injected, the decode stage
+    admits it exactly like a local ``PrefillProgress`` (same ``req`` /
+    ``first_tok`` / ``total`` / ``mm_tokens`` surface); ``k_blocks`` /
+    ``v_blocks`` are dropped after injection to release the copy."""
+    req: Any
+    first_tok: int
+    total: int                           # prompt tokens already prefetched
+    mm_tokens: Optional[np.ndarray]
+    k_blocks: Optional[np.ndarray]       # (L, nb, bs, K, hd)
+    v_blocks: Optional[np.ndarray]
+
+
 class MMTokenCache:
     """Content-hash-keyed LRU cache of merged multimodal tokens.
 
@@ -160,6 +176,10 @@ class PsiEP:
         """Non-blocking variant (scheduler drain); raises queue.Empty."""
         return self._q.get_nowait()
 
+    def qsize(self) -> int:
+        """Pending deliveries (least-loaded routing reads queue depth)."""
+        return self._q.qsize()
+
     def drain(self) -> list:
         """Empty the channel (shutdown): every undelivered (req, mm)."""
         return drain_queue(self._q)
@@ -184,6 +204,10 @@ class PsiPD:
     def recv_nowait(self):
         """Next handoff; raises queue.Empty when none pending."""
         return self._q.get_nowait()
+
+    def qsize(self) -> int:
+        """Unadmitted handoffs (least-loaded routing reads queue depth)."""
+        return self._q.qsize()
 
     def drain(self) -> list:
         """Empty the channel (shutdown): every unadmitted handoff."""

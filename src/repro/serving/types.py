@@ -116,6 +116,30 @@ class EngineConfig:
 
 
 @dataclass
+class ClusterConfig:
+    """Multi-instance cluster topology + role-switching knobs.
+
+    ``spec`` uses the paper's notation: ``"2E1P1D"`` is true EPD
+    disaggregation, ``"4EPD"`` reproduces the vLLM aggregated baseline,
+    ``"3EP1D"`` DistServe. Each instance runs the stages of its role on
+    one serialized executor thread over its OWN KV/MM pools (sized by the
+    per-instance ``EngineConfig``); ψ_EP moves merged multimodal tokens
+    and ψ_PD migrates prompt KV between instances.
+
+    Role switching (paper §3.2.4) re-roles an idle single-letter instance
+    when the ``LoadEstimator``'s per-stage demand shifts: drain -> swap
+    stage set/pools -> cooldown. ``monitor_interval`` is how often the
+    monitor thread re-evaluates; ``switch_cooldown`` is the anti-thrash
+    window an instance sits out after switching. A stage never drops to
+    zero instances (donors need >= 2 of their letter)."""
+    spec: str = "1EPD"
+    assign_policy: str = "least_loaded"     # or "round_robin"
+    role_switch: bool = False
+    monitor_interval: float = 0.25          # seconds (real-time monitor)
+    switch_cooldown: float = 1.0            # anti-thrash, seconds
+
+
+@dataclass
 class ServeRequest:
     """One request's journey through the stage graph (also the result)."""
     req_id: int

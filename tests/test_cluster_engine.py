@@ -1,0 +1,173 @@
+"""ClusterEngine: paper-notation topologies over the real engine.
+
+Parity notes (see PR 3 / test_stop_tokens): GREEDY decode is asserted
+bit-identical — the ``"1EPD"`` cluster drives the same Scheduler + stage
+code as ``EPDEngine`` over one shared pool, and the cross-instance ψ_PD
+migration is a byte-exact pool copy, so disaggregated topologies emit
+the same greedy streams too. Nucleus (temperature>0) sampling is
+EXCLUDED from cross-engine parity: it is ULP-sensitive near the top-p
+boundary across kernel paths; seeded sampling remains deterministic
+against its own topology.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ClusterConfig, ClusterEngine, EPDEngine,
+                           EngineConfig, ServeRequest)
+
+pytestmark = pytest.mark.cluster
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _ecfg(**kw):
+    base = dict(n_encode_workers=2, max_new_tokens=8, decode_batch=2)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _requests(cfg, base_id):
+    """3 multimodal (distinct payloads) + 2 text-only requests."""
+    rng = np.random.default_rng(42)
+    M = 2 * cfg.modality.tokens_per_item
+    reqs = []
+    for i in range(5):
+        mm = i < 3
+        reqs.append(ServeRequest(
+            req_id=base_id + i,
+            prompt=rng.integers(0, cfg.vocab, 16).astype(np.int32),
+            mm_embeds=(rng.standard_normal((M, cfg.modality.enc_d_model))
+                       .astype(np.float32) * 0.1) if mm else None,
+            mm_positions=(np.arange(1, M + 1, dtype=np.int32)
+                          if mm else None),
+            max_new_tokens=8))
+    return reqs
+
+
+def _serve(engine, reqs):
+    engine.start()
+    try:
+        for r in reqs:
+            engine.submit(r)
+        return {r.req_id - reqs[0].req_id: list(
+            engine.result(r.req_id, timeout=300).tokens) for r in reqs}
+    finally:
+        engine.stop()
+
+
+@pytest.fixture(scope="module")
+def ref_tokens(vlm_setup):
+    """Greedy token streams from the single-pipeline EPDEngine."""
+    cfg, params = vlm_setup
+    return _serve(EPDEngine(cfg, params, _ecfg()), _requests(cfg, 0))
+
+
+def test_1epd_greedy_parity_bit_identical(vlm_setup, ref_tokens):
+    """Acceptance: ClusterEngine("1EPD") == EPDEngine, token for token."""
+    cfg, params = vlm_setup
+    clu = ClusterEngine(cfg, params, _ecfg(), "1EPD")
+    got = _serve(clu, _requests(cfg, 100))
+    assert got == ref_tokens
+    assert clu.stats["pd_migrations"] == 0      # P and D share the pool
+
+
+def test_disaggregated_parity_and_migrations(vlm_setup, ref_tokens):
+    """"2E1P1D" (true EPD): every prefill migrates its KV to the decode
+    instance, byte-exact — greedy streams stay bit-identical."""
+    cfg, params = vlm_setup
+    clu = ClusterEngine(cfg, params, _ecfg(), "2E1P1D")
+    got = _serve(clu, _requests(cfg, 200))
+    assert got == ref_tokens
+    assert clu.stats["pd_migrations"] == 5      # one per request
+    assert clu.stats["encode_shards"] == 6      # 3 mm requests x IRP 2
+    # every pool is empty after the run
+    for inst in clu.instances:
+        if inst.kv is not None:
+            assert inst.kv.mgr.used_blocks == 0
+
+
+def test_distserve_baseline_topology(vlm_setup, ref_tokens):
+    """"2EP1D" (DistServe shape): aggregated encode+prefill instances,
+    disaggregated decode — same greedy streams."""
+    cfg, params = vlm_setup
+    clu = ClusterEngine(
+        cfg, params, _ecfg(),
+        ClusterConfig(spec="2EP1D", assign_policy="round_robin"))
+    got = _serve(clu, _requests(cfg, 300))
+    assert got == ref_tokens
+    assert clu.stats["pd_migrations"] == 5
+
+
+def test_vllm_baseline_topology(vlm_setup, ref_tokens):
+    """"2EPD" (vLLM shape): fully aggregated instances, zero migrations."""
+    cfg, params = vlm_setup
+    clu = ClusterEngine(cfg, params, _ecfg(), "2EPD")
+    got = _serve(clu, _requests(cfg, 400))
+    assert got == ref_tokens
+    assert clu.stats["pd_migrations"] == 0
+
+
+def test_mm_cache_and_streaming(vlm_setup):
+    """Cluster-level ψ_EP cache: a repeated payload skips E entirely;
+    stream() works through the shared EngineBase machinery."""
+    cfg, params = vlm_setup
+    rng = np.random.default_rng(5)
+    M = 2 * cfg.modality.tokens_per_item
+    mm = rng.standard_normal((M, cfg.modality.enc_d_model)).astype(
+        np.float32) * 0.1
+    prompt = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+    mk = lambda rid: ServeRequest(
+        req_id=rid, prompt=prompt.copy(), mm_embeds=mm.copy(),
+        mm_positions=np.arange(1, M + 1, dtype=np.int32),
+        max_new_tokens=4)
+    clu = ClusterEngine(cfg, params, _ecfg(), "2E1P1D")
+    clu.start()
+    try:
+        h1 = clu.submit(mk(1))
+        first = list(h1.stream(timeout=300))
+        h1.result(timeout=300)
+        h2 = clu.submit(mk(2))
+        out2 = h2.result(timeout=300)
+    finally:
+        clu.stop()
+    assert out2.mm_cache_hit
+    assert clu.stats["mm_cache_hits"] == 1
+    # identical payload + greedy decode: identical stream, zero new shards
+    assert len(first) == 4 and list(out2.tokens) == first
+
+
+def test_spec_and_config_validation(vlm_setup):
+    cfg, params = vlm_setup
+    with pytest.raises(ValueError):              # no D coverage
+        ClusterEngine(cfg, params, _ecfg(), "2E1P")
+    with pytest.raises(ValueError):              # unparseable spec
+        ClusterEngine(cfg, params, _ecfg(), "xyz")
+    with pytest.raises(ValueError):              # unknown routing policy
+        ClusterEngine(cfg, params, _ecfg(),
+                      ClusterConfig(spec="1EPD", assign_policy="bogus"))
+    with pytest.raises(ValueError):              # dense mode stays EPDEngine
+        ClusterEngine(cfg, params, _ecfg(mode="dense"), "1EPD")
+
+
+def test_mm_request_requires_e_coverage(vlm_setup):
+    """A "1P1D" cluster serves text; a modality payload is rejected at
+    submit (clear error instead of a silent text-only prefill)."""
+    cfg, params = vlm_setup
+    rng = np.random.default_rng(9)
+    M = cfg.modality.tokens_per_item
+    clu = ClusterEngine(cfg, params, _ecfg(), "1P1D")
+    with pytest.raises(ValueError, match="no E-capable"):
+        clu.submit(ServeRequest(
+            req_id=1, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+            mm_embeds=rng.standard_normal(
+                (M, cfg.modality.enc_d_model)).astype(np.float32),
+            mm_positions=np.arange(1, M + 1, dtype=np.int32),
+            max_new_tokens=2))

@@ -1,0 +1,176 @@
+"""Sim-vs-real cross-validation: the same request trace through the
+real ClusterEngine and the discrete-event ``core.simulator.Simulator``
+must agree on STRUCTURAL metrics — completion counts, per-stage job
+counts (IRP encode shards, prefills, decode steps), preemption and
+role-switch counts. Wall-clock timings are never compared: the sim uses
+the analytical cost model and this container's timings are noisy.
+
+This is the contract the resource allocator relies on (§3.2.3: the
+allocator optimizes over the simulator, the engine must execute the
+same cluster language).
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_80G
+from repro.core.cluster import ClusterSpec, build_cluster
+from repro.core.request import Request
+from repro.core.simulator import Simulator
+from repro.models import build_model
+from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                           RequestState, ServeRequest)
+
+pytestmark = pytest.mark.cluster
+
+N_REQ = 6
+OUT_LEN = 6
+PROMPT = 16
+IRP = 2
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _trace_pair(cfg):
+    """One logical trace, in both dialects: even-indexed requests carry a
+    2-patch-group modality payload, odd ones are text-only. The sim side
+    is DERIVED from the serve side via ``api.sim_request_of`` — the same
+    conversion the cluster's LoadEstimator feed uses."""
+    from repro.serving.api import sim_request_of
+    rng = np.random.default_rng(11)
+    tpi = cfg.modality.tokens_per_item
+    serve, sim = [], []
+    for i in range(N_REQ):
+        mm = (i % 2 == 0)
+        M = 2 * tpi
+        serve.append(ServeRequest(
+            req_id=i, prompt=rng.integers(0, cfg.vocab, PROMPT).astype(
+                np.int32),
+            mm_embeds=(rng.standard_normal((M, cfg.modality.enc_d_model))
+                       .astype(np.float32) * 0.1) if mm else None,
+            mm_positions=(np.arange(1, M + 1, dtype=np.int32)
+                          if mm else None),
+            max_new_tokens=OUT_LEN))
+        sim.append(sim_request_of(cfg, serve[-1], arrival=0.05 * i))
+    return serve, sim
+
+
+def test_structural_agreement_2e1p1d(vlm_setup):
+    cfg, params = vlm_setup
+    serve_reqs, sim_reqs = _trace_pair(cfg)
+
+    # ---- real engine (mm cache off so every mm request really encodes,
+    # matching the simulator which has no cross-request token cache)
+    clu = ClusterEngine(
+        cfg, params,
+        EngineConfig(n_encode_workers=IRP, max_new_tokens=OUT_LEN,
+                     decode_batch=4, mm_cache_entries=0),
+        "2E1P1D")
+    clu.start()
+    try:
+        for r in serve_reqs:
+            clu.submit(r)
+            time.sleep(0.01)
+        outs = [clu.result(r.req_id, timeout=300) for r in serve_reqs]
+    finally:
+        clu.stop()
+
+    # ---- simulator, same topology and IRP degree
+    spec = ClusterSpec("2E1P1D", irp=True, irp_degree=IRP)
+    sim = Simulator(cfg, A100_80G, build_cluster(spec, cfg, A100_80G),
+                    irp=True, irp_degree=IRP)
+    sim_out = sim.run(sim_reqs)
+
+    # completion counts
+    assert sum(o.state is RequestState.DONE for o in outs) == N_REQ
+    assert sum(r.done() for r in sim_out) == N_REQ
+    # per-stage job counts: encode shards (IRP), prefills, decode steps
+    assert clu.stats["encode_shards"] == \
+        sum(len(r.shard_done) for r in sim_out)
+    assert clu.stats["prefill_completions"] == \
+        sum(1 for r in sim_out if r.prefill_end >= 0)
+    # engine decode_tokens counts slot-steps = (output_len - 1) per
+    # request (the first token comes from prefill), exactly the
+    # simulator's per-request decode-step residency
+    assert clu.stats["decode_tokens"] == \
+        sum(r.output_len - 1 for r in sim_out)
+    # emitted lengths agree request-by-request
+    assert {o.req_id: len(o.tokens) for o in outs} == \
+        {r.req_id: r.output_len for r in sim_out}
+    # neither side preempted or switched
+    assert clu.stats["preemptions"] == 0
+    assert clu.stats["role_switches"] == 0 and not sim.switch_log
+
+
+def test_role_switch_direction_agreement(vlm_setup):
+    """Under the same encode-heavy -> decode-heavy shift, both the engine
+    monitor (LoadEstimator-driven) and the simulator monitor (queue-
+    pressure-driven) re-role an E instance to D — structural agreement
+    on switch count (>= 1) and direction, not on timing."""
+    cfg, params = vlm_setup
+    tpi = cfg.modality.tokens_per_item
+    rng = np.random.default_rng(12)
+
+    # ---- simulator side
+    short = [Request(req_id=100 + i, arrival=0.2 * i, prompt_len=PROMPT,
+                     n_items=2, patches_per_item=1, tokens_per_patch=tpi,
+                     output_len=5) for i in range(6)]
+    long_ = [Request(req_id=200 + i, arrival=short[-1].arrival + 0.2 * i,
+                     prompt_len=PROMPT, n_items=0, patches_per_item=1,
+                     tokens_per_patch=tpi, output_len=400)
+             for i in range(30)]
+    spec = ClusterSpec("3E1P1D", role_switch=True, decode_batch=4)
+    sim = Simulator(cfg, A100_80G, build_cluster(spec, cfg, A100_80G),
+                    role_switch=True, monitor_interval=0.5)
+    sim_out = sim.run(short + long_)
+    assert sum(r.done() for r in sim_out) == len(short) + len(long_)
+    assert len(sim.switch_log) >= 1
+    sim_first = sim.switch_log[0]
+
+    # ---- real engine, same shape of shift (shorter outputs: real math)
+    clu = ClusterEngine(
+        cfg, params,
+        EngineConfig(n_encode_workers=2, max_new_tokens=24, decode_batch=2),
+        ClusterConfig(spec="3E1P1D", role_switch=False))
+    clu.start()
+    try:
+        M = 2 * tpi
+        for i in range(4):
+            clu.submit(ServeRequest(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab, PROMPT).astype(np.int32),
+                mm_embeds=rng.standard_normal(
+                    (M, cfg.modality.enc_d_model)).astype(np.float32) * 0.1,
+                mm_positions=np.arange(1, M + 1, dtype=np.int32),
+                max_new_tokens=2))
+        for i in range(4):
+            clu.result(i, timeout=300)
+        ids = list(range(10, 26))
+        for i in ids:
+            clu.submit(ServeRequest(
+                req_id=i,
+                prompt=rng.integers(0, cfg.vocab, PROMPT).astype(np.int32),
+                max_new_tokens=24))
+            time.sleep(0.005)
+        eng_switch = None
+        for _ in range(200):
+            eng_switch = clu.monitor_once()
+            if eng_switch:
+                break
+            time.sleep(0.02)
+        for i in ids:
+            clu.result(i, timeout=300)
+    finally:
+        clu.stop()
+    assert eng_switch is not None
+    # direction agreement: both monitors re-role E -> D first
+    assert (sim_first[2], sim_first[3]) == ("E", "D")
+    assert (eng_switch[1], eng_switch[2]) == ("E", "D")
