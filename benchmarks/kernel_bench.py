@@ -1,16 +1,33 @@
 """Kernel micro-benchmarks: per-call wall time of the jnp oracle path on
-this host (the Pallas kernels themselves are TPU-targeted; interpret mode
-is a correctness harness, not a performance proxy)."""
+this host, PLUS kernel-vs-ref rows (the Pallas kernels in interpret mode
+— a correctness harness, not a performance proxy off-TPU; the derived
+column carries the max |kernel - ref| deviation so CI logs catch drift)
+and a packed-runner vs two-program serving iteration row.
+
+Runnable standalone (``python benchmarks/kernel_bench.py [--quick]``) or
+through ``python -m benchmarks.run --only kernel_bench``.
+"""
 from __future__ import annotations
 
 import time
 
+if __name__ == "__main__":
+    # standalone invocation: put the repo root and src/ on sys.path so
+    # `benchmarks.common` and `repro` resolve
+    import os
+    import sys
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attn import decode_attn_ref
-from repro.kernels.flash_prefill import flash_prefill_ref
+from repro.kernels.decode_attn import decode_attn, decode_attn_ref
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
 from repro.kernels.mamba2_scan import mamba2_ssd_ref
+from repro.kernels.paged_attn.kernel import paged_decode_attn
+from repro.kernels.paged_attn.ref import paged_decode_attn_ref
 from repro.kernels.rwkv6_scan import rwkv6_wkv_ref
 
 from benchmarks.common import Row
@@ -26,6 +43,12 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def _maxdiff(a, b) -> float:
+    import numpy as np
+    return float(np.abs(np.asarray(a, np.float32)
+                        - np.asarray(b, np.float32)).max())
+
+
 def run(quick: bool = False) -> list[Row]:
     rows = []
     ks = jax.random.split(KEY, 8)
@@ -36,6 +59,14 @@ def run(quick: bool = False) -> list[Row]:
     f = jax.jit(lambda a, b, c: flash_prefill_ref(a, b, c, causal=True))
     rows.append(Row(f"kernel/flash_prefill_ref/S{S}", _time(f, q, k, v),
                     "cpu_oracle"))
+    # kernel vs ref: interpret mode off-TPU (compiled on TPU) at a
+    # smaller S so the quick tier stays quick
+    Sk_ = 128
+    fk = jax.jit(lambda a, b, c: flash_prefill(
+        a, b, c, causal=True, interpret=jax.default_backend() != "tpu"))
+    qs, kss, vs = q[:, :, :Sk_], k[:, :, :Sk_], v[:, :, :Sk_]
+    rows.append(Row(f"kernel/flash_prefill/S{Sk_}", _time(fk, qs, kss, vs, reps=2),
+                    f"maxdiff={_maxdiff(fk(qs, kss, vs), f(qs, kss, vs)):.1e}"))
 
     W = 2048 if quick else 8192
     qd = jax.random.normal(ks[3], (4, H, hd), jnp.float32)
@@ -45,6 +76,31 @@ def run(quick: bool = False) -> list[Row]:
     fd = jax.jit(decode_attn_ref)
     rows.append(Row(f"kernel/decode_attn_ref/W{W}", _time(fd, qd, kc, vc, ln),
                     "cpu_oracle"))
+    Wk = 512
+    fdk = jax.jit(lambda a, b, c, d: decode_attn(
+        a, b, c, d, interpret=jax.default_backend() != "tpu"))
+    kcs, vcs = kc[:, :Wk], vc[:, :Wk]
+    lns = jnp.full((4,), Wk, jnp.int32)
+    rows.append(Row(
+        f"kernel/decode_attn/W{Wk}", _time(fdk, qd, kcs, vcs, lns, reps=2),
+        f"maxdiff={_maxdiff(fdk(qd, kcs, vcs, lns), fd(qd, kcs, vcs, lns)):.1e}"))
+
+    # paged decode: kernel (interpret) vs gather-oracle over one pool
+    nb, bs, mb = 64, 16, 8
+    kp = jax.random.normal(ks[6], (nb, bs, K, hd), jnp.float32)
+    vp = jax.random.normal(ks[7], (nb, bs, K, hd), jnp.float32)
+    tables = jax.random.randint(ks[0], (4, mb), 0, nb, jnp.int32)
+    lens = jnp.asarray([mb * bs, 40, 17, 100], jnp.int32)
+    fp_ref = jax.jit(paged_decode_attn_ref)
+    rows.append(Row(f"kernel/paged_attn_ref/b{bs}x{mb}",
+                    _time(fp_ref, qd, kp, vp, tables, lens), "cpu_oracle"))
+    fpk = jax.jit(lambda a, b, c, d, e: paged_decode_attn(
+        a, b, c, d, e, interpret=jax.default_backend() != "tpu"))
+    rows.append(Row(
+        f"kernel/paged_attn/b{bs}x{mb}",
+        _time(fpk, qd, kp, vp, tables, lens, reps=2),
+        f"maxdiff="
+        f"{_maxdiff(fpk(qd, kp, vp, tables, lens), fp_ref(qd, kp, vp, tables, lens)):.1e}"))
 
     Sm = 256 if quick else 1024
     x = jax.random.normal(ks[6], (1, Sm, 8, 64), jnp.float32)
@@ -64,4 +120,71 @@ def run(quick: bool = False) -> list[Row]:
     fr = jax.jit(lambda *t: rwkv6_wkv_ref(*t)[0])
     rows.append(Row(f"kernel/rwkv6_wkv_ref/S{Sm}",
                     _time(fr, r, kk, vv, w, u), "cpu_oracle"))
+
+    rows.extend(_runner_rows(quick))
     return rows
+
+
+def _runner_rows(quick: bool) -> list[Row]:
+    """Packed ModelRunner vs the two-program path: wall-clock of the SAME
+    mixed workload (concurrent decode + chunked prefill) per runner. The
+    derived column is the packed path's speedup (dispatches drop from
+    1 + n_chunks to 1 per iteration; on CPU the margin is modest and
+    noisy, so CI treats these as structural rows, not a gate)."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EngineConfig, EPDEngine, ServeRequest
+
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    n_req = 3 if quick else 6
+    prompts = [rng.integers(0, cfg.vocab, 70 + 16 * i).astype(np.int32)
+               for i in range(n_req)]
+
+    def serve(runner: str) -> tuple[float, int, dict]:
+        eng = EPDEngine(cfg, params, EngineConfig(
+            decode_batch=4, kv_blocks=128, max_seq_len=256,
+            prefill_chunk=32, runner=runner))
+        eng.start()
+        try:
+            for i, p in enumerate(prompts):   # warm the compile caches
+                eng.submit(ServeRequest(req_id=i + 1, prompt=p.copy(),
+                                        max_new_tokens=4))
+            for i in range(n_req):
+                eng.result(i + 1, timeout=300)
+            steps0 = eng.stats["packed_steps"]
+            t0 = time.perf_counter()
+            for i, p in enumerate(prompts):
+                eng.submit(ServeRequest(req_id=100 + i, prompt=p.copy(),
+                                        max_new_tokens=8))
+            for i in range(n_req):
+                eng.result(100 + i, timeout=300)
+            dt = time.perf_counter() - t0
+            return dt, eng.stats["packed_steps"] - steps0, dict(eng.stats)
+        finally:
+            eng.stop()
+
+    t_two, _, _ = serve("two_program")
+    t_packed, timed_steps, stats = serve("packed")
+    us = t_packed / max(1, timed_steps) * 1e6
+    return [
+        Row("runner/two_program/mixed_wall_s", t_two * 1e6,
+            f"{t_two:.3f}s"),
+        Row("runner/packed/mixed_wall_s", t_packed * 1e6,
+            f"{t_packed:.3f}s speedup={t_two / max(t_packed, 1e-9):.2f}x"),
+        Row("runner/packed/us_per_iteration", us,
+            f"steps={timed_steps} "
+            f"compiles={stats['packed_compiles']}"),
+    ]
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(quick=args.quick):
+        print(row.csv(), flush=True)

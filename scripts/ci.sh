@@ -4,16 +4,12 @@
 #   scripts/ci.sh          # fast tier (default): unit + parity, < 2 min
 #   scripts/ci.sh full     # full tier: whole suite (~10 min) + benchmarks
 #
-# The fast tier is the inner-loop check: pure-python unit tests plus the
-# ClusterEngine("1EPD") greedy bit-identical parity test. The full tier
-# is what a merge gate runs — the entire pytest suite (including the
-# `slow`-marked cluster soak tests) and the benchmark smokes.
-#
-# NOTE: 2 seed-era tests are known-failing (hlo_analysis x2 — XLA
-# cost-analysis drift); the full-tier exit code goes red until a PR
-# fixes them, but the benchmark smoke still runs so every CI log has
-# the full picture. (The 4 former jax.shard_map failures are fixed via
-# repro/compat.py.)
+# The fast tier is the inner-loop check: pure-python unit tests, the
+# ClusterEngine("1EPD") greedy bit-identical parity test, and a pallas
+# (interpret) backend smoke so the non-default attention backend cannot
+# silently rot. The full tier is what a merge gate runs — the entire
+# pytest suite (including the `slow`-marked cluster soak tests) and the
+# benchmark smokes.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -28,8 +24,14 @@ if [ "$TIER" = "fast" ]; then
         tests/test_simulator.py \
         tests/test_api_load.py \
         tests/test_scheduler.py \
+        "tests/test_runner.py::test_registry_names_and_validation" \
+        "tests/test_runner.py::test_packed_vs_two_program_greedy_bit_identical" \
         "tests/test_cluster_engine.py::test_1epd_greedy_parity_bit_identical" \
-        "tests/test_cluster_engine.py::test_spec_and_config_validation"
+        "tests/test_cluster_engine.py::test_spec_and_config_validation" \
+        || exit $?
+    echo "== fast tier: pallas-backend engine smoke (interpret) =="
+    REPRO_ATTN_BACKEND=pallas python -m pytest -q \
+        "tests/test_runner.py::test_env_backend_engine_smoke"
     exit $?
 fi
 
@@ -64,6 +66,9 @@ echo "== smoke: role-switch benchmark (workload shift, switching on/off) =="
 # asserts >= 1 observed role switch with switching on and zero stranded
 # requests in both runs
 python benchmarks/role_switch.py --quick || exit 1
+
+echo "== smoke: kernel micro-bench (kernel-vs-ref + packed-runner rows) =="
+python benchmarks/kernel_bench.py --quick || exit 1
 
 echo "CI done (tier-1 exit: $tier1)"
 exit "$tier1"

@@ -1,4 +1,4 @@
-"""Version-compat shims for jax API drift.
+"""Version-compat shims for jax / XLA API and text-format drift.
 
 ``shard_map`` moved from ``jax.experimental.shard_map`` to the top-level
 ``jax`` namespace, and its replication-check keyword was renamed
@@ -6,12 +6,30 @@
 the NEW spelling (``jax.shard_map``-style signature with ``check_vma``);
 this shim translates for interpreters that only ship the experimental
 variant, so the same code runs on both sides of the move.
+
+``hlo_operand_name`` normalizes XLA's HLO-text operand spelling: newer
+XLA prints each operand with its full type
+(``dot(f32[64,128]{1,0} %Arg_0.1, ...)``) where older versions printed
+bare names (``dot(%Arg_0.1, ...)``). The FLOP/traffic analyzer in
+``launch.hlo_analysis`` looks shapes up by operand NAME, so un-normalized
+typed operands silently dropped every contracting-dim factor (a 64x128 @
+128x32 dot counted as 2·64·32 instead of 2·64·32·128).
 """
 from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "cost_analysis"]
+__all__ = ["shard_map", "cost_analysis", "hlo_operand_name"]
+
+
+def hlo_operand_name(operand: str) -> str:
+    """Bare computation-local name of an HLO operand reference.
+
+    Accepts both spellings — ``%name`` and ``dtype[dims]{layout} %name``
+    — and returns ``name``."""
+    if not operand:
+        return operand
+    return operand.split()[-1].lstrip("%")
 
 
 def cost_analysis(compiled) -> dict:

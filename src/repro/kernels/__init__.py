@@ -10,12 +10,21 @@ models are validated against identical semantics).
 - mamba2_scan:   chunked SSD scan (zamba2 backbone)
 - rwkv6_scan:    chunked data-dependent-decay WKV (rwkv6)
 - paged_attn:    decode attention over vLLM-style block-table paged KV pools
+
+``registry`` binds the kernels (and their pure-jnp oracles) into named
+attention backends — ``ref`` / ``pallas`` — selected per engine via
+``EngineConfig.attn_backend`` or ``$REPRO_ATTN_BACKEND``.
 """
 from repro.kernels.decode_attn import decode_attention_op
 from repro.kernels.paged_attn import paged_decode_attention_op
 from repro.kernels.flash_prefill import flash_attention
 from repro.kernels.mamba2_scan import mamba2_ssd_op
+from repro.kernels.registry import (AttentionBackend, available_backends,
+                                    get_backend, register_backend,
+                                    resolve_backend)
 from repro.kernels.rwkv6_scan import rwkv6_wkv_op
 
-__all__ = ["decode_attention_op", "flash_attention", "mamba2_ssd_op",
-           "paged_decode_attention_op", "rwkv6_wkv_op"]
+__all__ = ["AttentionBackend", "available_backends", "decode_attention_op",
+           "flash_attention", "get_backend", "mamba2_ssd_op",
+           "paged_decode_attention_op", "register_backend",
+           "resolve_backend", "rwkv6_wkv_op"]

@@ -1,0 +1,175 @@
+"""Attention-backend registry: ONE dispatch seam for every attention site.
+
+The serving stack reaches attention through four named entry points —
+full-sequence prefill, prefix+chunk (chunked prefill), contiguous-cache
+decode, and paged (block-table) decode. A backend binds all four:
+
+  ``ref``     the pure-jnp substrate functions in ``models.attention``
+              (today's default path everywhere off-TPU) plus the paged
+              gather oracle — bit-identical to the historical engine.
+  ``pallas``  the Pallas TPU kernels under ``repro.kernels`` — compiled
+              on TPU, ``interpret=True`` elsewhere, so the same backend
+              name works on every host. ``flash_prefill`` drives prefill
+              (whole-prompt AND the prefix+chunk step of chunked
+              prefill), ``paged_attn`` drives the token-packed runner and
+              the batched decode step, ``decode_attn`` drives
+              dense-cache decode.
+
+Selection: ``EngineConfig.attn_backend`` if set, else the
+``REPRO_ATTN_BACKEND`` environment variable, else the platform default
+(``pallas`` on TPU, ``ref`` everywhere else — matching the historical
+``force_ref = backend != "tpu"`` behavior). Unknown names fail fast with
+the list of registered backends, so a typo'd env var cannot silently
+fall back to the default.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (chunked_attention, decode_attention,
+                                    prefix_chunk_attention)
+
+ENV_VAR = "REPRO_ATTN_BACKEND"
+
+__all__ = ["AttentionBackend", "ENV_VAR", "available_backends",
+           "get_backend", "register_backend", "resolve_backend"]
+
+
+@dataclass(frozen=True)
+class AttentionBackend:
+    """The four attention entry points the serving stack dispatches over.
+
+    Layouts match the pure-jnp substrate (``models.attention``):
+      prefill_attention(q (B,S,H,hd), k/v (B,S,K,hd), *, causal, window,
+                        block_causal_skip) -> (B,S,H,hd)
+      prefix_chunk_attention(q/k/v (B,C,·,hd), k_prev/v_prev (B,Pmax,K,hd),
+                             prev_len ()) -> (B,C,H,hd)
+      decode_attention(q (B,H,hd), caches (B,W,K,hd), length (B,))
+      paged_attention(q (B,H,hd), pools (N,bs,K,hd),
+                      block_tables (B,max_blocks), lengths (B,))
+    """
+    name: str
+    prefill_attention: Callable
+    prefix_chunk_attention: Callable
+    decode_attention: Callable
+    paged_attention: Callable
+
+
+_REGISTRY: dict[str, AttentionBackend] = {}
+
+
+def register_backend(backend: AttentionBackend) -> AttentionBackend:
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(name: str) -> AttentionBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention backend {name!r}; "
+            f"available: {', '.join(available_backends())}") from None
+
+
+def resolve_backend(name: Optional[str] = None) -> AttentionBackend:
+    """Backend by explicit name, else ``$REPRO_ATTN_BACKEND``, else the
+    platform default (``pallas`` compiled on TPU, ``ref`` elsewhere)."""
+    if name is None:
+        name = os.environ.get(ENV_VAR) or None
+    if name is None:
+        name = "pallas" if jax.default_backend() == "tpu" else "ref"
+    return get_backend(name)
+
+
+# =================================================================== ref
+def _paged_ref(q, k_pool, v_pool, block_tables, lengths):
+    from repro.kernels.paged_attn.ref import paged_decode_attn_ref
+    return paged_decode_attn_ref(q, k_pool, v_pool, block_tables, lengths)
+
+
+register_backend(AttentionBackend(
+    name="ref",
+    prefill_attention=chunked_attention,
+    prefix_chunk_attention=prefix_chunk_attention,
+    decode_attention=decode_attention,
+    paged_attention=_paged_ref,
+))
+
+
+# ================================================================ pallas
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _flash_prefill_attention(q, k, v, *, causal=True, window=0,
+                             block_causal_skip=False, **_):
+    """``flash_prefill`` behind the substrate layout: (B,S,H,hd) in/out.
+
+    ``block_causal_skip`` is subsumed — the kernel already skips kv
+    blocks entirely above the causal diagonal."""
+    from repro.kernels.flash_prefill.kernel import flash_prefill
+    o = flash_prefill(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=causal, window=window,
+                      interpret=_interpret())
+    return o.transpose(0, 2, 1, 3)
+
+
+def _flash_prefix_chunk_attention(q, k, v, k_prev, v_prev, prev_len):
+    """Chunked-prefill attention on the flash kernel.
+
+    The chunk's queries sit at GLOBAL positions ``prev_len + i`` while the
+    flash kernel's causal mask is index-aligned, so the chunk is staged
+    into a static ``Pmax + C``-wide buffer: the prefix is compacted to the
+    front (closing the ``prev_len..Pmax`` garbage gap), the chunk KV lands
+    right after it, and the queries are scattered to start at index
+    ``prev_len`` — index-causal == position-causal, one trace for every
+    chunk of every request. Rows outside the real query span are garbage
+    and sliced away."""
+    from repro.kernels.flash_prefill.kernel import flash_prefill
+    B, C, H, hd = q.shape
+    Pmax = k_prev.shape[1]
+    S = Pmax + C
+    j = jnp.arange(S)
+    # compacted source index: [prefix(:prev_len) | chunk | clamped tail]
+    src = jnp.where(j < prev_len, j,
+                    jnp.minimum(Pmax + (j - prev_len), S - 1))
+    kc = jnp.take(jnp.concatenate([k_prev, k], axis=1), src, axis=1)
+    vc = jnp.take(jnp.concatenate([v_prev, v], axis=1), src, axis=1)
+    qs = jax.lax.dynamic_update_slice(
+        jnp.zeros((B, S) + q.shape[2:], q.dtype), q, (0, prev_len, 0, 0))
+    o = flash_prefill(qs.transpose(0, 2, 1, 3), kc.transpose(0, 2, 1, 3),
+                      vc.transpose(0, 2, 1, 3), causal=True,
+                      interpret=_interpret())
+    o = o.transpose(0, 2, 1, 3)
+    return jax.lax.dynamic_slice(o, (0, prev_len, 0, 0),
+                                 (B, C) + o.shape[2:])
+
+
+def _decode_attn_pallas(q, k_cache, v_cache, length):
+    from repro.kernels.decode_attn.kernel import decode_attn
+    return decode_attn(q, k_cache, v_cache, length, interpret=_interpret())
+
+
+def _paged_attn_pallas(q, k_pool, v_pool, block_tables, lengths):
+    from repro.kernels.paged_attn.kernel import paged_decode_attn
+    return paged_decode_attn(q, k_pool, v_pool, block_tables, lengths,
+                             interpret=_interpret())
+
+
+register_backend(AttentionBackend(
+    name="pallas",
+    prefill_attention=_flash_prefill_attention,
+    prefix_chunk_attention=_flash_prefix_chunk_attention,
+    decode_attention=_decode_attn_pallas,
+    paged_attention=_paged_attn_pallas,
+))

@@ -22,6 +22,8 @@ import re
 from collections import defaultdict
 from dataclasses import dataclass, field
 
+from repro.compat import hlo_operand_name
+
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
                 "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
@@ -152,7 +154,9 @@ class HloAnalysis:
                 continue
             name = mo.group(2).lstrip("%")
             rtype, opcode, args, attrs = _split_rhs(mo.group(3))
-            operands = [a.strip().lstrip("%") for a in _split_args(args)]
+            # newer XLA prints typed operands ("f32[64,128]{1,0} %x");
+            # normalize to the bare name the shape table is keyed by
+            operands = [hlo_operand_name(a) for a in _split_args(args)]
             op = Op(name, opcode, rtype, operands, attrs, line)
             self.comps[cur].append(op)
             self.shapes[cur][name] = rtype

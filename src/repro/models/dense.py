@@ -5,6 +5,7 @@ All stacks ``lax.scan`` over layers with stacked params; the KV cache is
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -100,15 +101,21 @@ def _ffn(lp: Params, cfg: ArchConfig, h: jnp.ndarray):
 # ------------------------------------------------------- full-seq forward
 def forward(params: Params, cfg: ArchConfig, x: jnp.ndarray,
             positions: jnp.ndarray, *, window: int = 0, return_kv: bool = False,
-            block_causal_skip: bool = False, remat: bool = False):
-    """x: (B, S, d) -> (hidden (B,S,d), kv (L,B,S,K,hd) x2 | None, aux)."""
+            block_causal_skip: bool = False, remat: bool = False,
+            backend: Any = None):
+    """x: (B, S, d) -> (hidden (B,S,d), kv (L,B,S,K,hd) x2 | None, aux).
+
+    ``backend`` is an :class:`~repro.kernels.registry.AttentionBackend`
+    routing the attention call (None = the pure-jnp substrate, identical
+    to the ``ref`` backend)."""
+    attn = backend.prefill_attention if backend is not None else chunked_attention
 
     def body(h, lp):
         q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
                               cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                               positions, cfg.rope_theta)
-        o = chunked_attention(q, k, v, causal=True, window=window,
-                              block_causal_skip=block_causal_skip)
+        o = attn(q, k, v, causal=True, window=window,
+                 block_causal_skip=block_causal_skip)
         h = h + out_project(lp["attn"], o)
         f, aux = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
         h = h + f
@@ -175,7 +182,8 @@ def loss_fn(params: Params, cfg: ArchConfig, batch: Batch, *,
 
 
 def prefill_core(params: Params, cfg: ArchConfig, batch: Batch, *,
-                 window: int = 0, block_causal_skip: bool = False
+                 window: int = 0, block_causal_skip: bool = False,
+                 backend: Any = None
                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Shared prefill forward: embed (raw ``mm_embeds`` are encoded here,
     pre-merged ``mm_tokens`` pass straight through), run the stack, return
@@ -191,11 +199,13 @@ def prefill_core(params: Params, cfg: ArchConfig, batch: Batch, *,
     positions = jnp.arange(S)[None, :]
     h, (ks, vs), _ = forward(params, cfg, x, positions, window=window,
                              return_kv=True,
-                             block_causal_skip=block_causal_skip)
+                             block_causal_skip=block_causal_skip,
+                             backend=backend)
     return lm_head(params, cfg, h[:, -1]), ks, vs
 
 
-def prefill_chunk_core(params: Params, cfg: ArchConfig, batch: Batch
+def prefill_chunk_core(params: Params, cfg: ArchConfig, batch: Batch, *,
+                       backend: Any = None
                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One position-offset chunk of a chunked prefill (paper §4 SLO story:
     a long prompt is prefilled chunk-by-chunk so decode never stalls a
@@ -213,13 +223,15 @@ def prefill_chunk_core(params: Params, cfg: ArchConfig, batch: Batch
     just the returned KV (scattered into the pool by the caller)."""
     x, positions = batch["x"], batch["positions"]
     prev_len = batch["prev_len"]
+    attn = (backend.prefix_chunk_attention if backend is not None
+            else prefix_chunk_attention)
 
     def body(h, xs):
         lp, kp, vp = xs
         q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
                               cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
                               positions, cfg.rope_theta)
-        o = prefix_chunk_attention(q, k, v, kp, vp, prev_len)
+        o = attn(q, k, v, kp, vp, prev_len)
         h = h + out_project(lp["attn"], o)
         f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
         h = h + f
@@ -235,7 +247,8 @@ def prefill_chunk_core(params: Params, cfg: ArchConfig, batch: Batch
 
 def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
             window: int = 0, max_len: int | None = None,
-            block_causal_skip: bool = False) -> tuple[jnp.ndarray, Batch]:
+            block_causal_skip: bool = False,
+            backend: Any = None) -> tuple[jnp.ndarray, Batch]:
     """Returns (last-token logits (B, V), kv cache dict).
 
     ``max_len`` adds decode headroom: the cache seq dim is padded to it so
@@ -244,7 +257,8 @@ def prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
     B, S = tokens.shape
     eff_window = window or cfg.sliding_window
     logits, ks, vs = prefill_core(params, cfg, batch, window=eff_window,
-                                  block_causal_skip=block_causal_skip)
+                                  block_causal_skip=block_causal_skip,
+                                  backend=backend)
     if eff_window and eff_window < S:
         # keep only the last ``window`` positions, ring-aligned
         W = eff_window
@@ -323,7 +337,7 @@ def paged_prefill(params: Params, cfg: ArchConfig, batch: Batch, *,
 
 
 def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
-                      force_ref: bool = False):
+                      force_ref: bool = False, backend: Any = None):
     """One batched autoregressive step over the shared paged KV pool.
 
     batch:
@@ -334,10 +348,18 @@ def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
       k_pool/v_pool (L, N, bs, K, hd)
 
     Inactive slots write into the reserved trash block (N-1) and attend a
-    single trash token; their logits are discarded by the caller. Returns
+    single trash token; their logits are discarded by the caller. Attention
+    routes through ``backend.paged_attention`` when a backend is given
+    (else the historical ``force_ref`` switch over the jit'd op). Returns
     (logits (B, V), next_tokens (B,), k_pool', v_pool')."""
     from repro.kernels.paged_attn import paged_decode_attention_op
 
+    if backend is not None:
+        paged_attn = backend.paged_attention
+    else:
+        paged_attn = (lambda q, kc, vc, tables, lengths:
+                      paged_decode_attention_op(q, kc, vc, tables, lengths,
+                                                force_ref=force_ref))
     tok, pos, active = batch["tokens"], batch["positions"], batch["active"]
     tables = batch["block_tables"]
     k_pool, v_pool = batch["k_pool"], batch["v_pool"]
@@ -356,8 +378,7 @@ def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
                               pos[:, None], cfg.rope_theta)
         kc = kc.at[phys, slot].set(k[:, 0].astype(kc.dtype))
         vc = vc.at[phys, slot].set(v[:, 0].astype(vc.dtype))
-        o = paged_decode_attention_op(q[:, 0], kc, vc, tables, lengths,
-                                      force_ref=force_ref)
+        o = paged_attn(q[:, 0], kc, vc, tables, lengths)
         h = h + out_project(lp["attn"], o[:, None])
         f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
         h = h + f
@@ -367,6 +388,73 @@ def paged_decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
     h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
     logits = lm_head(params, cfg, h[:, 0])
     return logits, jnp.argmax(logits, axis=-1).astype(jnp.int32), ks, vs
+
+
+# ------------------------------------------------------ token-packed step
+def packed_step_core(params: Params, cfg: ArchConfig, batch: Batch, *,
+                     backend: Any = None):
+    """ONE token-packed forward over the shared paged pool: N decode
+    slots and M prefill-chunk tokens execute as a single program.
+
+    Every row of the flat ``(T,)`` arrays is one token — a decode slot's
+    next token or one prompt token of an in-flight chunked prefill. Each
+    token writes its KV into its sequence's pool blocks first, then
+    attends its sequence's block table with ``length = position + 1``:
+    for decode rows that is exactly ``paged_decode_step``'s math, and for
+    chunk rows the scattered-own-chunk + pool-prefix read reproduces
+    ``prefix_chunk_attention`` (same valid entries in the same order —
+    masked-softmax padding is exact), so one attention primitive serves
+    the whole batch. Chunk rows of the SAME sequence may share one call:
+    per layer, every row's KV is scattered before any row attends, and
+    per-row lengths causally mask the later rows.
+
+    batch (all (T,) unless noted):
+      token_ids   int32   last emitted token (decode rows; else 0)
+      x_prefill   (T, d)  pre-embedded prompt inputs (chunk rows; else 0)
+      is_prefill  bool    row class selector
+      positions   int32   global sequence position of the token
+      write_block int32   pool block receiving this token's KV (pad=trash)
+      write_slot  int32   slot within that block
+      tables      (T, max_blocks) int32  the row's sequence block table
+      lengths     int32   positions + 1 for live rows, 1 for pad rows
+      temperature/top_p f32, seeds uint32, sample_pos int32  per-row
+                  sampling state (the sampled head runs for every row;
+                  callers read only the rows they planned)
+      k_pool/v_pool (L, N, bs, K, hd)
+
+    Returns (logits (T, V), next_tokens (T,), k_pool', v_pool')."""
+    if backend is not None:
+        paged_attn = backend.paged_attention
+    else:
+        from repro.kernels.paged_attn import paged_decode_attention_op
+        paged_attn = partial(paged_decode_attention_op, force_ref=True)
+
+    tok, positions = batch["token_ids"], batch["positions"]
+    wb, ws = batch["write_block"], batch["write_slot"]
+    tables, lengths = batch["tables"], batch["lengths"]
+    k_pool, v_pool = batch["k_pool"], batch["v_pool"]
+    x = jnp.where(batch["is_prefill"][:, None], batch["x_prefill"],
+                  params["embed"][tok])[:, None, :]               # (T,1,d)
+
+    def body(h, xs):
+        lp, kc, vc = xs                                    # (N, bs, K, hd)
+        q, k, v = qkv_project(lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+                              cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                              positions[:, None], cfg.rope_theta)
+        kc = kc.at[wb, ws].set(k[:, 0].astype(kc.dtype))
+        vc = vc.at[wb, ws].set(v[:, 0].astype(vc.dtype))
+        o = paged_attn(q[:, 0], kc, vc, tables, lengths)
+        h = h + out_project(lp["attn"], o[:, None])
+        f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = h + f
+        return h, (kc, vc)
+
+    h, (ks, vs) = jax.lax.scan(body, x, (params["layers"], k_pool, v_pool))
+    h = rmsnorm(params["ln_f"], h, cfg.norm_eps)
+    logits = lm_head(params, cfg, h[:, 0])                        # (T, V)
+    nxt = sample_tokens(logits, batch["temperature"], batch["top_p"],
+                        batch["seeds"], batch["sample_pos"])
+    return logits, nxt, ks, vs
 
 
 # ------------------------------------------------------------ sampling head
@@ -400,8 +488,8 @@ def sample_tokens(logits: jnp.ndarray, temperature: jnp.ndarray,
     return jnp.where(temperature > 0, sampled, greedy)
 
 
-def decode_step(params: Params, cfg: ArchConfig, batch: Batch
-                ) -> tuple[jnp.ndarray, Batch]:
+def decode_step(params: Params, cfg: ArchConfig, batch: Batch, *,
+                backend: Any = None) -> tuple[jnp.ndarray, Batch]:
     """One autoregressive step. batch: {"token": (B,), "cache": {...}}."""
     cache = batch["cache"]
     token = batch["token"]
@@ -409,6 +497,8 @@ def decode_step(params: Params, cfg: ArchConfig, batch: Batch
     B = token.shape[0]
     W = cache["k"].shape[2]
     x = params["embed"][token][:, None, :]                         # (B,1,d)
+    attn = (backend.decode_attention if backend is not None
+            else decode_attention)
 
     def body(h, xs):
         lp, kc, vc = xs
@@ -417,7 +507,7 @@ def decode_step(params: Params, cfg: ArchConfig, batch: Batch
                               pos[:, None], cfg.rope_theta)
         kc, vc = cache_write(kc, vc, k[:, 0], v[:, 0], pos)
         length = jnp.minimum(pos + 1, W)
-        o = decode_attention(q[:, 0], kc, vc, length)              # (B,H,hd)
+        o = attn(q[:, 0], kc, vc, length)                          # (B,H,hd)
         h = h + out_project(lp["attn"], o[:, None])
         f, _ = _ffn(lp, cfg, rmsnorm(lp["ln2"], h, cfg.norm_eps))
         h = h + f

@@ -1,5 +1,6 @@
 from repro.serving.cluster import ClusterEngine, InstanceWorker
 from repro.serving.engine import EngineBase, EPDEngine
+from repro.serving.runner import ChunkWork, ModelRunner
 from repro.serving.scheduler import Scheduler
 from repro.serving.transfer import (MigratedPrefill, MMTokenCache,
                                     PrefillProgress, PsiEP, PsiPD)
@@ -11,4 +12,4 @@ __all__ = ["EPDEngine", "EngineBase", "ClusterEngine", "InstanceWorker",
            "EngineConfig", "ClusterConfig", "ServeRequest", "SamplingParams",
            "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
            "PsiEP", "PsiPD", "PrefillProgress", "MigratedPrefill",
-           "Scheduler"]
+           "Scheduler", "ModelRunner", "ChunkWork"]

@@ -55,6 +55,7 @@ from repro.core.instance import D_ROLES, E_ROLES, P_ROLES
 from repro.core.load_estimator import LoadEstimator
 from repro.core.scheduler import LEAST_LOADED, ROUND_ROBIN, Assigner
 from repro.serving.engine import EngineBase
+from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import Scheduler
 from repro.serving.stages import (EncodeStage, PagedDecodeStage, PagedJitKit,
                                   PagedKVState, PagedPrefillStage)
@@ -148,6 +149,7 @@ class InstanceWorker:
         e = role in E_ROLES
         p = role in P_ROLES
         d = role in D_ROLES
+        packed = c.ecfg.runner == "packed"
         self.encode_stage = (
             EncodeStage(c.model, c.cfg, c.params, c.ecfg.n_encode_workers,
                         kit=c.kit, stats=c._stats) if e else None)
@@ -156,20 +158,33 @@ class InstanceWorker:
         self.prefill_stage = (
             PagedPrefillStage(c.model, c.cfg, c.params, c.ecfg, c._stats,
                               self.kv, kit=c.kit) if p else None)
-        self.decode_stage = (
-            PagedDecodeStage(c.model, c.cfg, c.params, c.ecfg, c._stats,
-                             self.kv, on_finish=c._finish,
-                             on_requeue=c._requeue, kit=c.kit) if d else None)
+        if d:
+            stage_cls = ModelRunner if packed else PagedDecodeStage
+            self.decode_stage = stage_cls(
+                c.model, c.cfg, c.params, c.ecfg, c._stats, self.kv,
+                on_finish=c._finish, on_requeue=c._requeue, kit=c.kit)
+        else:
+            self.decode_stage = None
         self.psi_pd = PsiPD() if d else None
         self.scheduler: Optional[Scheduler] = None
         if p:
             psi_pd_out = (self.psi_pd if d
                           else _MigratingPsiPD(c, self))
+            if packed:
+                # the runner executes this instance's packed iterations;
+                # a P-only instance gets a ZERO-slot runner (all budget
+                # goes to prefill chunks; ψ_PD is never polled)
+                runner = (self.decode_stage if d else ModelRunner(
+                    c.model, c.cfg, c.params, c.ecfg, c._stats, self.kv,
+                    on_finish=c._finish, on_requeue=c._requeue, kit=c.kit,
+                    n_slots=0))
+            else:
+                runner = None
             self.scheduler = Scheduler(
                 c.ecfg, self.prefill_stage,
                 self.decode_stage if d else _NullDecode(),
                 self.psi_in, psi_pd_out, c._stats, c._stop,
-                on_fail=c._fail)
+                on_fail=c._fail, runner=runner)
 
     # --------------------------------------------------------------- load
     def load(self) -> float:
@@ -460,7 +475,7 @@ class ClusterEngine(EngineBase):
             raise ValueError(f"unknown assign policy "
                              f"{cluster.assign_policy!r}")
         self.ccfg = cluster
-        self.kit = PagedJitKit(self.model, cfg)
+        self.kit = PagedJitKit(self.model, cfg, backend=self.backend)
         # IRP shard planning is cluster-level: shards of one request may
         # encode on different E instances (the simulator does the same)
         self.encode_planner = EncodeStage(self.model, cfg, params,

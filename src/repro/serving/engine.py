@@ -43,7 +43,9 @@ import time
 from typing import Any, Iterator, Optional
 
 from repro.configs.base import ArchConfig
+from repro.kernels.registry import resolve_backend
 from repro.models import build_model
+from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import Scheduler
 from repro.serving.stages import (PAGED_FAMILIES, DenseDecodeStage,
                                   DensePrefillStage, EncodeStage,
@@ -78,6 +80,14 @@ class EngineBase:
         self.model = build_model(cfg)
         self.params = params
         self.ecfg = engine
+        if engine.runner not in ("packed", "two_program"):
+            raise ValueError(
+                f"unknown runner {engine.runner!r}; "
+                f"expected 'packed' or 'two_program'")
+        # resolves EngineConfig.attn_backend / $REPRO_ATTN_BACKEND and
+        # fails fast on unknown names (env typos cannot silently fall
+        # back to the default backend)
+        self.backend = resolve_backend(engine.attn_backend)
         self.paged = (engine.mode == "paged"
                       and cfg.family in PAGED_FAMILIES
                       and not cfg.sliding_window)
@@ -128,6 +138,10 @@ class EngineBase:
         if req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.req_id}: max_new_tokens must be >= 1")
+        if len(req.prompt) < 1:
+            # both execution paths assume at least one prompt token (a
+            # zero-length prefill has no last-token row to sample from)
+            raise ValueError(f"request {req.req_id}: empty prompt")
         total = len(req.prompt) + req.max_new_tokens
         cap = self.ecfg.max_seq_len
         if self.paged:
@@ -363,25 +377,38 @@ class EPDEngine(EngineBase):
         self.psi_pd = PsiPD()
         self.scheduler: Scheduler | None = None
         if self.paged:
-            kit = PagedJitKit(self.model, cfg)
+            kit = PagedJitKit(self.model, cfg, backend=self.backend)
+            self.kit = kit
             self._kv = PagedKVState(self.model, cfg, engine, kit=kit)
             self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
             self.prefill_stage = PagedPrefillStage(
                 self.model, cfg, params, engine, self._stats, self._kv,
                 kit=kit)
-            self.decode_stage = PagedDecodeStage(
-                self.model, cfg, params, engine, self._stats, self._kv,
-                on_finish=self._finish, on_requeue=self._requeue, kit=kit)
+            if engine.runner == "packed":
+                # the token-packed ModelRunner IS the decode stage, plus
+                # the chunk-execution half of the scheduler iteration
+                self.decode_stage = ModelRunner(
+                    self.model, cfg, params, engine, self._stats, self._kv,
+                    on_finish=self._finish, on_requeue=self._requeue,
+                    kit=kit)
+                runner = self.decode_stage
+            else:
+                self.decode_stage = PagedDecodeStage(
+                    self.model, cfg, params, engine, self._stats, self._kv,
+                    on_finish=self._finish, on_requeue=self._requeue,
+                    kit=kit)
+                runner = None
             self.scheduler = Scheduler(
                 engine, self.prefill_stage, self.decode_stage,
                 self.psi_ep, self.psi_pd, self._stats, self._stop,
-                on_fail=self._fail)
+                on_fail=self._fail, runner=runner)
         else:
             self.prefill_stage = DensePrefillStage(
-                self.model, cfg, params, engine, self._stats)
+                self.model, cfg, params, engine, self._stats,
+                backend=self.backend)
             self.decode_stage = DenseDecodeStage(
                 self.model, cfg, params, engine, self._stats,
-                on_finish=self._finish)
+                on_finish=self._finish, backend=self.backend)
         self._encode = self.encode_stage.encode_fn   # compat alias
         self._eq: queue.Queue = queue.Queue()        # encode shard jobs
 

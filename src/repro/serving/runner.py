@@ -1,0 +1,291 @@
+"""Unified token-packed ModelRunner: ONE jitted forward per iteration.
+
+The historical paged hot path ran two jitted program families per
+scheduler iteration — the batched decode step, then one chunk program per
+prefill chunk — so a busy iteration dispatched 1 + n_chunks XLA
+executions and the accelerator idled between them. ``ModelRunner`` folds
+the whole iteration into a single token-packed program
+(``dense.packed_step_core``): flat ``(T_bucket,)`` token / position /
+write-slot arrays where rows 0..N-1 are the fixed decode slots and the
+tail rows are this iteration's prefill-chunk tokens (several chunks, of
+several requests, of the SAME request — all just rows). ``T`` is padded
+to a small static bucket ladder so shapes never drive a recompile
+mid-run; ``ServeStats['packed_steps'/'packed_compiles']`` count
+executions and distinct compiled shapes.
+
+Numerics: every row reproduces the pre-refactor math bit-for-bit — a
+decode row is exactly ``paged_decode_step``'s row, and a chunk row's
+scatter-then-paged-attention read sees the same valid KV entries in the
+same order as ``prefix_chunk_attention`` (NEG_INF-masked softmax padding
+is exact) — so greedy output is bit-identical to the two-program path,
+which survives as the ``EngineConfig.runner = "two_program"`` oracle.
+
+The runner IS the paged decode stage (it subclasses
+``PagedDecodeStage`` for the slot/admit/retire/preempt machinery and the
+``step()`` interface a decode-only cluster instance drives), plus the
+chunk-execution half the scheduler plans into it. Compiled programs live
+in the shared ``PagedJitKit`` — N cluster instances and every role swap
+reuse the same per-bucket executables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.serving.stages import PagedDecodeStage, PagedJitKit, PagedKVState, ServeStats
+from repro.serving.transfer import PrefillProgress, PsiPD
+from repro.serving.types import EngineConfig, ServeRequest
+
+__all__ = ["ChunkWork", "ModelRunner"]
+
+
+@dataclass
+class ChunkWork:
+    """One planned prefill chunk: ``n_new`` prompt tokens of ``task``
+    starting at global position ``t0``, writing into the ``blocks``
+    snapshot of the request's pool allocation. ``final`` marks the chunk
+    that completes the prompt (its last row's sampled token becomes the
+    request's first token)."""
+    task: PrefillProgress
+    t0: int
+    n_new: int
+    blocks: np.ndarray
+    final: bool
+
+
+def _bucket_ladder(quantum: int, cap: int) -> tuple[int, ...]:
+    """Static prefill-region widths: quantum-doubling up to ``cap``."""
+    cap = max(quantum, -(-cap // quantum) * quantum)
+    widths = []
+    w = quantum
+    while w < cap:
+        widths.append(w)
+        w *= 2
+    widths.append(cap)
+    return tuple(widths)
+
+
+class ModelRunner(PagedDecodeStage):
+    """Token-packed executor over the shared paged pool.
+
+    Scheduler protocol (one iteration):
+      1. ``_prepare(psi_pd)`` (inherited) — admit/retire/grow the decode
+         slots, returning the active mask;
+      2. the scheduler plans ``ChunkWork`` under its token budget (at
+         most ``max_prefill_tokens`` per iteration);
+      3. ``execute(active, chunks)`` — ONE packed jitted call; commits
+         decode-slot tokens, advances chunk tasks, samples first tokens
+         of completed prefills, and returns
+         ``(slots_stepped, finished_tasks)``.
+
+    ``step(psi_pd)`` (decode-only protocol, e.g. a cluster D instance)
+    is prepare + execute with no chunks. ``n_slots=0`` builds a
+    prefill-only runner (a cluster P instance): the inherited slot
+    machinery degenerates to no-ops and never touches ψ_PD.
+    """
+
+    def __init__(self, model, cfg: ArchConfig, params, ecfg: EngineConfig,
+                 stats: ServeStats, kv: PagedKVState,
+                 on_finish: Callable[[ServeRequest], None],
+                 on_requeue: Callable[[ServeRequest, object], None], *,
+                 kit: Optional[PagedJitKit] = None,
+                 n_slots: Optional[int] = None):
+        if n_slots is not None:
+            # a prefill-only runner narrows the decode side before the
+            # base class sizes its slot arrays
+            ecfg = dataclasses.replace(ecfg, decode_batch=n_slots)
+        kit = kit or PagedJitKit(model, cfg, backend=ecfg.attn_backend)
+        super().__init__(model, cfg, params, ecfg, stats, kv,
+                         on_finish=on_finish, on_requeue=on_requeue, kit=kit)
+        self.kit = kit
+        self.ecfg = ecfg
+        self._packed = kit.packed_step
+        self._embed_dtype = np.asarray(params["embed"][:1, :1]).dtype
+        self.d_model = cfg.d_model
+        self.params = params
+        bs = ecfg.kv_block_size
+        chunk = (-(-ecfg.prefill_chunk // bs) * bs
+                 if ecfg.prefill_chunk > 0 else 0)
+        n = len(self._slots)
+        if chunk > 0:
+            # chunked: the scheduler plans at most budget//chunk chunks
+            # per iteration (each costs ``chunk`` budget tokens)
+            floor = ecfg.decode_batch + chunk
+            budget = max(ecfg.step_token_budget or floor, floor)
+            quantum, cap = chunk, max(chunk, (budget // chunk) * chunk)
+        else:
+            # unchunked baseline: a whole prompt (up to max_seq_len
+            # tokens) lands in one iteration's prefill region
+            quantum, cap = bs, ecfg.max_seq_len
+        self.buckets = _bucket_ladder(quantum, cap)
+        self.max_prefill_tokens = self.buckets[-1]
+
+    # ------------------------------------------------------------- planning
+    def next_chunk_len(self, task: PrefillProgress) -> int:
+        """Token length of ``task``'s next chunk (whole remainder in the
+        unchunked baseline)."""
+        remaining = task.total - task.n_done
+        if self.ecfg.prefill_chunk <= 0:
+            return remaining
+        bs = self.kv.mgr.block_size
+        chunk = -(-self.ecfg.prefill_chunk // bs) * bs
+        return min(chunk, remaining)
+
+    def plan_chunk(self, task: PrefillProgress) -> ChunkWork:
+        """Advance ``task`` by one chunk ON PAPER: snapshot its block
+        allocation and move the prompt cursor; ``execute`` materializes
+        the work (a failed packed call fails every planned task)."""
+        n_new = self.next_chunk_len(task)
+        t0 = task.n_done
+        with self.kv.lock:
+            blocks = np.asarray(self.kv.mgr.owner_blocks(task.req.req_id),
+                                dtype=np.int32)
+        task.n_done += n_new
+        return ChunkWork(task=task, t0=t0, n_new=n_new, blocks=blocks,
+                         final=task.done)
+
+    def _prefill_bucket(self, n_tokens: int) -> int:
+        for w in self.buckets:
+            if n_tokens <= w:
+                return w
+        raise ValueError(
+            f"planned {n_tokens} prefill tokens exceeds the bucket cap "
+            f"{self.buckets[-1]} (scheduler budget out of sync)")
+
+    # ------------------------------------------------------------ execution
+    def execute(self, active: np.ndarray,
+                chunks: list[ChunkWork]) -> tuple[int, list[PrefillProgress]]:
+        """Run the iteration plan as ONE packed jitted forward.
+
+        Returns ``(decode_slots_stepped, finished_prefill_tasks)`` —
+        finished tasks carry their sampled ``first_tok`` and are ready
+        for the scheduler's ψ_PD handoff."""
+        n = len(self._slots)
+        n_pref = sum(c.n_new for c in chunks)
+        if not active.any() and n_pref == 0:
+            return 0, []
+        T = n + (self._prefill_bucket(n_pref) if n_pref else 0)
+        bs = self.kv.mgr.block_size
+        trash = self.kv.trash
+
+        tok = np.zeros((T,), np.int32)
+        pos = np.zeros((T,), np.int32)
+        wb = np.full((T,), trash, np.int32)
+        ws = np.zeros((T,), np.int32)
+        tables = np.full((T, self.kv.max_blocks), trash, np.int32)
+        lengths = np.ones((T,), np.int32)
+        is_pref = np.zeros((T,), bool)
+        x_pref = np.zeros((T, self.d_model), self._embed_dtype)
+        temps = np.zeros((T,), np.float32)
+        top_ps = np.ones((T,), np.float32)
+        seeds = np.zeros((T,), np.uint32)
+        sample_pos = np.zeros((T,), np.int32)
+
+        # decode rows 0..n-1: exactly the batched step's per-slot state
+        if n:
+            tok[:n] = self._tokens
+            tables[:n] = self._tables
+            temps[:n] = self._temps
+            top_ps[:n] = self._top_ps
+            seeds[:n] = self._seeds
+            sample_pos[:n] = self._gen
+            act = np.nonzero(active)[0]
+            pos[act] = self._positions[act]
+            wb[act] = self._tables[act, self._positions[act] // bs]
+            ws[act] = self._positions[act] % bs
+            lengths[act] = self._positions[act] + 1
+
+        # chunk rows: flat-packed prompt tokens, contiguous per chunk
+        lane = n
+        finals: list[tuple[int, ChunkWork]] = []   # (last row, work)
+        for c in chunks:
+            req = c.task.req
+            p = np.arange(c.t0, c.t0 + c.n_new)
+            rows = slice(lane, lane + c.n_new)
+            pos[rows] = p
+            wb[rows] = c.blocks[p // bs]
+            ws[rows] = p % bs
+            tables[rows, :len(c.blocks)] = c.blocks
+            lengths[rows] = p + 1
+            is_pref[rows] = True
+            x_pref[rows] = c.task.x[c.t0:c.t0 + c.n_new]
+            if c.final:
+                s = req.sampling
+                last = lane + c.n_new - 1
+                temps[last] = s.temperature
+                top_ps[last] = s.top_p
+                seeds[last] = s.seed
+                sample_pos[last] = len(req.tokens)
+                finals.append((last, c))
+            lane += c.n_new
+
+        batch = {
+            "token_ids": jnp.asarray(tok),
+            "x_prefill": jnp.asarray(x_pref),
+            "is_prefill": jnp.asarray(is_pref),
+            "positions": jnp.asarray(pos),
+            "write_block": jnp.asarray(wb),
+            "write_slot": jnp.asarray(ws),
+            "tables": jnp.asarray(tables),
+            "lengths": jnp.asarray(lengths),
+            "temperature": jnp.asarray(temps),
+            "top_p": jnp.asarray(top_ps),
+            "seeds": jnp.asarray(seeds),
+            "sample_pos": jnp.asarray(sample_pos),
+        }
+        t0 = time.perf_counter()
+        with self.kv.pool_lock:
+            batch["k_pool"] = self.kv.k_pool
+            batch["v_pool"] = self.kv.v_pool
+            _, nxt_tok, self.kv.k_pool, self.kv.v_pool = self._packed(
+                self.params, batch)
+        nxt = np.asarray(nxt_tok)
+        dt = time.perf_counter() - t0
+
+        stepped = int(active.sum())
+        with self.stats.lock:
+            self.stats.data["packed_steps"] += 1
+            self.stats.data["packed_prefill_tokens"] += n_pref
+            self.stats.data["packed_compiles"] = max(
+                self.stats.data["packed_compiles"],
+                self.kit.packed_shapes_compiled())
+            if stepped:
+                self.stats.data["decode_time"] += dt
+                self.stats.data["decode_tokens"] += stepped
+                self.stats.data["decode_steps"] += 1
+
+        # commit decode rows (identical to the historical step tail)
+        for i, s in enumerate(self._slots):
+            if s is None or not active[i]:
+                continue
+            s["req"].accept(int(nxt[i]))   # stop tokens latch, not emit;
+            self._tokens[i] = nxt[i]       # slot retires next iteration
+            self._positions[i] += 1
+            self._gen[i] += 1
+
+        # commit chunk rows: counters + first-token sampling on finals
+        finished = []
+        for c in chunks:
+            self.stats.bump("prefill_chunks")
+        for last, c in finals:
+            first = int(nxt[last])
+            c.task.first_tok = first
+            c.task.req.accept(first)   # stop-at-first-token retires at D
+            c.task.req.t_first_token = time.perf_counter()
+            self.stats.bump("prefill_completions")
+            finished.append(c.task)
+        return stepped, finished
+
+    # -------------------------------------------------- decode-only protocol
+    def step(self, psi_pd: PsiPD) -> int:
+        """Decode-only iteration (cluster D instance): prepare the slots
+        and run the packed program with an empty prefill region."""
+        active = self._prepare(psi_pd)
+        stepped, _ = self.execute(active, [])
+        return stepped

@@ -35,6 +35,8 @@ import threading
 from collections import deque
 from typing import Any, Callable, Optional
 
+import numpy as np
+
 from repro.serving.stages import PagedDecodeStage, PagedPrefillStage, ServeStats
 from repro.serving.transfer import PrefillProgress, PsiEP, PsiPD
 from repro.serving.types import EngineConfig, RequestState, ServeRequest
@@ -43,15 +45,28 @@ __all__ = ["Scheduler"]
 
 
 class Scheduler:
-    """Iteration-level co-scheduler over the paged P and D stages."""
+    """Iteration-level co-scheduler over the paged P and D stages.
+
+    Two execution paths share the admission/budget policy:
+
+      * ``runner`` set (the default engines): the iteration plan — decode
+        slots + this iteration's prefill chunks — executes as ONE
+        token-packed jitted forward (``serving.runner.ModelRunner``);
+      * ``runner`` None: the historical two-program path (batched decode
+        step, then one chunk program per chunk), kept as the parity
+        oracle (``EngineConfig.runner = "two_program"``) and for
+        duck-typed stage stubs in the policy tests.
+    """
 
     def __init__(self, ecfg: EngineConfig, prefill: PagedPrefillStage,
                  decode: PagedDecodeStage, psi_ep: PsiEP, psi_pd: PsiPD,
                  stats: ServeStats, stop_event: threading.Event,
-                 on_fail: Callable[[ServeRequest, str], None]):
+                 on_fail: Callable[[ServeRequest, str], None], *,
+                 runner=None):
         self.ecfg = ecfg
         self.prefill = prefill
         self.decode = decode
+        self.runner = runner
         self.psi_ep = psi_ep
         self.psi_pd = psi_pd
         self.stats = stats
@@ -122,6 +137,8 @@ class Scheduler:
         """One scheduler iteration; returns False when fully idle."""
         self._drain_arrivals()
         self._front = 0      # this step's preemption-requeue insertions
+        if self.runner is not None:
+            return self._step_packed()
         # decode first: the batched step is never queued behind prefill
         try:
             stepped = self.decode.step(self.psi_pd)
@@ -161,6 +178,58 @@ class Scheduler:
             self.task = None
             task.req.advance(RequestState.DECODING)
             self.psi_pd.send(task)
+
+    # ------------------------------------------------------- packed runner
+    def _step_packed(self) -> bool:
+        """One iteration through the token-packed ModelRunner: plan the
+        decode slots + prefill chunks under the token budget, then run
+        the whole plan as ONE jitted forward."""
+        runner = self.runner
+        try:
+            active = runner._prepare(self.psi_pd)
+        except Exception as e:                        # noqa: BLE001
+            # e.g. a request whose appends alone exhaust the pool
+            runner.abort_all(
+                lambda r: self.on_fail(r, f"decode failed: {e!r}"))
+            active = np.zeros(len(runner._slots), dtype=bool)
+        n_dec = int(active.sum())
+        spent = n_dec
+        chunks = []
+        planned_tokens = 0
+        # the same budget policy as the two-program path; additionally the
+        # packed prefill region is capped at the runner's largest bucket
+        while not self._stop.is_set():
+            if self.task is None:
+                self.task = self._try_admit()
+            if self.task is None:
+                break
+            n_new = runner.next_chunk_len(self.task)
+            over = (spent + self.chunk > self.budget
+                    or planned_tokens + n_new > runner.max_prefill_tokens)
+            if over and not (n_dec == 0 and not chunks):
+                break
+            chunks.append(runner.plan_chunk(self.task))
+            planned_tokens += n_new
+            spent += self.chunk
+            if self.task.done:
+                self.task = None     # fully planned; completes in execute
+        try:
+            stepped, finished = runner.execute(active, chunks)
+        except Exception as e:                        # noqa: BLE001
+            # the packed program is one blast radius: fail every planned
+            # prefill task and every decode slot, then keep serving
+            failed = {id(c.task): c.task for c in chunks}
+            for task in failed.values():
+                if self.task is task:
+                    self.task = None
+                self.on_fail(task.req, f"packed step failed: {e!r}")
+            runner.abort_all(
+                lambda r: self.on_fail(r, f"packed step failed: {e!r}"))
+            return True
+        for task in finished:
+            task.req.advance(RequestState.DECODING)
+            self.psi_pd.send(task)
+        return bool(stepped or chunks)
 
     # ------------------------------------------------------------- shutdown
     def drain(self) -> list[ServeRequest]:

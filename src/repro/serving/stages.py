@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.block_manager import KVBlockManager, OutOfBlocks
+from repro.kernels.registry import AttentionBackend, resolve_backend
 from repro.models import dense
 from repro.serving.transfer import PrefillProgress, PsiPD
 from repro.serving.types import EngineConfig, ServeRequest
@@ -54,7 +55,13 @@ class ServeStats:
             # on single-pipeline engines)
             "encode_shards": 0, "prefill_completions": 0,
             "pd_migrations": 0, "role_switches": 0,
-            "monitor_errors": 0, "role_seconds": {}}
+            "monitor_errors": 0, "role_seconds": {},
+            # token-packed ModelRunner: executions of THE one packed
+            # program, and the number of distinct compiled shapes it has
+            # (== len(bucket ladder) once warm; tests assert it stops
+            # growing mid-run)
+            "packed_steps": 0, "packed_compiles": 0,
+            "packed_prefill_tokens": 0}
         self.live_cache_bytes = 0        # dense-mode KV accounting
 
     def peak(self, live_bytes: int) -> None:
@@ -165,11 +172,12 @@ class PrefillStage(Protocol):
         the scheduler can interleave decode steps between chunks."""
 
 
-def _prefill_premerged(cfg: ArchConfig, params, batch, max_len):
+def _prefill_premerged(cfg: ArchConfig, params, batch, max_len,
+                       backend: Optional[AttentionBackend] = None):
     """Prefill that takes ALREADY-ENCODED mm tokens (EPD path: E ran
     elsewhere), materializing a padded dense cache."""
     B, S = batch["tokens"].shape
-    logits, ks, vs = dense.prefill_core(params, cfg, batch)
+    logits, ks, vs = dense.prefill_core(params, cfg, batch, backend=backend)
     if max_len > S:
         pad = max_len - S
         ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
@@ -182,20 +190,32 @@ class DensePrefillStage:
     """P (dense): full prefill into a padded per-request cache.
 
     Works for every model family (the jitted fn wraps ``model.prefill``);
-    ψ_PD moves the whole cache to the decode stage."""
+    ψ_PD moves the whole cache to the decode stage. For the paged-capable
+    families the attention routes through ``backend`` (the ``ref``
+    backend is the substrate itself, so the default is bit-identical to
+    the historical path); other families keep their own attention."""
 
     def __init__(self, model, cfg: ArchConfig, params,
-                 ecfg: EngineConfig, stats: ServeStats):
+                 ecfg: EngineConfig, stats: ServeStats, *,
+                 backend: Optional[AttentionBackend] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
         self.stats = stats
+        routed = backend is not None and cfg.family in PAGED_FAMILIES
         # prefill variants retrace per (S, max_len) pair
-        self._prefill = jax.jit(
-            lambda p, b, ml: model.prefill(p, batch=b, max_len=ml),
-            static_argnums=(2,))
+        if routed:
+            self._prefill = jax.jit(
+                lambda p, b, ml: dense.prefill(p, cfg, b, max_len=ml,
+                                               backend=backend),
+                static_argnums=(2,))
+        else:
+            self._prefill = jax.jit(
+                lambda p, b, ml: model.prefill(p, batch=b, max_len=ml),
+                static_argnums=(2,))
         self._prefill_merged = jax.jit(
-            lambda p, b, ml: _prefill_premerged(cfg, p, b, ml),
+            lambda p, b, ml: _prefill_premerged(cfg, p, b, ml,
+                                                backend if routed else None),
             static_argnums=(2,))
 
     def prefill(self, req: ServeRequest,
@@ -285,7 +305,8 @@ class PagedKVState:
         return True
 
 
-def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch):
+def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch,
+                        backend: Optional[AttentionBackend] = None):
     """One jitted chunk: gather the prefix KV from the pool through the
     (fixed-width, trash-padded) block table, run the position-offset chunk
     forward, scatter the chunk's KV into its pool blocks. Fixed shapes
@@ -299,7 +320,8 @@ def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch):
     logits, ks, vs = dense.prefill_chunk_core(params, cfg, {
         "x": batch["x"], "positions": batch["positions"],
         "k_prev": k_prev, "v_prev": v_prev,
-        "prev_len": batch["prev_len"], "last_idx": batch["last_idx"]})
+        "prev_len": batch["prev_len"], "last_idx": batch["last_idx"]},
+        backend=backend)
     k_pool, v_pool = dense.pool_write_prefill(k_pool, v_pool, ks, vs,
                                               batch["chunk_blocks"])
     return logits, k_pool, v_pool
@@ -453,12 +475,17 @@ class DenseDecodeStage:
     comparison baseline for the paged-batched decode stage."""
 
     def __init__(self, model, cfg: ArchConfig, params, ecfg: EngineConfig,
-                 stats: ServeStats, on_finish: Callable[[ServeRequest], None]):
+                 stats: ServeStats, on_finish: Callable[[ServeRequest], None],
+                 *, backend: Optional[AttentionBackend] = None):
         self.params = params
         self.ecfg = ecfg
         self.stats = stats
         self.on_finish = on_finish
-        self._decode = jax.jit(lambda p, b: model.decode_step(p, batch=b))
+        if backend is not None and cfg.family in PAGED_FAMILIES:
+            self._decode = jax.jit(
+                lambda p, b: dense.decode_step(p, cfg, b, backend=backend))
+        else:
+            self._decode = jax.jit(lambda p, b: model.decode_step(p, batch=b))
         self._active: list[tuple] = []
 
     def step(self, psi_pd: PsiPD) -> bool:
@@ -505,10 +532,11 @@ class DenseDecodeStage:
         self._active = []
 
 
-def _paged_step_sampled(model, params, batch, force_ref: bool):
+def _paged_step_sampled(model, params, batch,
+                        backend: Optional[AttentionBackend]):
     """Batched paged decode + sampled head in one jitted body."""
     logits, _, ks, vs = model.paged_decode_step(params, batch=batch,
-                                                force_ref=force_ref)
+                                                backend=backend)
     nxt = dense.sample_tokens(logits, batch["temperature"], batch["top_p"],
                               batch["seeds"], batch["sample_pos"])
     return logits, nxt, ks, vs
@@ -521,27 +549,43 @@ class PagedJitKit:
     *functions*. One kit serves every stage instance built from the same
     (model, cfg) — a multi-instance cluster compiles each graph once, and
     a dynamic role switch builds fresh stage objects without recompiling.
+    The token-packed ``packed_step`` (ModelRunner) lives here too, so N
+    instances and every role swap share its per-bucket executables.
+
+    ``backend`` is an :class:`~repro.kernels.registry.AttentionBackend`
+    (or a name for ``resolve_backend``): every attention site inside the
+    kit's programs dispatches through it. The default resolution keeps
+    the historical behavior — pure-jnp ``ref`` off-TPU, compiled Pallas
+    kernels on TPU.
 
     Pool buffers are donated so XLA updates them in place instead of
     copying the whole pool every step (CPU ignores donation and warns, so
     donation is only enabled on accelerators)."""
 
-    def __init__(self, model, cfg: ArchConfig):
+    def __init__(self, model, cfg: ArchConfig,
+                 backend: Optional[AttentionBackend | str] = None):
         on_cpu = jax.default_backend() == "cpu"
-        # Pallas kernel only off interpret-mode on TPU; elsewhere the jnp
-        # oracle keeps the batched step fast (same contract).
-        force_ref = jax.default_backend() != "tpu"
+        if backend is None or isinstance(backend, str):
+            backend = resolve_backend(backend)
+        self.backend = backend
         self.encode_fn = jax.jit(model.encode) if model.encode else None
         self.prefill_core = jax.jit(
-            lambda p, b: dense.prefill_core(p, cfg, b))
+            lambda p, b: dense.prefill_core(p, cfg, b, backend=backend))
         self.pool_write = jax.jit(
             dense.pool_write_prefill,
             donate_argnums=() if on_cpu else (0, 1))
         self.chunk_step = jax.jit(
-            lambda p, kp, vp, b: _prefill_chunk_step(cfg, p, kp, vp, b),
+            lambda p, kp, vp, b: _prefill_chunk_step(cfg, p, kp, vp, b,
+                                                     backend),
             donate_argnums=() if on_cpu else (1, 2))
         self.decode_step = jax.jit(
-            lambda p, b: _paged_step_sampled(model, p, b, force_ref),
+            lambda p, b: _paged_step_sampled(model, p, b, backend),
+            donate_argnums=() if on_cpu else (1,))
+        # THE token-packed program: decode slots + prefill chunks in one
+        # forward per scheduler iteration (serving.runner.ModelRunner
+        # assembles its flat batch and tracks its compile count)
+        self.packed_step = jax.jit(
+            lambda p, b: dense.packed_step_core(p, cfg, b, backend=backend),
             donate_argnums=() if on_cpu else (1,))
         # PD-migration scatter (PagedKVState.inject): retraces per
         # migrated block count, donates the destination pool
@@ -549,6 +593,11 @@ class PagedJitKit:
             lambda kp, vp, k, v, ids: (kp.at[:, ids].set(k),
                                        vp.at[:, ids].set(v)),
             donate_argnums=() if on_cpu else (0, 1))
+
+    def packed_shapes_compiled(self) -> int:
+        """Distinct compiled shapes of the packed program (the compile
+        counter surfaced as ``ServeStats['packed_compiles']``)."""
+        return int(self.packed_step._cache_size())
 
 
 class PagedDecodeStage:
@@ -651,14 +700,16 @@ class PagedDecodeStage:
         return sum(s is not None for s in self._slots)
 
     # -------------------------------------------------------------- step
-    def step(self, psi_pd: PsiPD) -> int:
-        """One scheduler iteration; returns the number of slots stepped
-        (0 = idle, falsy for the engine's idle-sleep check)."""
+    def _prepare(self, psi_pd: PsiPD) -> np.ndarray:
+        """Admit from ψ_PD, retire finished slots, grow every live slot's
+        allocation for this step's KV write (preempting on pool pressure).
+        Returns the active-slot mask — the per-iteration plan the packed
+        ModelRunner and the historical batched step both execute from."""
         self._admit(psi_pd)
         self._retire()
-        active = np.array([s is not None for s in self._slots])
+        active = np.array([s is not None for s in self._slots], dtype=bool)
         if not active.any():
-            return 0
+            return active
 
         # grow allocations for this step's write; preempt on pressure
         for i, s in enumerate(self._slots):
@@ -680,10 +731,17 @@ class PagedDecodeStage:
                 have = int((self._tables[i] != self.kv.trash).sum())
                 self._tables[i, have:have + len(new)] = new
 
+        if active.any():
+            with self.kv.lock:
+                self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+        return active
+
+    def step(self, psi_pd: PsiPD) -> int:
+        """One scheduler iteration; returns the number of slots stepped
+        (0 = idle, falsy for the engine's idle-sleep check)."""
+        active = self._prepare(psi_pd)
         if not active.any():
             return 0
-        with self.kv.lock:
-            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
 
         # THE decode step: one jitted call for the whole slot batch
         t0 = time.perf_counter()

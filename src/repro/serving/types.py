@@ -113,6 +113,17 @@ class EngineConfig:
     # would silently starve prefill whenever decode is busy)
     prefill_chunk: int = 64
     step_token_budget: int = 0
+    # execution backend + runner selection (paged mode):
+    # ``attn_backend`` names an attention backend from
+    # ``repro.kernels.registry`` ("ref" | "pallas"); None defers to the
+    # REPRO_ATTN_BACKEND env var, then the platform default (pallas
+    # compiled on TPU, ref elsewhere). ``runner`` picks the P/D execution
+    # path: "packed" = ONE token-packed jitted forward per scheduler
+    # iteration over decode slots + prefill chunks (the ModelRunner);
+    # "two_program" = the historical decode-step-then-chunk-steps path,
+    # kept as the parity oracle.
+    attn_backend: Optional[str] = None
+    runner: str = "packed"
 
 
 @dataclass

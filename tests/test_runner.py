@@ -1,0 +1,357 @@
+"""Token-packed ModelRunner + attention-backend registry.
+
+Parity contract: the packed runner (the default execution path) must be
+GREEDY BIT-IDENTICAL to the historical two-program path it replaced —
+a decode row is exactly the batched step's row, and a chunk row's
+scatter-then-paged-attention read sees the same valid KV entries in the
+same order as ``prefix_chunk_attention`` (masked-softmax padding is
+exact). Nucleus sampling is included against the SAME-kernel oracle
+(``two_program`` under ``ref``): logits are bit-identical there, so the
+seeded sampler draws the same tokens. Cross-BACKEND (ref vs pallas)
+output is only ULP-close (the documented nucleus/tie caveat), so the
+backend-parametrized tests assert self-consistency, not cross-equality.
+"""
+import os
+import threading
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.registry import (ENV_VAR, available_backends,
+                                    get_backend, resolve_backend)
+from repro.models import build_model, dense
+from repro.serving import (ClusterEngine, EngineConfig, EPDEngine,
+                           SamplingParams, ServeRequest)
+
+
+@pytest.fixture(scope="module")
+def text_setup():
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lengths]
+
+
+def _serve(cfg, params, prompts, max_new=6, engine_cls=EPDEngine,
+           topo=None, **ecfg_kw):
+    base = dict(decode_batch=2, kv_blocks=64, max_seq_len=256,
+                prefill_chunk=32)
+    base.update(ecfg_kw)
+    ecfg = EngineConfig(**base)
+    eng = (engine_cls(cfg, params, ecfg) if topo is None
+           else engine_cls(cfg, params, ecfg, topo))
+    eng.start()
+    try:
+        for i, p in enumerate(prompts):
+            eng.submit(ServeRequest(req_id=i + 1, prompt=p.copy(),
+                                    max_new_tokens=max_new))
+        return [eng.result(i + 1, timeout=300).tokens
+                for i in range(len(prompts))], eng
+    finally:
+        eng.stop()
+
+
+# ================================================== registry + env plumbing
+def test_registry_names_and_validation():
+    assert set(available_backends()) >= {"ref", "pallas"}
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        get_backend("bogus")
+    with pytest.raises(ValueError, match="available"):
+        resolve_backend("nope")
+
+
+def test_env_var_selects_and_validates(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "pallas")
+    assert resolve_backend(None).name == "pallas"
+    # explicit config name wins over the env
+    assert resolve_backend("ref").name == "ref"
+    monkeypatch.setenv(ENV_VAR, "tyop")
+    with pytest.raises(ValueError, match="tyop"):
+        resolve_backend(None)
+
+
+def test_engine_rejects_bad_backend_and_runner(text_setup, monkeypatch):
+    cfg, params = text_setup
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        EPDEngine(cfg, params, EngineConfig(attn_backend="nope"))
+    with pytest.raises(ValueError, match="runner"):
+        EPDEngine(cfg, params, EngineConfig(runner="fused"))
+    # a zero-length prompt has no last-token row to sample from (and a
+    # zero-length final chunk would alias another row's sampling state)
+    eng = EPDEngine(cfg, params, EngineConfig())
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(ServeRequest(req_id=1, prompt=np.zeros(0, np.int32),
+                                max_new_tokens=4))
+    # a typo'd env var fails engine construction instead of silently
+    # serving on the default backend
+    monkeypatch.setenv(ENV_VAR, "palas")
+    with pytest.raises(ValueError, match="palas"):
+        EPDEngine(cfg, params, EngineConfig())
+
+
+# ===================================================== packed math (no engine)
+def test_packed_core_matches_decode_and_prefill_cores(text_setup):
+    """One packed call reproduces BOTH sub-programs bit-for-bit: a whole
+    prompt as chunk rows == ``prefill_core`` (logits and pool KV), and a
+    decode row at a wider packed batch == ``paged_decode_step``."""
+    cfg, params = text_setup
+    model = build_model(cfg)
+    rng = np.random.default_rng(7)
+    bs, n_blocks, max_blocks = 16, 32, 8
+    trash = n_blocks
+    k_pool, v_pool = model.init_kv_pool(n_blocks, bs)
+    S = 12
+    prompt = rng.integers(0, cfg.vocab, S).astype(np.int32)
+    ref_logits, rks, _ = jax.jit(lambda p, b: dense.prefill_core(p, cfg, b))(
+        params, {"tokens": jnp.asarray(prompt)[None]})
+    x = np.asarray(dense.embed_inputs(
+        params, cfg, jnp.asarray(prompt)[None], None, None)[0])
+
+    n_dec, width = 4, 16
+    T = n_dec + width
+    owned = np.asarray([3], np.int32)
+
+    def blank(T):
+        return dict(
+            token_ids=np.zeros((T,), np.int32),
+            x_prefill=np.zeros((T, cfg.d_model), x.dtype),
+            is_prefill=np.zeros((T,), bool),
+            positions=np.zeros((T,), np.int32),
+            write_block=np.full((T,), trash, np.int32),
+            write_slot=np.zeros((T,), np.int32),
+            tables=np.full((T, max_blocks), trash, np.int32),
+            lengths=np.ones((T,), np.int32),
+            temperature=np.zeros((T,), np.float32),
+            top_p=np.ones((T,), np.float32),
+            seeds=np.zeros((T,), np.uint32),
+            sample_pos=np.zeros((T,), np.int32))
+
+    b = blank(T)
+    rows = slice(n_dec, n_dec + S)
+    p = np.arange(S)
+    b["is_prefill"][rows] = True
+    b["x_prefill"][rows] = x
+    b["positions"][rows] = p
+    b["write_block"][rows] = owned[p // bs]
+    b["write_slot"][rows] = p % bs
+    b["tables"][rows, :1] = owned
+    b["lengths"][rows] = p + 1
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    batch["k_pool"], batch["v_pool"] = k_pool, v_pool
+    packed = jax.jit(lambda pr, bb: dense.packed_step_core(pr, cfg, bb))
+    logits, nxt, ks, vs = packed(params, batch)
+    last = n_dec + S - 1
+    np.testing.assert_array_equal(np.asarray(logits[last]),
+                                  np.asarray(ref_logits[0]))
+    np.testing.assert_array_equal(np.asarray(ks[:, 3, :S]),
+                                  np.asarray(rks[:, 0].astype(ks.dtype)))
+
+    # decode row continuing the sequence, packed wider than the old step
+    old_batch = {"tokens": jnp.asarray([int(nxt[last]), 0], jnp.int32),
+                 "positions": jnp.asarray([S, 0], jnp.int32),
+                 "active": jnp.asarray([True, False]),
+                 "block_tables": jnp.asarray(
+                     np.stack([np.concatenate([owned, np.full((7,), trash,
+                                                              np.int32)]),
+                               np.full((8,), trash, np.int32)])),
+                 "k_pool": ks, "v_pool": vs}
+    ol, onxt, _, _ = jax.jit(
+        lambda pr, bb: dense.paged_decode_step(pr, cfg, bb, force_ref=True)
+    )(params, old_batch)
+
+    b2 = blank(T)
+    b2["token_ids"][0] = int(nxt[last])
+    b2["positions"][0] = S
+    b2["write_block"][0] = owned[S // bs]
+    b2["write_slot"][0] = S % bs
+    b2["tables"][0, :1] = owned
+    b2["lengths"][0] = S + 1
+    batch2 = {k: jnp.asarray(v) for k, v in b2.items()}
+    batch2["k_pool"], batch2["v_pool"] = ks, vs
+    pl, pnxt, _, _ = packed(params, batch2)
+    np.testing.assert_array_equal(np.asarray(pl[0]), np.asarray(ol[0]))
+    assert int(pnxt[0]) == int(onxt[0])
+
+
+# ================================================ engine-level greedy parity
+def test_packed_vs_two_program_greedy_bit_identical(text_setup):
+    """Acceptance: the packed runner's greedy streams == the pre-refactor
+    two-program path, across short (single-chunk), long (multi-chunk) and
+    mid prompts decoding concurrently."""
+    cfg, params = text_setup
+    prompts = _prompts(cfg, (12, 90, 40))
+    got, eng_p = _serve(cfg, params, prompts, runner="packed")
+    want, eng_t = _serve(cfg, params, prompts, runner="two_program")
+    assert got == want
+    assert eng_p.stats["packed_steps"] > 0
+    assert eng_t.stats["packed_steps"] == 0
+    # identical iteration structure, one program instead of 1 + n_chunks
+    for key in ("decode_steps", "decode_tokens", "prefill_chunks",
+                "prefill_completions"):
+        assert eng_p.stats[key] == eng_t.stats[key], key
+    assert eng_p.kv_mgr.used_blocks == 0
+
+
+def test_packed_nucleus_matches_two_program(text_setup):
+    """Same kernels (ref), bit-identical logits -> the seeded nucleus
+    sampler draws identical tokens through the packed path."""
+    cfg, params = text_setup
+    prompts = _prompts(cfg, (20, 70), seed=9)
+
+    def serve(runner):
+        eng = EPDEngine(cfg, params, EngineConfig(
+            decode_batch=2, kv_blocks=64, max_seq_len=256, prefill_chunk=32,
+            runner=runner))
+        eng.start()
+        try:
+            for i, p in enumerate(prompts):
+                eng.submit(ServeRequest(
+                    req_id=i + 1, prompt=p.copy(), max_new_tokens=5,
+                    sampling=SamplingParams(temperature=0.8, top_p=0.9,
+                                            seed=41 + i)))
+            return [eng.result(i + 1, timeout=300).tokens
+                    for i in range(len(prompts))]
+        finally:
+            eng.stop()
+
+    assert serve("packed") == serve("two_program")
+
+
+@pytest.mark.cluster
+def test_cluster_packed_parity_and_topologies(text_setup):
+    """ClusterEngine runs the packed runner per instance — greedy streams
+    match the two-program EPDEngine on aggregated AND disaggregated
+    topologies (P-only instances run a zero-slot runner; D-only
+    instances drive the packed program decode-only)."""
+    cfg, params = text_setup
+    prompts = _prompts(cfg, (12, 90, 40), seed=5)
+    want, _ = _serve(cfg, params, prompts, runner="two_program")
+    for topo in ("1EPD", "1P1D"):
+        got, clu = _serve(cfg, params, prompts, engine_cls=ClusterEngine,
+                          topo=topo, runner="packed")
+        assert got == want, topo
+        assert clu.stats["packed_steps"] > 0
+        if topo == "1P1D":
+            assert clu.stats["pd_migrations"] == len(prompts)
+
+
+# =========================================== preemption + compile stability
+def test_packed_preemption_replay_identical(text_setup):
+    """OutOfBlocks preemption through the packed path: victims replay
+    deterministically — tight-pool output == ample-pool output."""
+    cfg, params = text_setup
+    prompts = _prompts(cfg, (44, 44), seed=4)
+    outs = {}
+    for name, blocks in (("ample", 64), ("tight", 7)):
+        out, eng = _serve(cfg, params, prompts, max_new=20,
+                          kv_blocks=blocks, kv_block_size=16,
+                          max_seq_len=112, prefill_chunk=16,
+                          runner="packed")
+        outs[name] = out
+        if name == "tight":
+            assert eng.stats["preemptions"] >= 1
+        assert eng.kv_mgr.used_blocks == 0
+    assert outs["ample"] == outs["tight"]
+
+
+def test_bucketed_shapes_never_recompile_mid_run(text_setup):
+    """Warm-up traffic visits every bucket; afterwards a second identical
+    wave must not add ONE compiled shape (``packed_compiles`` is the
+    packed program's distinct-shape count surfaced in ServeStats)."""
+    cfg, params = text_setup
+    ecfg = EngineConfig(decode_batch=2, kv_blocks=64, max_seq_len=256,
+                        prefill_chunk=16, step_token_budget=34,
+                        runner="packed")
+    eng = EPDEngine(cfg, params, ecfg)
+    n_buckets = len(eng.decode_stage.buckets)
+
+    def wave(base):
+        for i, p in enumerate(_prompts(cfg, (12, 60, 33, 90), seed=8)):
+            eng.submit(ServeRequest(req_id=base + i, prompt=p.copy(),
+                                    max_new_tokens=5))
+        for i in range(4):
+            eng.result(base + i, timeout=300)
+
+    eng.start()
+    try:
+        wave(1)
+        warm = eng.stats["packed_compiles"]
+        assert 0 < warm <= n_buckets + 1   # +1: the chunkless decode shape
+        wave(100)
+        assert eng.stats["packed_compiles"] == warm
+        assert eng.stats["packed_steps"] > 0
+    finally:
+        eng.stop()
+
+
+# ======================================================= backend smoke tests
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_engine_backend_smoke(text_setup, backend):
+    """The same engine test under both registered backends: chunked
+    prefill + decode complete, deterministically, through the packed
+    runner (pallas runs its kernels in interpret mode off-TPU)."""
+    cfg, params = text_setup
+    prompts = _prompts(cfg, (20,), seed=6)
+    runs = []
+    for _ in range(2):
+        out, eng = _serve(cfg, params, prompts, max_new=3,
+                          decode_batch=1, kv_blocks=16, max_seq_len=64,
+                          prefill_chunk=16, attn_backend=backend)
+        runs.append(out)
+        assert eng.backend.name == backend
+        assert eng.stats["prefill_chunks"] >= 2    # chunked path exercised
+        assert eng.stats["packed_steps"] > 0
+        assert len(out[0]) == 3
+    assert runs[0] == runs[1]
+
+
+def test_env_backend_engine_smoke(text_setup):
+    """ci.sh runs this with REPRO_ATTN_BACKEND=pallas: the engine picks
+    the env-selected backend up with no config change (and under the
+    default environment it simply runs the platform default)."""
+    cfg, params = text_setup
+    expect = os.environ.get(ENV_VAR) or (
+        "pallas" if jax.default_backend() == "tpu" else "ref")
+    out, eng = _serve(cfg, params, _prompts(cfg, (20,), seed=6), max_new=2,
+                      decode_batch=1, kv_blocks=16, max_seq_len=64,
+                      prefill_chunk=16)
+    assert eng.backend.name == expect
+    assert len(out[0]) == 2
+
+
+# =============================================== backend math cross-checks
+def test_backend_entry_points_close():
+    """Every pallas entry point agrees with its ref oracle to fp32
+    rounding (the engines assert bit-identity only WITHIN a backend)."""
+    ref, pal = get_backend("ref"), get_backend("pallas")
+    rng = np.random.default_rng(5)
+    B, C, H, K, hd, Pmax = 1, 16, 8, 2, 64, 64
+    f = lambda *s: jnp.asarray(rng.standard_normal(s), jnp.float32)
+    q, k, v = f(B, C, H, hd), f(B, C, K, hd), f(B, C, K, hd)
+    kp, vp = f(B, Pmax, K, hd), f(B, Pmax, K, hd)
+    for prev_len in (0, 32, 48):
+        np.testing.assert_allclose(
+            np.asarray(ref.prefix_chunk_attention(q, k, v, kp, vp,
+                                                  jnp.int32(prev_len))),
+            np.asarray(jax.jit(pal.prefix_chunk_attention)(
+                q, k, v, kp, vp, jnp.int32(prev_len))),
+            atol=2e-5)
+    qq, kk, vv = f(B, 48, H, hd), f(B, 48, K, hd), f(B, 48, K, hd)
+    np.testing.assert_allclose(
+        np.asarray(ref.prefill_attention(qq, kk, vv, causal=True)),
+        np.asarray(jax.jit(lambda a, b, c: pal.prefill_attention(
+            a, b, c, causal=True))(qq, kk, vv)),
+        atol=2e-5)
+    qd, kc, vc = f(2, H, hd), f(2, 64, K, hd), f(2, 64, K, hd)
+    ln = jnp.asarray([40, 17], jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(ref.decode_attention(qd, kc, vc, ln)),
+        np.asarray(jax.jit(pal.decode_attention)(qd, kc, vc, ln)),
+        atol=2e-5)
