@@ -25,6 +25,7 @@ def timed(fn: Callable, *args, **kw):
 
 _ENGINE_MODE_CACHE: dict = {}
 _ENGINE_MM_CACHE: dict = {}
+_ENGINE_PREFIX_CACHE: dict = {}
 
 
 def engine_mode_stats(quick: bool = False, arch: str = "pixtral-12b") -> dict:
@@ -139,6 +140,90 @@ def engine_mm_cache_stats(quick: bool = False,
         "encode_shards_first_seen": shards_first_seen,
     }
     _ENGINE_MM_CACHE[key] = out
+    return out
+
+
+def engine_prefix_cache_stats(quick: bool = False,
+                              arch: str = "codeqwen1.5-7b") -> dict:
+    """Block-level KV prefix caching on a chat-shaped text workload: a
+    64-token shared system prompt across user turns, a turn-2 prompt
+    extending turn 1's full transcript, and an exact multi-turn repeat.
+    Runs the engine cache-off then cache-on and reports per-phase TTFT
+    plus the prefill chunk/token deltas — the on-run must plan strictly
+    fewer prefill rows (ZERO for the block-aligned exact repeat)."""
+    key = (quick, arch)
+    if key in _ENGINE_PREFIX_CACHE:
+        return _ENGINE_PREFIX_CACHE[key]
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EPDEngine, EngineConfig, ServeRequest
+
+    cfg = get_config(arch).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(17)
+    sys_prompt = rng.integers(0, cfg.vocab, 64).astype(np.int32)
+    n_users = 2 if quick else 4
+    users = [rng.integers(0, cfg.vocab, 16).astype(np.int32)
+             for _ in range(n_users)]
+    max_new = 8
+    # turn 1: system prompt + first user message (80 tokens = 5 full
+    # blocks, so the exact repeat is FULLY cached when the cache is on)
+    turn1 = np.concatenate([sys_prompt, users[0]])
+
+    out = {}
+    for on in (False, True):
+        eng = EPDEngine(cfg, params, EngineConfig(
+            decode_batch=2, kv_blocks=128, max_seq_len=256,
+            prefill_chunk=32, prefix_cache=on))
+        eng.start()
+        try:
+            # warm-up: compiles prefill/decode AND seeds the cache with
+            # the system prompt, outside the measured window
+            eng.submit(ServeRequest(req_id=1, prompt=turn1.copy(),
+                                    max_new_tokens=max_new))
+            r_first = eng.result(1, timeout=600)
+            s0 = dict(eng.stats)
+            t0 = time.perf_counter()
+            rid, shared_ttfts = 2, []
+            for u in users:
+                eng.submit(ServeRequest(
+                    req_id=rid, prompt=np.concatenate([sys_prompt, u]),
+                    max_new_tokens=max_new))
+                shared_ttfts.append(eng.result(rid, timeout=600).ttft)
+                rid += 1
+            # multi-turn: turn 2 extends turn 1's full transcript
+            turn2 = np.concatenate([
+                turn1, np.asarray(r_first.tokens, np.int32),
+                rng.integers(0, cfg.vocab, 16).astype(np.int32)])
+            eng.submit(ServeRequest(req_id=rid, prompt=turn2,
+                                    max_new_tokens=max_new))
+            r_turn2 = eng.result(rid, timeout=600)
+            rid += 1
+            # exact repeat of turn 1: fully cached -> zero prefill rows
+            eng.submit(ServeRequest(req_id=rid, prompt=turn1.copy(),
+                                    max_new_tokens=max_new))
+            r_repeat = eng.result(rid, timeout=600)
+            wall = time.perf_counter() - t0
+            s1 = dict(eng.stats)
+        finally:
+            eng.stop()
+        out["on" if on else "off"] = {
+            "mean_shared_ttft": float(np.mean(shared_ttfts)),
+            "multi_turn_ttft": r_turn2.ttft,
+            "repeat_ttft": r_repeat.ttft,
+            "prefill_chunks": s1["prefill_chunks"] - s0["prefill_chunks"],
+            "prefill_tokens": (s1["packed_prefill_tokens"]
+                               - s0["packed_prefill_tokens"]),
+            "prefix_tokens_reused": (s1["prefix_tokens_reused"]
+                                     - s0["prefix_tokens_reused"]),
+            "prefix_cache_hits": (s1["prefix_cache_hits"]
+                                  - s0["prefix_cache_hits"]),
+            "wall_s": wall,
+            "n_requests": n_users + 2,
+        }
+    _ENGINE_PREFIX_CACHE[key] = out
     return out
 
 

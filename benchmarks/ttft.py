@@ -20,7 +20,8 @@ from repro.core.cluster import ClusterSpec, simulate
 from repro.data.workload import WorkloadSpec, poisson_requests
 
 from benchmarks.common import (DIST_SPEC, EPD_SPEC, Row, engine_mm_cache_stats,
-                               engine_mode_stats, timed)
+                               engine_mode_stats, engine_prefix_cache_stats,
+                               timed)
 
 RATES = {"minicpm-v-2.6": 0.25, "internvl2-8b": 0.08, "internvl2-26b": 0.08}
 PAPER_REDUCTION = {"minicpm-v-2.6": 0.719, "internvl2-8b": 0.328,
@@ -54,6 +55,7 @@ def run(quick: bool = False) -> list[Row]:
                 {"paper_reduction_upto": PAPER_REDUCTION[model]}))
     rows.extend(run_engine_ttft(quick))
     rows.extend(run_engine_mm_cache(quick))
+    rows.extend(run_engine_prefix_cache(quick))
     return rows
 
 
@@ -91,6 +93,32 @@ def run_engine_mm_cache(quick: bool = False) -> list[Row]:
     ]
 
 
+def run_engine_prefix_cache(quick: bool = False) -> list[Row]:
+    """Block-level KV prefix cache rows: multi-turn chat + shared system
+    prompt, cache-on vs cache-off. The on-run reuses full prefix blocks
+    (prefix_tokens_reused > 0) and plans strictly fewer prefill chunk
+    rows — ZERO for the block-aligned exact repeat."""
+    s = engine_prefix_cache_stats(quick)
+    rows = []
+    for on in ("off", "on"):
+        m = s[on]
+        rows.append(Row(
+            f"engine_prefix_cache/{on}", m["wall_s"] * 1e6,
+            round(m["mean_shared_ttft"], 4),
+            {"multi_turn_ttft": round(m["multi_turn_ttft"], 4),
+             "repeat_ttft": round(m["repeat_ttft"], 4),
+             "prefill_chunks": m["prefill_chunks"],
+             "prefill_tokens": m["prefill_tokens"],
+             "prefix_tokens_reused": m["prefix_tokens_reused"]}))
+    rows.append(Row(
+        "engine_prefix_cache/prefill_rows_saved", 0.0,
+        s["off"]["prefill_chunks"] - s["on"]["prefill_chunks"],
+        {"prefill_tokens_saved": (s["off"]["prefill_tokens"]
+                                  - s["on"]["prefill_tokens"]),
+         "cache_hits": s["on"]["prefix_cache_hits"]}))
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -100,7 +128,8 @@ if __name__ == "__main__":
                          "real-execution engine TTFT + mm-cache rows")
     args = ap.parse_args()
     if args.engine_only:
-        out = run_engine_ttft(args.quick) + run_engine_mm_cache(args.quick)
+        out = (run_engine_ttft(args.quick) + run_engine_mm_cache(args.quick)
+               + run_engine_prefix_cache(args.quick))
     else:
         out = run(args.quick)
     print("name,us_per_call,derived")

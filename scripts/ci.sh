@@ -28,6 +28,11 @@ if [ "$TIER" = "fast" ]; then
         "tests/test_runner.py::test_packed_vs_two_program_greedy_bit_identical" \
         "tests/test_cluster_engine.py::test_1epd_greedy_parity_bit_identical" \
         "tests/test_cluster_engine.py::test_spec_and_config_validation" \
+        "tests/test_prefix_cache.py::test_cache_on_off_bit_identity_single_engine[packed]" \
+        || exit $?
+    echo "== fast tier: prefix_cache=on engine smoke (fully-cached admit) =="
+    python -m pytest -q \
+        "tests/test_prefix_cache.py::test_fully_cached_prefix_runs_zero_prefill_rows" \
         || exit $?
     echo "== fast tier: pallas-backend engine smoke (interpret) =="
     REPRO_ATTN_BACKEND=pallas python -m pytest -q \
@@ -53,8 +58,10 @@ python examples/epd_serve.py --requests 4 --new-tokens 4 || exit 1
 echo "== smoke: cluster serve example (2E1P1D, migrations) =="
 python examples/cluster_serve.py --requests 4 --new-tokens 4 || exit 1
 
-echo "== smoke: engine TTFT + mm-cache-hit benchmark (quick) =="
-python benchmarks/ttft.py --quick --engine-only || exit 1
+echo "== smoke: engine TTFT + mm-cache + KV-prefix-cache benchmark (quick) =="
+# includes the engine_prefix_cache/{off,on} multi-turn rows; the whole
+# engine-only sweep must stay under the 10-minute wall-clock bound
+timeout 600 python benchmarks/ttft.py --quick --engine-only || exit 1
 
 echo "== smoke: mixed-load scheduler (long prefill mid-decode, chunked) =="
 # asserts decode keeps emitting while the long prompt chunk-prefills, the

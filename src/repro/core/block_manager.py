@@ -3,16 +3,26 @@
 ``BlockManager`` is the shared paging engine; ``MMBlockManager`` (paper
 §3.2.1) manages multimodal-token blocks on E and P workers and pre-allocates
 blocks per request; ``KVBlockManager`` manages paged KV blocks on P and D
-workers and supports appending blocks as decode grows the sequence.
+workers, supports appending blocks as decode grows the sequence, and —
+with ``prefix_cache=True`` — adds block-level prefix caching: hash-chained
+block keys, per-block refcounts, an LRU free-list of unreferenced cached
+blocks, and copy-on-write when a request must write into a shared block.
 
 Invariants (property-tested):
-  * a block is owned by at most one request,
-  * used + free == capacity,
-  * freeing a request returns exactly the blocks it held.
+  * without prefix caching, a block is owned by at most one request,
+  * used + free == capacity (cached-but-unreferenced blocks count free),
+  * freeing a request releases exactly the references it held — a block
+    shared with another request (or retained by the prefix index) is
+    never returned to the allocatable set while still referenced.
 """
 from __future__ import annotations
 
+import hashlib
+from collections import OrderedDict
 from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
 
 
 class OutOfBlocks(Exception):
@@ -37,7 +47,7 @@ class BlockManager:
 
     @property
     def used_blocks(self) -> int:
-        return self.n_blocks - len(self._free)
+        return self.n_blocks - self.free_blocks
 
     def blocks_for(self, n_tokens: int) -> int:
         return -(-n_tokens // self.block_size)
@@ -93,7 +103,247 @@ class MMBlockManager(BlockManager):
 
 
 class KVBlockManager(BlockManager):
-    """Paged KV cache (vLLM-style)."""
+    """Paged KV cache (vLLM-style), optionally with block-level prefix
+    caching — the KV analogue of the ψ_EP multimedia-token cache.
 
-    def __init__(self, n_blocks: int, block_size: int = 16):
+    With ``prefix_cache=True`` every FULL prompt block gets a hash-chained
+    key (``key_i = H(key_{i-1}, tokens of block i)``, with an mm-content
+    salt folded into the chain root so multimodal prefixes compose with
+    the ψ_EP cache). Completed prefills ``commit`` their full blocks into
+    a key→block index; a later request maps the longest cached prefix of
+    its prompt onto those SHARED blocks (per-block refcounts) and only
+    prefills the suffix. ``free`` drops references, never data: a block
+    whose refcount hits zero parks on an LRU free-list if indexed (it can
+    be re-pinned by a future match) and is only evicted — index entry
+    dropped, data reclaimed — when the allocator runs dry. ``cow`` gives
+    a request a private copy of a shared block before it writes into one
+    (divergence inside a partially-filled block).
+
+    ``on_stat`` (optional) is called with a counter name on evictions and
+    copy-on-writes so the serving layer can surface them in ServeStats.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int = 16, *,
+                 prefix_cache: bool = False,
+                 on_stat: Optional[Callable[[str], None]] = None):
         super().__init__(n_blocks=n_blocks, block_size=block_size, name="kv")
+        self.prefix_cache = prefix_cache
+        self.on_stat = on_stat
+        self._ref: dict[int, int] = {}            # block -> live refcount
+        self._index: dict[str, int] = {}          # block key -> block id
+        self._key_of: dict[int, str] = {}         # block id -> its key
+        # refcount-0 indexed blocks, least-recently-used first (only these
+        # are evictable; eviction drops the index entry + reclaims data)
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        # keys an in-flight prefill will produce -> producing req_id (the
+        # follower-waits-on-leader dedup of concurrent identical prefills)
+        self._inflight: dict[str, int] = {}
+        self._inflight_of: dict[int, list[str]] = {}
+        self.prefix_evictions = 0
+        self.cow_copies = 0
+
+    # ------------------------------------------------------------ queries
+    @property
+    def free_blocks(self) -> int:
+        # cached-but-unreferenced blocks are reclaimable on demand
+        return len(self._free) + len(self._lru)
+
+    def ref_count(self, block: int) -> int:
+        return self._ref.get(block, 0)
+
+    def cached_blocks(self) -> int:
+        """Blocks currently carrying an index entry (live or LRU)."""
+        return len(self._key_of)
+
+    # ---------------------------------------------------------- hash chain
+    def chain_keys(self, tokens: np.ndarray, salt: str = "") -> list[str]:
+        """Hash-chained keys of every FULL block of ``tokens``. Partial
+        tail blocks have no key (their content is not block-complete).
+        ``salt`` folds request-invariant context that changes the KV —
+        the mm-content hash + mm positions — into the chain root."""
+        bs = self.block_size
+        toks = np.ascontiguousarray(np.asarray(tokens, dtype=np.int32))
+        parent = hashlib.sha1(salt.encode()).hexdigest()
+        keys = []
+        for i in range(len(toks) // bs):
+            h = hashlib.sha1(parent.encode())
+            h.update(toks[i * bs:(i + 1) * bs].tobytes())
+            parent = h.hexdigest()
+            keys.append(parent)
+        return keys
+
+    def match_len(self, keys: list[str]) -> int:
+        """Longest prefix of ``keys`` present in the index (no pinning)."""
+        n = 0
+        for k in keys:
+            if k not in self._index:
+                break
+            n += 1
+        return n
+
+    # ---------------------------------------------------- internal plumbing
+    def _take_block(self) -> int:
+        """One allocatable block: the free list first, then evict the
+        least-recently-used unreferenced cached block."""
+        if self._free:
+            return self._free.pop()
+        if self._lru:
+            block, _ = self._lru.popitem(last=False)
+            key = self._key_of.pop(block)
+            del self._index[key]
+            self.prefix_evictions += 1
+            if self.on_stat is not None:
+                self.on_stat("prefix_evictions")
+            return block
+        raise OutOfBlocks(f"{self.name}: out of blocks "
+                          f"(0 free, 0 evictable)")
+
+    def _pin(self, block: int) -> None:
+        self._ref[block] = self._ref.get(block, 0) + 1
+        self._lru.pop(block, None)
+
+    def _unpin(self, block: int) -> None:
+        n = self._ref.get(block, 0) - 1
+        if n > 0:
+            self._ref[block] = n
+            return
+        self._ref.pop(block, None)
+        if block in self._key_of:
+            self._lru[block] = None          # evictable, most-recent last
+        else:
+            self._free.append(block)
+
+    # ---------------------------------------------------------- mutations
+    def allocate(self, req_id: int, n_tokens: int) -> list[int]:
+        if not self.prefix_cache:
+            return super().allocate(req_id, n_tokens)
+        need = self.blocks_for(n_tokens)
+        if need > self.free_blocks:
+            raise OutOfBlocks(
+                f"{self.name}: need {need} blocks, have {self.free_blocks}")
+        blocks = [self._take_block() for _ in range(need)]
+        for b in blocks:
+            self._pin(b)
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def allocate_prefix(self, req_id: int, keys: list[str], n_tokens: int,
+                        max_match_blocks: Optional[int] = None,
+                        align_blocks: int = 1
+                        ) -> Optional[tuple[list[int], int]]:
+        """Map the longest cached prefix onto shared blocks and allocate
+        private blocks for the rest. Returns ``(block_table, n_matched)``
+        or None (allocating nothing) when the pool cannot hold the suffix
+        right now. ``max_match_blocks``/``align_blocks`` cap and align the
+        match (the two-program oracle needs chunk-aligned suffix starts
+        and at least one uncached token)."""
+        total = self.blocks_for(n_tokens)
+        matched = min(self.match_len(keys), total)
+        if max_match_blocks is not None:
+            matched = min(matched, max_match_blocks)
+        matched = (matched // max(align_blocks, 1)) * max(align_blocks, 1)
+        shared = [self._index[k] for k in keys[:matched]]
+        for b in shared:
+            self._pin(b)
+        need = total - matched
+        if need > self.free_blocks:
+            for b in reversed(shared):
+                self._unpin(b)
+            return None
+        fresh = [self._take_block() for _ in range(need)]
+        for b in fresh:
+            self._pin(b)
+        self._owned.setdefault(req_id, []).extend(shared + fresh)
+        return shared + fresh, matched
+
+    def append(self, req_id: int, n_new_tokens: int,
+               current_tokens: int) -> list[int]:
+        if not self.prefix_cache:
+            return super().append(req_id, n_new_tokens, current_tokens)
+        have = len(self._owned.get(req_id, ()))
+        extra = max(0, self.blocks_for(current_tokens + n_new_tokens) - have)
+        if extra > self.free_blocks:
+            raise OutOfBlocks(f"{self.name}: append needs {extra}")
+        blocks = [self._take_block() for _ in range(extra)]
+        for b in blocks:
+            self._pin(b)
+        self._owned.setdefault(req_id, []).extend(blocks)
+        return blocks
+
+    def cow(self, req_id: int, idx: int) -> Optional[tuple[int, int]]:
+        """Copy-on-write: if logical block ``idx`` of the request's table
+        is shared (refcount > 1), swap in a fresh private block and return
+        ``(src, dst)`` so the pool owner can copy the data. None when the
+        block is already private (no copy needed)."""
+        table = self._owned.get(req_id)
+        if table is None or not self.prefix_cache:
+            return None
+        src = table[idx]
+        if self._ref.get(src, 0) <= 1:
+            return None
+        dst = self._take_block()
+        self._ref[dst] = 1
+        table[idx] = dst
+        self._unpin(src)
+        self.cow_copies += 1
+        if self.on_stat is not None:
+            self.on_stat("cow_copies")
+        return src, dst
+
+    def free(self, req_id: int) -> int:
+        if not self.prefix_cache:
+            return super().free(req_id)
+        self.clear_inflight(req_id)
+        blocks = self._owned.pop(req_id, [])
+        for b in blocks:
+            self._unpin(b)
+        return len(blocks)
+
+    # -------------------------------------------------- index + inflight
+    def commit(self, req_id: int, keys: list[str]) -> int:
+        """Prefill completed: publish the request's full prompt blocks
+        under their chain keys (first producer wins; a racing duplicate
+        keeps its private copy unindexed) and clear its in-flight claim.
+        Returns the number of newly indexed blocks."""
+        self.clear_inflight(req_id)
+        if not self.prefix_cache:
+            return 0
+        table = self._owned.get(req_id, ())
+        added = 0
+        for i, key in enumerate(keys):
+            if i >= len(table) or key in self._index:
+                continue
+            block = table[i]
+            if block in self._key_of:        # already published (shared)
+                continue
+            self._index[key] = block
+            self._key_of[block] = key
+            added += 1
+        return added
+
+    def register_inflight(self, req_id: int, keys: list[str]) -> None:
+        """Claim the keys this request's prefill will produce, so a
+        concurrent identical prefill can wait instead of recomputing."""
+        if not self.prefix_cache:
+            return
+        mine = self._inflight_of.setdefault(req_id, [])
+        for k in keys:
+            if k not in self._index and k not in self._inflight:
+                self._inflight[k] = req_id
+                mine.append(k)
+
+    def inflight_holder(self, key: str) -> Optional[int]:
+        return self._inflight.get(key)
+
+    def clear_inflight(self, req_id: int) -> None:
+        for k in self._inflight_of.pop(req_id, ()):
+            self._inflight.pop(k, None)
+
+    def reset(self) -> None:
+        super().reset()
+        self._ref.clear()
+        self._index.clear()
+        self._key_of.clear()
+        self._lru.clear()
+        self._inflight.clear()
+        self._inflight_of.clear()

@@ -100,7 +100,10 @@ class _MigratingPsiPD:
         self.cluster._stats.bump("pd_migrations")
         payload = MigratedPrefill(req=req, first_tok=task.first_tok,
                                   total=task.total, mm_tokens=task.mm_tokens,
-                                  k_blocks=k, v_blocks=v)
+                                  k_blocks=k, v_blocks=v, keys=task.keys,
+                                  x_last=(task.x_last
+                                          if task.first_tok is None
+                                          else None))
         try:
             self.cluster._route_migration(payload)
         except RuntimeError as e:
@@ -153,7 +156,8 @@ class InstanceWorker:
         self.encode_stage = (
             EncodeStage(c.model, c.cfg, c.params, c.ecfg.n_encode_workers,
                         kit=c.kit, stats=c._stats) if e else None)
-        self.kv = (PagedKVState(c.model, c.cfg, c.ecfg, kit=c.kit)
+        self.kv = (PagedKVState(c.model, c.cfg, c.ecfg, kit=c.kit,
+                                stats=c._stats)
                    if (p or d) else None)
         self.prefill_stage = (
             PagedPrefillStage(c.model, c.cfg, c.params, c.ecfg, c._stats,
@@ -386,10 +390,17 @@ class InstanceWorker:
                 with self._mig_lock:
                     self.mig_q.popleft()
                 continue
-            if not self.kv.inject(m.req.req_id, m.k_blocks, m.v_blocks,
-                                  m.total):
+            # with prefix caching, inject re-pins any prefix already
+            # cached on THIS instance (m.keys travelled with the
+            # migration) and commits the prompt blocks to the local index
+            repinned = self.kv.inject(m.req.req_id, m.k_blocks,
+                                      m.v_blocks, m.total, keys=m.keys)
+            if repinned is None:
                 c._stats.bump("admission_backoffs")
                 return worked
+            if repinned:
+                c._stats.bump("prefix_cache_hits")
+                c._stats.bump("prefix_tokens_reused", repinned)
             with self._mig_lock:
                 self.mig_q.popleft()
             m.k_blocks = m.v_blocks = None      # release the copy

@@ -379,7 +379,8 @@ class EPDEngine(EngineBase):
         if self.paged:
             kit = PagedJitKit(self.model, cfg, backend=self.backend)
             self.kit = kit
-            self._kv = PagedKVState(self.model, cfg, engine, kit=kit)
+            self._kv = PagedKVState(self.model, cfg, engine, kit=kit,
+                                    stats=self._stats)
             self.kv_mgr = self._kv.mgr       # compat alias (tests, benches)
             self.prefill_stage = PagedPrefillStage(
                 self.model, cfg, params, engine, self._stats, self._kv,

@@ -125,6 +125,14 @@ class ModelRunner(PagedDecodeStage):
             quantum, cap = bs, ecfg.max_seq_len
         self.buckets = _bucket_ladder(quantum, cap)
         self.max_prefill_tokens = self.buckets[-1]
+        # block-table width ladder: instead of padding every row's table
+        # to max_blocks, pad to the smallest power-of-two-ish bucket that
+        # covers the batch's live block counts (short sequences gather a
+        # fraction of the pool width; NEG_INF-masked softmax keeps any
+        # width bit-exact). Distinct widths used feed the
+        # ``packed_table_widths`` compile-shape counter.
+        self.table_buckets = _bucket_ladder(1, self.kv.max_blocks)
+        self.table_widths_used: set[int] = set()
 
     # ------------------------------------------------------------- planning
     def next_chunk_len(self, task: PrefillProgress) -> int:
@@ -174,11 +182,23 @@ class ModelRunner(PagedDecodeStage):
         bs = self.kv.mgr.block_size
         trash = self.kv.trash
 
+        # bucket the table width over this batch's live block counts
+        # (decode rows are prefix-packed real ids then trash; inactive
+        # rows are all trash, so the max covers every gathered entry)
+        need = 1
+        if n:
+            need = max(need, int((self._tables != trash).sum(axis=1).max()))
+        for c in chunks:
+            need = max(need, len(c.blocks))
+        W = next(w for w in self.table_buckets if need <= w)
+        self.table_widths_used.add(W)
+        self.stats.set_hwm("packed_table_widths", len(self.table_widths_used))
+
         tok = np.zeros((T,), np.int32)
         pos = np.zeros((T,), np.int32)
         wb = np.full((T,), trash, np.int32)
         ws = np.zeros((T,), np.int32)
-        tables = np.full((T, self.kv.max_blocks), trash, np.int32)
+        tables = np.full((T, W), trash, np.int32)
         lengths = np.ones((T,), np.int32)
         is_pref = np.zeros((T,), bool)
         x_pref = np.zeros((T, self.d_model), self._embed_dtype)
@@ -190,7 +210,7 @@ class ModelRunner(PagedDecodeStage):
         # decode rows 0..n-1: exactly the batched step's per-slot state
         if n:
             tok[:n] = self._tokens
-            tables[:n] = self._tables
+            tables[:n] = self._tables[:, :W]
             temps[:n] = self._temps
             top_ps[:n] = self._top_ps
             seeds[:n] = self._seeds
@@ -200,6 +220,14 @@ class ModelRunner(PagedDecodeStage):
             wb[act] = self._tables[act, self._positions[act] // bs]
             ws[act] = self._positions[act] % bs
             lengths[act] = self._positions[act] + 1
+            # pending-x slots (fully-cached admission): a one-shot prefill
+            # row that recomputes the final prompt position from the
+            # embedded last token — its sampled token is the first token
+            for i in act:
+                xp = self._x_pending[i]
+                if xp is not None:
+                    is_pref[i] = True
+                    x_pref[i] = xp
 
         # chunk rows: flat-packed prompt tokens, contiguous per chunk
         lane = n
@@ -264,6 +292,10 @@ class ModelRunner(PagedDecodeStage):
         for i, s in enumerate(self._slots):
             if s is None or not active[i]:
                 continue
+            if self._x_pending[i] is not None:
+                # the pending-x row just sampled the request's FIRST token
+                self._x_pending[i] = None
+                s["req"].t_first_token = time.perf_counter()
             s["req"].accept(int(nxt[i]))   # stop tokens latch, not emit;
             self._tokens[i] = nxt[i]       # slot retires next iteration
             self._positions[i] += 1

@@ -176,8 +176,16 @@ class Scheduler:
             return
         if done:
             self.task = None
+            self._commit_cache(task)
             task.req.advance(RequestState.DECODING)
             self.psi_pd.send(task)
+
+    def _commit_cache(self, task: PrefillProgress) -> None:
+        """Publish a completed prefill's blocks into the prefix index
+        (no-op for duck-typed stage stubs and with the cache off)."""
+        commit = getattr(self.prefill, "commit_cache", None)
+        if commit is not None:
+            commit(task)
 
     # ------------------------------------------------------- packed runner
     def _step_packed(self) -> bool:
@@ -195,6 +203,7 @@ class Scheduler:
         n_dec = int(active.sum())
         spent = n_dec
         chunks = []
+        handed = 0           # fully-cached direct-to-decode handoffs
         planned_tokens = 0
         # the same budget policy as the two-program path; additionally the
         # packed prefill region is capped at the runner's largest bucket
@@ -203,6 +212,20 @@ class Scheduler:
                 self.task = self._try_admit()
             if self.task is None:
                 break
+            if self.task.done and self.task.first_tok is None:
+                # fully-cached prompt (prefix cache): ZERO prefill rows —
+                # commit (clears the in-flight claim), hand straight to
+                # decode; the pending-x row there samples the first
+                # token. Costs no budget; each pass consumes a queue
+                # entry, so the admission loop still terminates.
+                task = self.task
+                self.task = None
+                self._commit_cache(task)
+                self.stats.bump("prefill_completions")
+                task.req.advance(RequestState.DECODING)
+                self.psi_pd.send(task)
+                handed += 1
+                continue
             n_new = runner.next_chunk_len(self.task)
             over = (spent + self.chunk > self.budget
                     or planned_tokens + n_new > runner.max_prefill_tokens)
@@ -227,9 +250,10 @@ class Scheduler:
                 lambda r: self.on_fail(r, f"packed step failed: {e!r}"))
             return True
         for task in finished:
+            self._commit_cache(task)
             task.req.advance(RequestState.DECODING)
             self.psi_pd.send(task)
-        return bool(stepped or chunks)
+        return bool(stepped or chunks or handed)
 
     # ------------------------------------------------------------- shutdown
     def drain(self) -> list[ServeRequest]:

@@ -18,6 +18,7 @@ the historical argmax path.
 """
 from __future__ import annotations
 
+import hashlib
 import math
 import queue
 import threading
@@ -32,7 +33,7 @@ from repro.configs.base import ArchConfig
 from repro.core.block_manager import KVBlockManager, OutOfBlocks
 from repro.kernels.registry import AttentionBackend, resolve_backend
 from repro.models import dense
-from repro.serving.transfer import PrefillProgress, PsiPD
+from repro.serving.transfer import MMTokenCache, PrefillProgress, PsiPD
 from repro.serving.types import EngineConfig, ServeRequest
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
@@ -61,7 +62,18 @@ class ServeStats:
             # (== len(bucket ladder) once warm; tests assert it stops
             # growing mid-run)
             "packed_steps": 0, "packed_compiles": 0,
-            "packed_prefill_tokens": 0}
+            "packed_prefill_tokens": 0,
+            # KV prefix caching (EngineConfig.prefix_cache): requests that
+            # reused >= 1 cached prompt block / total prompt tokens served
+            # from the index instead of prefill compute / LRU evictions /
+            # copy-on-write block copies / follower backoffs behind an
+            # in-flight identical prefill
+            "prefix_cache_hits": 0, "prefix_tokens_reused": 0,
+            "prefix_evictions": 0, "cow_copies": 0,
+            "prefix_inflight_waits": 0,
+            # distinct block-table widths the packed runner has padded to
+            # (like packed_compiles: stops growing once warm)
+            "packed_table_widths": 0}
         self.live_cache_bytes = 0        # dense-mode KV accounting
 
     def peak(self, live_bytes: int) -> None:
@@ -82,6 +94,11 @@ class ServeStats:
     def bump(self, key: str, n: int = 1) -> None:
         with self.lock:
             self.data[key] += n
+
+    def set_hwm(self, key: str, value: int) -> None:
+        """Record a high-water mark (e.g. distinct packed table widths)."""
+        with self.lock:
+            self.data[key] = max(self.data[key], value)
 
     def add_role_time(self, role: str, seconds: float) -> None:
         """Accumulate per-role occupancy (cluster role-switch accounting)."""
@@ -242,13 +259,30 @@ class DensePrefillStage:
         return (req, tok, cache)
 
 
+def prefix_salt(req: ServeRequest) -> str:
+    """Request-invariant context folded into the prefix-cache chain root:
+    multimodal prompts with byte-identical token ids but different images
+    (or different mm placements) must never share KV blocks, so the mm
+    content hash + positions salt the chain — this is also what lets a
+    ψ_EP mm-cache hit compose with a KV prefix hit."""
+    if req.mm_embeds is None:
+        return ""
+    pos = np.ascontiguousarray(np.asarray(req.mm_positions, np.int32))
+    return (MMTokenCache.content_key(req.mm_embeds)
+            + hashlib.sha1(pos.tobytes()).hexdigest())
+
+
 class PagedKVState:
     """Shared paged KV pool + block manager (P writes, D reads/appends)."""
 
     def __init__(self, model, cfg: ArchConfig, ecfg: EngineConfig, *,
-                 kit: Optional["PagedJitKit"] = None):
+                 kit: Optional["PagedJitKit"] = None,
+                 stats: Optional[ServeStats] = None):
         bs = ecfg.kv_block_size
-        self.mgr = KVBlockManager(ecfg.kv_blocks, bs)
+        on_stat = stats.bump if stats is not None else None
+        self.mgr = KVBlockManager(ecfg.kv_blocks, bs,
+                                  prefix_cache=ecfg.prefix_cache,
+                                  on_stat=on_stat)
         self.lock = threading.Lock()         # guards mgr
         self.pool_lock = threading.Lock()    # guards the pool arrays
         self.max_blocks = math.ceil(ecfg.max_seq_len / bs)
@@ -259,10 +293,31 @@ class PagedKVState:
         # accelerators donation updates the pool in place instead of
         # copying it per migration) — eager fallback for standalone use
         self._inject_fn = kit.pool_inject if kit is not None else None
+        self._copy_fn = kit.pool_copy if kit is not None else None
         # bytes of one (k + v) block pair, for peak-memory accounting
         self.block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
                                 * cfg.head_dim
                                 * self.k_pool.dtype.itemsize)
+
+    # ------------------------------------------------------- copy-on-write
+    def ensure_private(self, req_id: int, idx: int) -> None:
+        """Make logical block ``idx`` of a request's table private before
+        a write lands in it: if the block is shared (refcount > 1), swap
+        in a fresh block and copy the pool data. Raises ``OutOfBlocks``
+        when no block can be taken for the copy."""
+        with self.lock:
+            res = self.mgr.cow(req_id, idx)
+        if res is None:
+            return
+        src, dst = res
+        with self.pool_lock:
+            if self._copy_fn is not None:
+                self.k_pool, self.v_pool = self._copy_fn(
+                    self.k_pool, self.v_pool,
+                    jnp.int32(src), jnp.int32(dst))
+            else:
+                self.k_pool = self.k_pool.at[:, dst].set(self.k_pool[:, src])
+                self.v_pool = self.v_pool.at[:, dst].set(self.v_pool[:, src])
 
     # -------------------------------------------------- PD cache migration
     def extract(self, req_id: int) -> tuple[np.ndarray, np.ndarray]:
@@ -281,28 +336,51 @@ class PagedKVState:
         return k, v
 
     def inject(self, req_id: int, k_blocks: np.ndarray,
-               v_blocks: np.ndarray, n_tokens: int) -> bool:
+               v_blocks: np.ndarray, n_tokens: int,
+               keys: Optional[list] = None) -> Optional[int]:
         """Allocate blocks and scatter migrated KV into this pool — the
-        destination half of a ψ_PD migration. Returns False (allocating
+        destination half of a ψ_PD migration. Returns None (allocating
         nothing) when the pool cannot hold the sequence right now; the
         caller backs off until decode retirements free blocks. ``+1``
         headroom mirrors prefill admission (the first decode write never
-        needs an append)."""
+        needs an append).
+
+        With ``keys`` (prefix caching), the migrated request RE-PINS any
+        prefix already cached on this instance — those blocks are shared,
+        only the unmatched suffix is scattered from the migrated copy —
+        and its full prompt blocks are committed to the local index so
+        later arrivals here hit them. Returns the number of prompt tokens
+        re-pinned (0 when nothing matched); block bytes are interchangeable
+        across pools because every instance runs the same shared-kit
+        executables."""
+        use_cache = keys is not None and self.mgr.prefix_cache
         with self.lock:
-            if not self.mgr.can_allocate(n_tokens + 1):
-                return False
-            blocks = self.mgr.allocate(req_id, n_tokens + 1)
-        ids = jnp.asarray(blocks[:k_blocks.shape[1]], jnp.int32)
-        k = jnp.asarray(k_blocks, self.k_pool.dtype)
-        v = jnp.asarray(v_blocks, self.v_pool.dtype)
-        with self.pool_lock:
-            if self._inject_fn is not None:
-                self.k_pool, self.v_pool = self._inject_fn(
-                    self.k_pool, self.v_pool, k, v, ids)
+            if use_cache:
+                res = self.mgr.allocate_prefix(req_id, keys, n_tokens + 1)
+                if res is None:
+                    return None
+                blocks, matched = res
             else:
-                self.k_pool = self.k_pool.at[:, ids].set(k)
-                self.v_pool = self.v_pool.at[:, ids].set(v)
-        return True
+                if not self.mgr.can_allocate(n_tokens + 1):
+                    return None
+                blocks = self.mgr.allocate(req_id, n_tokens + 1)
+                matched = 0
+        n_copy = k_blocks.shape[1]
+        if matched < n_copy:
+            ids = jnp.asarray(blocks[matched:n_copy], jnp.int32)
+            k = jnp.asarray(k_blocks[:, matched:], self.k_pool.dtype)
+            v = jnp.asarray(v_blocks[:, matched:], self.v_pool.dtype)
+            with self.pool_lock:
+                if self._inject_fn is not None:
+                    self.k_pool, self.v_pool = self._inject_fn(
+                        self.k_pool, self.v_pool, k, v, ids)
+                else:
+                    self.k_pool = self.k_pool.at[:, ids].set(k)
+                    self.v_pool = self.v_pool.at[:, ids].set(v)
+        if use_cache:
+            with self.lock:
+                self.mgr.commit(req_id, keys)
+        return matched * self.mgr.block_size
 
 
 def _prefill_chunk_step(cfg: ArchConfig, params, k_pool, v_pool, batch,
@@ -349,6 +427,8 @@ class PagedPrefillStage:
         # blocks (the final partial chunk pads into its own allocation)
         self.chunk = (-(-ecfg.prefill_chunk // bs) * bs
                       if ecfg.prefill_chunk > 0 else 0)
+        self.prefix_enabled = ecfg.prefix_cache
+        self.runner_name = ecfg.runner
         # the jitted programs live in a PagedJitKit so a multi-instance
         # cluster compiles each graph ONCE and every instance (including
         # ones created by a role switch) reuses the same executables
@@ -366,12 +446,66 @@ class PagedPrefillStage:
         prompt right now — the scheduler keeps the request at the head of
         its FIFO admission queue (pool-pressure backoff)."""
         S = len(req.prompt)
-        with self.kv.lock:
-            # +1 headroom so the first decode write never needs append
-            if not self.kv.mgr.can_allocate(S + 1):
-                return None
-            self.kv.mgr.allocate(req.req_id, S + 1)
-            self.stats.peak(self.kv.mgr.used_blocks * self.kv.block_bytes)
+        keys: Optional[list] = None
+        n_cached = 0
+        if not self.prefix_enabled:
+            with self.kv.lock:
+                # +1 headroom so the first decode write never needs append
+                if not self.kv.mgr.can_allocate(S + 1):
+                    return None
+                self.kv.mgr.allocate(req.req_id, S + 1)
+                self.stats.peak(self.kv.mgr.used_blocks
+                                * self.kv.block_bytes)
+        else:
+            mgr = self.kv.mgr
+            keys = mgr.chain_keys(req.prompt, prefix_salt(req))
+            # runner-dependent match cap: the packed runner's prefill rows
+            # are per-token independent, so any full-block prefix can be
+            # skipped bit-identically; the two_program oracle's chunked
+            # prefill is NOT split-invariant, so matches must align to
+            # chunk boundaries and leave >= 1 uncached token (and with
+            # chunking off, any skip would change the whole-prompt call)
+            bs = mgr.block_size
+            if self.runner_name == "packed":
+                max_match, align = len(keys), 1
+            elif self.chunk > 0:
+                align = self.chunk // bs
+                max_match = ((S - 1) // self.chunk) * align
+            else:
+                max_match, align = 0, 1
+            with self.kv.lock:
+                # convergence guard: a preemption replay must wait for
+                # FULL uncached headroom before re-admitting (it still
+                # reuses cached blocks once admitted). Shared-prefix
+                # admission is otherwise so cheap that replays re-enter
+                # immediately, over-commit the pool, and starve decode
+                # growth forever (a 3-way preempt/replay livelock the
+                # uncached path never had).
+                if req.n_preemptions > 0 and not mgr.can_allocate(S + 1):
+                    return None
+                n_hit = min(mgr.match_len(keys), max_match)
+                if n_hit < len(keys):
+                    # follower-dedup: the next block we'd prefill is being
+                    # produced by an in-flight identical prefill — back
+                    # off (FIFO head) until the leader commits, instead of
+                    # recomputing it. The leader is always the scheduler's
+                    # active task or already complete, so no deadlock.
+                    holder = mgr.inflight_holder(keys[n_hit])
+                    if holder is not None and holder != req.req_id:
+                        self.stats.bump("prefix_inflight_waits")
+                        return None
+                res = mgr.allocate_prefix(req.req_id, keys, S + 1,
+                                          max_match_blocks=max_match,
+                                          align_blocks=align)
+                if res is None:
+                    return None
+                _, matched = res
+                mgr.register_inflight(req.req_id, keys[matched:])
+                self.stats.peak(mgr.used_blocks * self.kv.block_bytes)
+            n_cached = matched * bs
+            if n_cached:
+                self.stats.bump("prefix_cache_hits")
+                self.stats.bump("prefix_tokens_reused", n_cached)
         toks = jnp.asarray(req.prompt)[None]
         mm_t = (jnp.asarray(mm_tokens)[None]
                 if mm_tokens is not None else None)
@@ -381,12 +515,22 @@ class PagedPrefillStage:
         # prompt on the host, so mm-token merging never retraces per chunk
         x = np.asarray(dense.embed_inputs(self.params, self.cfg, toks,
                                           mm_t, mm_p)[0])
-        return PrefillProgress(req=req, x=x, mm_tokens=mm_tokens)
+        return PrefillProgress(req=req, x=x, mm_tokens=mm_tokens,
+                               n_done=n_cached, keys=keys)
 
     def abandon(self, task: PrefillProgress) -> None:
         """Release a started task's blocks (failure / shutdown)."""
         with self.kv.lock:
             self.kv.mgr.free(task.req.req_id)
+
+    def commit_cache(self, task: PrefillProgress) -> None:
+        """Prefill complete: publish the prompt's full blocks into the
+        prefix index (and release the in-flight claim) so later requests
+        — and waiting followers — can share them."""
+        if not self.prefix_enabled or task.keys is None:
+            return
+        with self.kv.lock:
+            self.kv.mgr.commit(task.req.req_id, task.keys)
 
     # --------------------------------------------------------------- chunks
     def run_chunk(self, task: PrefillProgress) -> bool:
@@ -394,6 +538,10 @@ class PagedPrefillStage:
         (first token sampled + emitted, task ready for ψ_PD)."""
         req = task.req
         S = task.total
+        if task.done:
+            # fully-cached admission: nothing to prefill — the first
+            # token is sampled by the decode stage's pending-x row
+            return True
         if self.chunk <= 0 or (task.n_done == 0 and S <= self.chunk):
             return self._run_whole(task)
         t0 = task.n_done
@@ -593,6 +741,12 @@ class PagedJitKit:
             lambda kp, vp, k, v, ids: (kp.at[:, ids].set(k),
                                        vp.at[:, ids].set(v)),
             donate_argnums=() if on_cpu else (0, 1))
+        # copy-on-write block copy (PagedKVState.ensure_private): one
+        # fixed-shape trace serves every (src, dst) pair
+        self.pool_copy = jax.jit(
+            lambda kp, vp, src, dst: (kp.at[:, dst].set(kp[:, src]),
+                                      vp.at[:, dst].set(vp[:, src])),
+            donate_argnums=() if on_cpu else (0, 1))
 
     def packed_shapes_compiled(self) -> int:
         """Distinct compiled shapes of the packed program (the compile
@@ -619,6 +773,10 @@ class PagedDecodeStage:
         self.on_requeue = on_requeue
         n = ecfg.decode_batch
         self._slots: list[Optional[dict]] = [None] * n
+        # fully-cached admissions (prefix cache): the embedded last prompt
+        # token, pending a one-shot packed prefill row that recomputes the
+        # final position's logits to sample the first token
+        self._x_pending: list[Optional[np.ndarray]] = [None] * n
         self._tokens = np.zeros((n,), np.int32)
         self._positions = np.zeros((n,), np.int32)
         self._tables = np.full((n, kv.max_blocks), kv.trash, np.int32)
@@ -640,11 +798,33 @@ class PagedDecodeStage:
             except queue.Empty:
                 break
             req = handoff.req
+            if handoff.first_tok is None:
+                # fully-cached prompt: no prefill ran, so no first token
+                # yet. The next packed step recomputes the last prompt
+                # position from the embedded x (pending-x row) to sample
+                # it; that (byte-identical) rewrite lands in the final
+                # prompt block, so take a private copy if it's shared.
+                bs = self.kv.mgr.block_size
+                try:
+                    self.kv.ensure_private(req.req_id,
+                                           (handoff.total - 1) // bs)
+                except OutOfBlocks:
+                    with self.kv.lock:
+                        self.kv.mgr.free(req.req_id)
+                    req.reset_generation()
+                    self.stats.bump("preemptions")
+                    self.on_requeue(req, handoff.mm_tokens)
+                    continue
+                self._x_pending[i] = np.asarray(handoff.x_last)
+                self._tokens[i] = 0
+                self._positions[i] = handoff.total - 1
+            else:
+                self._x_pending[i] = None
+                self._tokens[i] = handoff.first_tok
+                self._positions[i] = handoff.total
             with self.kv.lock:
                 blocks = self.kv.mgr.owner_blocks(req.req_id)
             self._slots[i] = {"req": req, "mm_tokens": handoff.mm_tokens}
-            self._tokens[i] = handoff.first_tok
-            self._positions[i] = handoff.total
             self._tables[i, :] = self.kv.trash
             self._tables[i, :len(blocks)] = blocks
             self._temps[i] = req.sampling.temperature
@@ -661,8 +841,11 @@ class PagedDecodeStage:
                 with self.kv.lock:
                     self.kv.mgr.free(req.req_id)
                 self._slots[i] = None
+                self._x_pending[i] = None
                 self._tables[i, :] = self.kv.trash
-            elif req.done_generating:       # length budget or stop token
+            elif req.done_generating and self._x_pending[i] is None:
+                # length budget or stop token (a pending-x slot hasn't
+                # sampled its first token yet, so it never retires here)
                 with self.kv.lock:
                     self.kv.mgr.free(req.req_id)
                 self.on_finish(req)
@@ -679,6 +862,7 @@ class PagedDecodeStage:
         req.reset_generation()
         self.stats.bump("preemptions")
         self._slots[i] = None
+        self._x_pending[i] = None
         self._tables[i, :] = self.kv.trash
         self.on_requeue(req, s["mm_tokens"])
 
@@ -692,6 +876,7 @@ class PagedDecodeStage:
                 self.kv.mgr.free(s["req"].req_id)
             on_fail(s["req"])
             self._slots[i] = None
+            self._x_pending[i] = None
             self._tables[i, :] = self.kv.trash
 
     @property
@@ -740,6 +925,11 @@ class PagedDecodeStage:
         """One scheduler iteration; returns the number of slots stepped
         (0 = idle, falsy for the engine's idle-sleep check)."""
         active = self._prepare(psi_pd)
+        if any(x is not None for x in self._x_pending):
+            # fully-cached admissions only arise under the packed runner
+            # (the two_program oracle always prefills >= 1 suffix token)
+            raise RuntimeError(
+                "pending-x slot reached the two_program decode step")
         if not active.any():
             return 0
 

@@ -43,12 +43,22 @@ class PrefillProgress:
     the decode stage — the KV never moves, only this reference does.
     ``x`` is the pre-embedded prompt (mm tokens merged at embed time) so
     each chunk is a plain slice; ``mm_tokens`` rides along for the
-    preemption requeue path."""
+    preemption requeue path. With prefix caching, ``keys`` carries the
+    prompt's hash-chained block keys (committed to the index when the
+    prefill completes) and ``n_done`` may start > 0 (cached prefix); a
+    FULLY cached prompt arrives at decode with ``first_tok is None`` —
+    the first decode step recomputes the last prompt position from
+    ``x_last`` to sample it."""
     req: Any
     x: np.ndarray                        # (S, d) embedded prompt inputs
     mm_tokens: Optional[np.ndarray]
     n_done: int = 0                      # prompt tokens already in the pool
     first_tok: Optional[int] = None      # sampled on the final chunk
+    keys: Optional[list] = None          # prefix-cache block keys
+
+    @property
+    def x_last(self) -> np.ndarray:
+        return self.x[-1]
 
     @property
     def total(self) -> int:
@@ -68,11 +78,14 @@ class MigratedPrefill:
     ``first_tok`` / ``total`` / ``mm_tokens`` surface); ``k_blocks`` /
     ``v_blocks`` are dropped after injection to release the copy."""
     req: Any
-    first_tok: int
+    first_tok: Optional[int]
     total: int                           # prompt tokens already prefetched
     mm_tokens: Optional[np.ndarray]
     k_blocks: Optional[np.ndarray]       # (L, nb, bs, K, hd)
     v_blocks: Optional[np.ndarray]
+    keys: Optional[list] = None          # prefix-cache block keys (re-pin)
+    x_last: Optional[np.ndarray] = None  # embedded last prompt token
+    #                                      (fully-cached handoff only)
 
 
 class MMTokenCache:

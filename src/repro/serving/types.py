@@ -124,6 +124,13 @@ class EngineConfig:
     # kept as the parity oracle.
     attn_backend: Optional[str] = None
     runner: str = "packed"
+    # block-level KV prefix caching (paged mode): hash-chained block keys
+    # over the prompt (mm-content salt folded into the chain root so it
+    # composes with the ψ_EP cache), per-block refcounts, LRU eviction of
+    # unreferenced cached blocks, copy-on-write on divergence. Off-path
+    # is byte-identical to today; greedy streams are bit-identical with
+    # the cache on vs off on every topology.
+    prefix_cache: bool = False
 
 
 @dataclass

@@ -75,3 +75,139 @@ def test_blocks_for_ceiling(tokens, bs):
     bm = BlockManager(n_blocks=1, block_size=bs)
     n = bm.blocks_for(tokens)
     assert (n - 1) * bs < tokens <= n * bs
+
+
+# ======================================================= prefix caching
+import numpy as np
+
+
+def _pc(n_blocks=8, bs=4, **kw):
+    return KVBlockManager(n_blocks=n_blocks, block_size=bs,
+                          prefix_cache=True, **kw)
+
+
+def test_chain_keys_full_blocks_only_and_salt():
+    bm = _pc()
+    toks = np.arange(10, dtype=np.int32)         # 2 full blocks + tail
+    keys = bm.chain_keys(toks)
+    assert len(keys) == 2
+    # chained: a change in block 0 changes block 1's key
+    other = toks.copy()
+    other[0] += 1
+    assert bm.chain_keys(other)[1] != keys[1]
+    # shared prefix, different tail -> same leading key
+    assert bm.chain_keys(toks[:8])[0] == keys[0]
+    # the mm salt re-roots the whole chain
+    assert bm.chain_keys(toks, salt="img")[0] != keys[0]
+
+
+def test_commit_match_and_shared_refcount():
+    bm = _pc()
+    toks = np.arange(8, dtype=np.int32)
+    keys = bm.chain_keys(toks)
+    t1 = bm.allocate(1, 9)                       # 3 blocks (8 tok + 1)
+    assert bm.commit(1, keys) == 2
+    res = bm.allocate_prefix(2, keys, 9)
+    assert res is not None
+    t2, matched = res
+    assert matched == 2 and t2[:2] == t1[:2]     # shared blocks
+    assert t2[2] != t1[2]                        # private tail
+    assert bm.ref_count(t1[0]) == 2
+    # freeing ONE owner never reclaims the shared block
+    assert bm.free(1) == 3
+    assert bm.ref_count(t2[0]) == 1
+    assert bm.owner_blocks(2) == t2
+    bm.free(2)
+    # now unreferenced but still indexed: counts free, still matchable
+    assert bm.free_blocks == bm.n_blocks
+    assert bm.match_len(keys) == 2
+
+
+def test_lru_eviction_only_unreferenced_and_on_pressure():
+    bm = _pc(n_blocks=4, bs=4)
+    a = np.arange(8, dtype=np.int32)
+    ka = bm.chain_keys(a)
+    bm.allocate(1, 8)                            # 2 blocks
+    bm.commit(1, ka)
+    b = np.arange(100, 108, dtype=np.int32)
+    kb = bm.chain_keys(b)
+    bm.allocate(2, 8)
+    bm.commit(2, kb)
+    bm.free(1)                                   # a's blocks -> LRU
+    assert bm.prefix_evictions == 0
+    # demand forces eviction of a's (unreferenced) blocks, never b's
+    bm.allocate(3, 8)
+    assert bm.prefix_evictions == 2
+    assert bm.match_len(ka) == 0                 # evicted from the index
+    assert bm.match_len(kb) == 2                 # still live-referenced
+    with pytest.raises(OutOfBlocks):             # b is referenced: stuck
+        bm.allocate(4, 4)
+
+
+def test_cow_only_when_shared():
+    bm = _pc()
+    toks = np.arange(8, dtype=np.int32)
+    keys = bm.chain_keys(toks)
+    t1 = bm.allocate(1, 9)
+    bm.commit(1, keys)
+    t2, _ = bm.allocate_prefix(2, keys, 9)
+    src = t2[1]
+    res = bm.cow(2, 1)
+    assert res is not None and res[0] == src
+    assert bm.owner_blocks(2)[1] == res[1] != src
+    assert bm.ref_count(src) == 1                # only req 1 now
+    assert bm.cow_copies == 1
+    # a private block needs no copy
+    assert bm.cow(2, 1) is None
+    assert bm.owner_blocks(1) == t1
+
+
+def test_allocate_prefix_undoes_pins_on_failure():
+    bm = _pc(n_blocks=4, bs=4)
+    toks = np.arange(8, dtype=np.int32)
+    keys = bm.chain_keys(toks)
+    bm.allocate(1, 8)
+    bm.commit(1, keys)
+    # suffix needs 2 fresh blocks but only 2 exist and both are pinned
+    bm.allocate(2, 8)
+    assert bm.allocate_prefix(3, keys, 16) is None
+    assert bm.ref_count(bm.owner_blocks(1)[0]) == 1   # pins rolled back
+    assert bm.owner_blocks(3) == []
+
+
+def test_match_caps_and_alignment():
+    bm = _pc(n_blocks=16, bs=4)
+    toks = np.arange(16, dtype=np.int32)
+    keys = bm.chain_keys(toks)
+    bm.allocate(1, 17)
+    bm.commit(1, keys)
+    _, matched = bm.allocate_prefix(2, keys, 17, max_match_blocks=3,
+                                    align_blocks=2)
+    assert matched == 2                          # capped 3, aligned down
+    _, matched0 = bm.allocate_prefix(3, keys, 17, max_match_blocks=0)
+    assert matched0 == 0
+
+
+def test_inflight_claims_cleared_on_free_and_commit():
+    bm = _pc()
+    toks = np.arange(8, dtype=np.int32)
+    keys = bm.chain_keys(toks)
+    bm.allocate(1, 9)
+    bm.register_inflight(1, keys)
+    assert bm.inflight_holder(keys[0]) == 1
+    # an aborted leader releases its claim
+    bm.free(1)
+    assert bm.inflight_holder(keys[0]) is None
+    bm.allocate(2, 9)
+    bm.register_inflight(2, keys)
+    bm.commit(2, keys)
+    assert bm.inflight_holder(keys[0]) is None
+    assert bm.match_len(keys) == 2
+
+
+def test_off_path_matches_base_semantics():
+    base = KVBlockManager(n_blocks=8, block_size=4)
+    assert base.prefix_cache is False
+    b = base.allocate(1, 9)
+    assert len(b) == 3 and base.free(1) == 3
+    assert base.free_blocks == 8

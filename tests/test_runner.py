@@ -271,6 +271,7 @@ def test_bucketed_shapes_never_recompile_mid_run(text_setup):
                         runner="packed")
     eng = EPDEngine(cfg, params, ecfg)
     n_buckets = len(eng.decode_stage.buckets)
+    n_widths = len(eng.decode_stage.table_buckets)
 
     def wave(base):
         for i, p in enumerate(_prompts(cfg, (12, 60, 33, 90), seed=8)):
@@ -283,10 +284,48 @@ def test_bucketed_shapes_never_recompile_mid_run(text_setup):
     try:
         wave(1)
         warm = eng.stats["packed_compiles"]
-        assert 0 < warm <= n_buckets + 1   # +1: the chunkless decode shape
+        # shapes are (token bucket, table-width bucket) pairs now; +1 is
+        # the chunkless decode token shape
+        assert 0 < warm <= (n_buckets + 1) * n_widths
         wave(100)
         assert eng.stats["packed_compiles"] == warm
         assert eng.stats["packed_steps"] > 0
+    finally:
+        eng.stop()
+
+
+def test_packed_table_width_buckets_no_recompile(text_setup):
+    """Block-table width bucketing: short sequences run with a narrow
+    table (not ``max_blocks``), widths come from the static ladder, and a
+    second identical wave adds ZERO compiled shapes — widths can never
+    drive a mid-run recompile."""
+    cfg, params = text_setup
+    ecfg = EngineConfig(decode_batch=2, kv_blocks=64, max_seq_len=256,
+                        prefill_chunk=16, runner="packed")
+    eng = EPDEngine(cfg, params, ecfg)
+    runner = eng.decode_stage
+    max_blocks = eng._kv.max_blocks
+
+    def wave(base):
+        for i, p in enumerate(_prompts(cfg, (12, 150, 40), seed=9)):
+            eng.submit(ServeRequest(req_id=base + i, prompt=p.copy(),
+                                    max_new_tokens=4))
+        for i in range(3):
+            eng.result(base + i, timeout=300)
+
+    eng.start()
+    try:
+        wave(1)
+        widths = set(runner.table_widths_used)
+        assert widths, "no packed step ran"
+        assert all(w in runner.table_buckets for w in widths)
+        # the short-prompt iterations must NOT have paid full width
+        assert min(widths) < max_blocks
+        assert eng.stats["packed_table_widths"] == len(widths)
+        warm = eng.stats["packed_compiles"]
+        wave(100)
+        assert runner.table_widths_used == widths
+        assert eng.stats["packed_compiles"] == warm
     finally:
         eng.stop()
 
