@@ -1,6 +1,26 @@
 """Figure 5 + Figure 11: SLO attainment vs request rate, 3 LMMs x
-{2,4,6,8} images/request, EPD vs DistServe vs vLLM."""
+{2,4,6,8} images/request, EPD vs DistServe vs vLLM.
+
+``--gateway`` switches from the analytic simulator to LIVE serving: it
+boots the real reduced engine behind the HTTP gateway and drives
+sustained-QPS open-loop traffic (Poisson arrivals fired on schedule
+whether or not earlier requests finished — the honest load model; a
+closed loop self-throttles and hides queueing collapse). Each client
+streams over SSE and measures TTFT/TPOT at the HTTP boundary, so the
+attainment rows include gateway + scheduling + network overhead, not
+just engine internals."""
 from __future__ import annotations
+
+import sys
+
+if __package__ in (None, ""):
+    # running as a script (python benchmarks/slo_attainment.py): put the
+    # repo root and src/ on sys.path so `benchmarks.common` and `repro`
+    # resolve without an external PYTHONPATH
+    import os
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
 
 from repro.configs import get_config
 from repro.core import A100_80G, SLO
@@ -38,3 +58,151 @@ def run(quick: bool = False) -> list[Row]:
                         us, round(s.slo_attainment, 3),
                         {"ttft_mean": s.ttft_mean, "tpot_mean": s.tpot_mean}))
     return rows
+
+
+# ------------------------------------------------- live gateway traffic
+# SLO limits for the REDUCED model on CPU (the paper's Table 9 limits
+# assume A100-class hardware); generous enough that an unloaded engine
+# passes easily and a saturated one visibly does not.
+GW_TTFT_LIMIT = 2.0      # seconds
+GW_TPOT_LIMIT = 0.25     # seconds/token
+
+
+def _drive_open_loop(gw, qps: float, n_req: int, max_tokens: int,
+                     seed: int) -> list[dict]:
+    """Fire ``n_req`` Poisson arrivals at ``qps`` against the gateway;
+    each client streams over SSE and records HTTP-boundary timings."""
+    import http.client
+    import json
+    import threading
+    import time
+
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / qps, n_req)
+    results: list[dict] = [None] * n_req
+    threads = []
+
+    def client(i: int) -> None:
+        t0 = time.perf_counter()
+        rec = {"ok": False, "ttft": float("inf"), "tpot": float("inf"),
+               "tokens": 0}
+        try:
+            c = http.client.HTTPConnection(gw.host, gw.port, timeout=300)
+            c.request("POST", "/v1/chat/completions", body=json.dumps({
+                "messages": [{"role": "user",
+                              "content": f"open loop request {i}"}],
+                "max_tokens": max_tokens, "stream": True}))
+            r = c.getresponse()
+            if r.status != 200:
+                r.read()
+                c.close()
+                results[i] = rec
+                return
+            t_first = t_last = None
+            buf = b""
+            while True:
+                chunk = r.read(64)
+                if not chunk:
+                    break
+                buf += chunk
+                while b"\n\n" in buf:
+                    event, buf = buf.split(b"\n\n", 1)
+                    data = event[len(b"data: "):]
+                    if data == b"[DONE]" or not data:
+                        continue
+                    delta = json.loads(data)["choices"][0]["delta"]
+                    if "content" in delta:
+                        t_last = time.perf_counter()
+                        if t_first is None:
+                            t_first = t_last
+                        rec["tokens"] += 1
+            c.close()
+            if t_first is not None:
+                rec["ok"] = True
+                rec["ttft"] = t_first - t0
+                rec["tpot"] = ((t_last - t_first) / (rec["tokens"] - 1)
+                               if rec["tokens"] > 1 else 0.0)
+        except Exception:                                 # noqa: BLE001
+            pass
+        results[i] = rec
+
+    for i in range(n_req):
+        time.sleep(gaps[i])           # open loop: schedule is the clock
+        t = threading.Thread(target=client, args=(i,), daemon=True)
+        t.start()
+        threads.append(t)
+    for t in threads:
+        t.join(timeout=300)
+    return [r for r in results if r is not None]
+
+
+def run_gateway(quick: bool = False) -> list[Row]:
+    import jax
+    import numpy as np
+
+    from repro.models import build_model
+    from repro.serving import EPDEngine, EngineConfig, GatewayServer
+
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=8, kv_blocks=256))
+    eng.start()
+    gw = GatewayServer(eng, max_concurrent=16, max_queue=64).start()
+    rows: list[Row] = []
+    try:
+        # one warmup completion so jit compiles don't land in row 1's TTFT
+        _drive_open_loop(gw, qps=4.0, n_req=2, max_tokens=4, seed=0)
+        rates = (2.0, 4.0) if quick else (2.0, 4.0, 8.0)
+        n_req = 12 if quick else 40
+        max_tokens = 8 if quick else 16
+        for qps in rates:
+            recs, us = timed(_drive_open_loop, gw, qps, n_req, max_tokens,
+                             seed=int(qps * 10))
+            ok = [r for r in recs if r["ok"]]
+            met = [r for r in ok if r["ttft"] <= GW_TTFT_LIMIT
+                   and r["tpot"] <= GW_TPOT_LIMIT]
+            attainment = len(met) / max(len(recs), 1)
+            ttfts = sorted(r["ttft"] for r in ok) or [float("inf")]
+            tpots = [r["tpot"] for r in ok]
+            rows.append(Row(
+                f"gateway/qps{qps:g}", us, round(attainment, 3),
+                {"n": len(recs), "completed": len(ok),
+                 "ttft_p50": round(float(np.percentile(ttfts, 50)), 4),
+                 "ttft_p95": round(float(np.percentile(ttfts, 95)), 4),
+                 "tpot_mean": round(float(np.mean(tpots)), 4) if tpots
+                 else None,
+                 "ttft_limit": GW_TTFT_LIMIT, "tpot_limit": GW_TPOT_LIMIT}))
+    finally:
+        gw.stop()
+        eng.stop()
+    return rows
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--gateway", action="store_true",
+                    help="drive live open-loop HTTP traffic through the "
+                         "serving gateway instead of the simulator")
+    args = ap.parse_args()
+    rows = run_gateway(args.quick) if args.gateway else run(args.quick)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(f"{row.csv()},{row.extra}")
+    if args.gateway:
+        # a quick gateway run is a smoke gate: every request must at
+        # least complete; attainment itself is the reported metric
+        incomplete = [r for r in rows if r.extra["completed"] < r.extra["n"]]
+        if incomplete:
+            print(f"FAIL: {len(incomplete)} rate points had incomplete "
+                  f"requests", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

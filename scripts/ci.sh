@@ -34,6 +34,10 @@ if [ "$TIER" = "fast" ]; then
     python -m pytest -q \
         "tests/test_prefix_cache.py::test_fully_cached_prefix_runs_zero_prefill_rows" \
         || exit $?
+    echo "== fast tier: HTTP gateway smoke (ephemeral port: unary + SSE + 400) =="
+    python -m pytest -q \
+        "tests/test_gateway.py::test_gateway_smoke" \
+        || exit $?
     echo "== fast tier: pallas-backend engine smoke (interpret) =="
     REPRO_ATTN_BACKEND=pallas python -m pytest -q \
         "tests/test_runner.py::test_env_backend_engine_smoke"
@@ -76,6 +80,12 @@ python benchmarks/role_switch.py --quick || exit 1
 
 echo "== smoke: kernel micro-bench (kernel-vs-ref + packed-runner rows) =="
 python benchmarks/kernel_bench.py --quick || exit 1
+
+echo "== smoke: live-gateway SLO attainment (open-loop HTTP traffic) =="
+# sustained-QPS Poisson arrivals against the real engine behind the HTTP
+# gateway; every request must complete, TTFT/TPOT measured at the HTTP
+# boundary
+timeout 600 python benchmarks/slo_attainment.py --gateway --quick || exit 1
 
 echo "CI done (tier-1 exit: $tier1)"
 exit "$tier1"

@@ -1,15 +1,18 @@
 from repro.serving.cluster import ClusterEngine, InstanceWorker
 from repro.serving.engine import EngineBase, EPDEngine
+from repro.serving.gateway import GatewayServer
+from repro.serving.lb import Backend, LBTicket, LoadBalancer
 from repro.serving.runner import ChunkWork, ModelRunner
 from repro.serving.scheduler import Scheduler
 from repro.serving.transfer import (MigratedPrefill, MMTokenCache,
                                     PrefillProgress, PsiEP, PsiPD)
 from repro.serving.types import (ClusterConfig, EngineConfig, FinishReason,
-                                 RequestHandle, RequestState, SamplingParams,
-                                 ServeRequest)
+                                 RequestHandle, RequestState, RequestTimeout,
+                                 SamplingParams, ServeRequest)
 
 __all__ = ["EPDEngine", "EngineBase", "ClusterEngine", "InstanceWorker",
            "EngineConfig", "ClusterConfig", "ServeRequest", "SamplingParams",
-           "RequestState", "FinishReason", "RequestHandle", "MMTokenCache",
-           "PsiEP", "PsiPD", "PrefillProgress", "MigratedPrefill",
-           "Scheduler", "ModelRunner", "ChunkWork"]
+           "RequestState", "FinishReason", "RequestHandle", "RequestTimeout",
+           "MMTokenCache", "PsiEP", "PsiPD", "PrefillProgress",
+           "MigratedPrefill", "Scheduler", "ModelRunner", "ChunkWork",
+           "GatewayServer", "LoadBalancer", "LBTicket", "Backend"]

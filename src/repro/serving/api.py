@@ -26,8 +26,8 @@ from repro.core.request import Request, SLO
 from repro.serving.types import APIError, SamplingParams, ServeRequest
 
 __all__ = ["APIError", "CompletionParams", "parse_chat_request",
-           "chat_completion", "build_chat_response", "to_sim_request",
-           "sim_request_of"]
+           "chat_completion", "build_chat_response", "build_chat_chunk",
+           "IncrementalDetokenizer", "to_sim_request", "sim_request_of"]
 
 
 @dataclass
@@ -166,6 +166,44 @@ def build_chat_response(cfg: ArchConfig, req: ServeRequest) -> dict:
                     "tpot": req.tpot,
                     "n_preemptions": req.n_preemptions,
                     "mm_cache_hit": req.mm_cache_hit},
+    }
+
+
+class IncrementalDetokenizer:
+    """Token → text deltas for streaming responses.
+
+    Concatenating every ``feed()`` return value yields byte-identical
+    text to ``build_chat_response``'s ``content`` field
+    (``" ".join(str(t) for t in tokens)``), so a client assembling SSE
+    deltas reconstructs exactly the non-streaming response. A real
+    tokenizer would need the usual held-back-byte machinery (partial
+    UTF-8 sequences); the toy token-id rendering keeps the seam without
+    it."""
+
+    def __init__(self):
+        self._n = 0
+
+    def feed(self, tok: int) -> str:
+        piece = str(int(tok)) if self._n == 0 else " " + str(int(tok))
+        self._n += 1
+        return piece
+
+
+def build_chat_chunk(cfg: ArchConfig, req: ServeRequest,
+                     delta: Optional[str] = None, *, role: bool = False,
+                     finish_reason: Optional[str] = None) -> dict:
+    """OpenAI-shaped chat.completion.chunk for one SSE event."""
+    d: dict[str, Any] = {}
+    if role:
+        d["role"] = "assistant"
+    if delta is not None:
+        d["content"] = delta
+    return {
+        "id": f"chatcmpl-{req.req_id}",
+        "object": "chat.completion.chunk",
+        "model": cfg.name,
+        "choices": [{"index": 0, "delta": d,
+                     "finish_reason": finish_reason}],
     }
 
 

@@ -670,3 +670,16 @@ class ClusterEngine(EngineBase):
     def current_roles(self) -> list[str]:
         """Live role of every instance (changes as the monitor re-roles)."""
         return [i.role for i in self.instances]
+
+    def queue_depth(self) -> int:
+        return int(sum(i.load() for i in self.instances))
+
+    def kv_block_counts(self) -> tuple[int, int]:
+        free = total = 0
+        for inst in self.instances:
+            kv = inst.kv
+            if kv is not None:
+                with kv.lock:
+                    free += kv.mgr.free_blocks
+                total += self.ecfg.kv_blocks
+        return (free, total)

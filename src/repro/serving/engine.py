@@ -55,11 +55,12 @@ from repro.serving.stages import (PAGED_FAMILIES, DenseDecodeStage,
 from repro.serving.transfer import (MMTokenCache, PsiEP, PsiPD,
                                     drain_queue)
 from repro.serving.types import (EngineConfig, FinishReason, RequestHandle,
-                                 RequestState, SamplingParams, ServeRequest)
+                                 RequestState, RequestTimeout, SamplingParams,
+                                 ServeRequest)
 
 __all__ = ["EngineBase", "EPDEngine", "EngineConfig", "ServeRequest",
            "SamplingParams", "RequestState", "FinishReason", "RequestHandle",
-           "MMTokenCache", "PAGED_FAMILIES"]
+           "RequestTimeout", "MMTokenCache", "PAGED_FAMILIES"]
 
 
 class EngineBase:
@@ -98,6 +99,10 @@ class EngineBase:
         # in-flight encode dedup: content key -> requests waiting for the
         # first submitter's merged tokens (anti-stampede)
         self._mm_inflight: dict[str, list[ServeRequest]] = {}
+        # req_id -> content key for requests currently LEADING an
+        # in-flight encode; an aborted leader must promote a waiter (see
+        # ``abort``) or its waiters would strand forever
+        self._mm_leading: dict[int, str] = {}
         self._mm_lock = threading.Lock()
         self._done: dict[int, ServeRequest] = {}
         self._done_cv = threading.Condition()
@@ -191,6 +196,7 @@ class EngineBase:
                     self._stats.bump("mm_inflight_hits")
                     return handle
                 self._mm_inflight[key] = []
+                self._mm_leading[req.req_id] = key
         req.advance(RequestState.ENCODING)
         self._dispatch_encode(req, key)
         return handle
@@ -219,7 +225,7 @@ class EngineBase:
             while not req.finished:
                 remaining = deadline - time.time()
                 if remaining <= 0:
-                    raise TimeoutError(f"request {req.req_id}")
+                    raise RequestTimeout(req.req_id, timeout)
                 self._done_cv.wait(remaining)
             self._done.pop(req.req_id, None)   # collection point: no leak
             self._handles.pop(req.req_id, None)
@@ -230,6 +236,13 @@ class EngineBase:
         with self._done_cv:
             self._done.pop(req_id, None)
             self._handles.pop(req_id, None)
+
+    def collect(self, req_id: int) -> None:
+        """Public collection point for callers that consumed a request
+        through side channels (the gateway after an abort, the LB after
+        a response is written) — ``result()`` collects implicitly, this
+        covers the paths that never call it."""
+        self._collect(req_id)
 
     def stream(self, req_id: int, timeout: float = 300.0) -> Iterator[int]:
         """Incremental token iterator for an in-flight request.
@@ -251,7 +264,7 @@ class EngineBase:
                 while len(req.tokens) <= i and not req.finished:
                     remaining = deadline - time.time()
                     if remaining <= 0:
-                        raise TimeoutError(f"stream {req.req_id}")
+                        raise RequestTimeout(req.req_id, timeout)
                     req._cv.wait(min(remaining, 0.1))
                 if len(req.tokens) > i:
                     tok = req.tokens[i]
@@ -283,7 +296,8 @@ class EngineBase:
             self._done[req.req_id] = req
             self._done_cv.notify_all()
 
-    def _fail(self, req: ServeRequest, error: str) -> None:
+    def _fail(self, req: ServeRequest, error: str, *,
+              release: bool = True) -> None:
         req.t_done = time.perf_counter()
         with self._done_cv:
             claimed = req.mark_failed(error)
@@ -292,37 +306,131 @@ class EngineBase:
                 self._done_cv.notify_all()
         if not claimed:
             return    # a concurrent failer (sibling IRP shard) beat us
-        self._release_blocks(req)
+        if release:
+            self._release_blocks(req)
+
+    # --------------------------------------------------------------- abort
+    def abort(self, req_id: int,
+              reason: str = "aborted by client") -> bool:
+        """Cancel a non-terminal request (client disconnect / explicit
+        cancel). Transitions it to FAILED(``reason``), wakes concurrent
+        ``result()``/``stream()`` waiters, drops its ψ_EP shard assembly,
+        and releases its KV blocks. Returns True if this call claimed the
+        cancellation, False if the request was unknown or already
+        terminal.
+
+        Block release is DEFERRED to the stage sweeps while the engine is
+        running — the scheduler/runner may hold the request's block table
+        inside an in-flight iteration, so freeing from this (external)
+        thread could reallocate blocks under a live forward. Every stage
+        already sweeps FAILED requests on its own thread: the admission
+        queue skips them, the scheduler abandons an in-flight prefill
+        task, and the decode stage retires finished slots — each sweep
+        frees the blocks. Only when no worker threads are alive is the
+        free performed directly here."""
+        handle = self._handles.get(req_id)
+        if handle is None:
+            return False
+        req = handle.req
+        with self._done_cv:
+            if req.finished:
+                return False
+        self._fail(req, reason, release=not self._running())
+        self.psi_ep.drop(req_id)
+        self._promote_mm_leader(req)
+        self._stats.bump("aborts")
+        return True
+
+    def _promote_mm_leader(self, req: ServeRequest) -> None:
+        """If ``req`` was leading an in-flight encode with waiters parked
+        behind it, hand leadership to the first live waiter and re-run
+        its encode — the aborted leader's remaining shards tombstone in
+        ψ_EP (``add_shard`` sees the FAILED state), so without promotion
+        the waiters would never receive merged tokens. Aborted waiters
+        are simply removed from whatever list they sit in."""
+        with self._mm_lock:
+            for ws in self._mm_inflight.values():
+                if req in ws:
+                    ws.remove(req)
+            key = self._mm_leading.pop(req.req_id, None)
+            new_leader = None
+            if key is not None and key in self._mm_inflight:
+                waiters = self._mm_inflight.pop(key)
+                while waiters and waiters[0].finished:
+                    waiters.pop(0)
+                if waiters:
+                    new_leader = waiters.pop(0)
+                    self._mm_inflight[key] = waiters
+                    self._mm_leading[new_leader.req_id] = key
+        if new_leader is not None:
+            self._dispatch_encode(new_leader, key)
+
+    # ------------------------------------------------------------- health
+    def _running(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
+
+    def queue_depth(self) -> int:
+        """Queued + resident work items (load-balancer pressure signal)."""
+        return 0
+
+    def kv_block_counts(self) -> tuple[int, int]:
+        """(free, total) KV pool blocks across the engine; (0, 0) when
+        the engine has no paged pool (dense baseline)."""
+        return (0, 0)
+
+    def current_roles(self) -> list[str]:
+        """Stage letters served, one entry per instance."""
+        return ["EPD"]
+
+    def health(self) -> dict[str, Any]:
+        """Liveness + pressure snapshot (gateway /health, LB probes)."""
+        free, total = self.kv_block_counts()
+        return {"ok": self._running(), "roles": self.current_roles(),
+                "queue_depth": self.queue_depth(),
+                "kv_free_blocks": free, "kv_total_blocks": total}
 
     # --------------------------------------------------- encode-side shared
     def _run_encode_shard(self, stage: EncodeStage, req: ServeRequest,
                           sid: int, n: int, idx, key: Optional[str]) -> None:
         """One IRP shard job: encode, assemble, and on the final shard
-        cache + dispatch the merged tokens (identical on every engine)."""
+        cache + dispatch the merged tokens (identical on every engine).
+
+        A finished (aborted) leader's shards skip the encoder — ψ_EP
+        tombstones its assembly anyway, and ``abort`` has already
+        promoted a waiter to re-lead the key. Waiters are delivered
+        BEFORE the leader advances, so a leader aborted between the merge
+        and its own dispatch can never drag its waiters down with it."""
+        if req.finished:
+            return
         try:
             tokens = stage.encode_shard(req, idx)
             merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
-            if merged is None or req.finished:
+            if merged is None:
                 return
             if key is not None:
                 self.mm_cache.put(key, merged)
+            self._deliver_inflight(req, key, merged)
+            if req.finished:
+                return
             req.t_encoded = time.perf_counter()
             req.advance(RequestState.PREFILLING)
             self._dispatch_prefill(req, merged)
-            self._deliver_inflight(key, merged)
         except Exception as e:                      # noqa: BLE001
             self._fail(req, f"encode failed: {e!r}")
             self.psi_ep.drop(req.req_id)
             # byte-identical waiters would fail identically
-            self._fail_inflight(key, f"encode failed: {e!r}")
+            self._fail_inflight(req, key, f"encode failed: {e!r}")
 
-    def _deliver_inflight(self, key: Optional[str], merged) -> None:
+    def _deliver_inflight(self, leader: Optional[ServeRequest],
+                          key: Optional[str], merged) -> None:
         """Hand the leader's merged mm tokens to every waiter that joined
         the in-flight encode of the same content key."""
         if key is None:
             return
         with self._mm_lock:
             waiters = self._mm_inflight.pop(key, [])
+            if leader is not None:
+                self._mm_leading.pop(leader.req_id, None)
         for w in waiters:
             if w.finished:
                 continue
@@ -331,11 +439,14 @@ class EngineBase:
             w.advance(RequestState.PREFILLING)
             self._dispatch_prefill(w, merged)
 
-    def _fail_inflight(self, key: Optional[str], error: str) -> None:
+    def _fail_inflight(self, leader: Optional[ServeRequest],
+                       key: Optional[str], error: str) -> None:
         if key is None:
             return
         with self._mm_lock:
             waiters = self._mm_inflight.pop(key, [])
+            if leader is not None:
+                self._mm_leading.pop(leader.req_id, None)
         for w in waiters:
             self._fail(w, error)
 
@@ -343,6 +454,7 @@ class EngineBase:
         """Fail every registered-but-unfinished request (shutdown sweep)."""
         with self._mm_lock:
             self._mm_inflight.clear()
+            self._mm_leading.clear()
         for handle in list(self._handles.values()):
             if not handle.req.finished:
                 self._fail(handle.req, error)
@@ -431,6 +543,22 @@ class EPDEngine(EngineBase):
             # release any pool blocks a partial prefill already allocated
             with self._kv.lock:
                 self._kv.mgr.free(req.req_id)
+
+    # ------------------------------------------------------------- health
+    def queue_depth(self) -> int:
+        n = self._eq.qsize() + self.psi_ep.qsize()
+        if self.scheduler is not None:
+            n += (len(self.scheduler.queue)
+                  + int(self.scheduler.task is not None)
+                  + self.psi_pd.qsize()
+                  + self.decode_stage.active_count)
+        return n
+
+    def kv_block_counts(self) -> tuple[int, int]:
+        if not self.paged:
+            return (0, 0)
+        with self._kv.lock:
+            return (self._kv.mgr.free_blocks, self.ecfg.kv_blocks)
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -521,6 +649,9 @@ class EPDEngine(EngineBase):
                 continue
             try:
                 handoff = self.prefill_stage.prefill(req, mm_tokens)
+                if req.finished:      # aborted mid-prefill: drop the cache
+                    self._stats.sub_live(cache_nbytes(handoff[2]))
+                    continue
                 req.advance(RequestState.DECODING)
                 self.psi_pd.send(handoff)
             except Exception as e:                      # noqa: BLE001

@@ -1,0 +1,405 @@
+"""Asyncio HTTP serving gateway (OpenAI-shaped, stdlib-only).
+
+The front door the ROADMAP's production north-star was missing: a real
+HTTP server over the engine API, so SLO attainment is measured against
+live traffic instead of Python calls. Endpoints:
+
+  POST /v1/chat/completions   JSON chat completion; ``"stream": true``
+                              switches to SSE (``data: {chunk}`` events,
+                              ``data: [DONE]`` sentinel)
+  GET  /health                liveness + per-backend pressure snapshot
+  GET  /metrics               ServeStats counters (prefix cache, packed
+                              runner, aborts, ...) + gateway counters
+
+``frontend`` is duck-typed: a single engine (``EPDEngine`` /
+``ClusterEngine``) or a ``serving.lb.LoadBalancer`` fleet — anything
+with ``cfg`` / ``submit`` / ``abort`` / ``stats`` / ``health``.
+
+Three design points carry the load:
+
+  * **Off-thread detokenization**: the asyncio loop never blocks on the
+    engine. Every ``result()`` wait, incremental ``stream()`` iteration,
+    token→text conversion and SSE chunk assembly runs on a small
+    ``ThreadPoolExecutor`` (the detokenizer pool), feeding bytes back to
+    the loop through a queue — many tiny streaming responses cannot
+    stall the packed scheduler loop, which shares no thread with any of
+    this.
+  * **Cancellation plumbing**: a disconnect watcher task notices client
+    EOF mid-response and calls ``frontend.abort`` — the engine-side
+    abort path releases the request's KV blocks and ψ-channel state, so
+    a hung-up client cannot strand pool capacity.
+  * **Bounded admission**: ``max_concurrent`` requests run at once; up
+    to ``max_queue`` more may wait; beyond that the gateway answers 429
+    immediately (overload sheds load at the door, it does not build an
+    unbounded queue).
+
+HTTP status mapping: malformed JSON / schema / parameter errors → 400
+(via ``CompletionParams.validate`` inside ``parse_chat_request``),
+unknown path → 404, bad method → 405, ``RequestTimeout`` → 408,
+admission queue full → 429, server-side request failure → 500.
+"""
+from __future__ import annotations
+
+import asyncio
+import json
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Optional
+
+from repro.serving.api import (APIError, IncrementalDetokenizer,
+                               build_chat_chunk, build_chat_response,
+                               parse_chat_request)
+from repro.serving.types import RequestTimeout
+
+__all__ = ["GatewayServer"]
+
+_STATUS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+           405: "Method Not Allowed", 408: "Request Timeout",
+           429: "Too Many Requests", 500: "Internal Server Error"}
+
+_DISCONNECT = object()        # queue sentinel: client hung up
+
+
+def _json_bytes(obj: Any) -> bytes:
+    return json.dumps(obj, default=str).encode("utf-8")
+
+
+def _response(status: int, body: bytes,
+              content_type: str = "application/json") -> bytes:
+    return (f"HTTP/1.1 {status} {_STATUS[status]}\r\n"
+            f"Content-Type: {content_type}\r\n"
+            f"Content-Length: {len(body)}\r\n"
+            f"Connection: close\r\n\r\n").encode("latin1") + body
+
+
+def _error_body(status: int, message: str) -> bytes:
+    return _json_bytes({"error": {"message": message, "code": status}})
+
+
+def _sse(obj: Any) -> bytes:
+    return b"data: " + _json_bytes(obj) + b"\n\n"
+
+
+class _EngineFailure(RuntimeError):
+    """Request reached FAILED server-side (gateway maps to 500)."""
+
+
+class GatewayServer:
+    """Threaded asyncio HTTP server over a serving frontend.
+
+    ``start()`` spins the event loop up on a dedicated thread and blocks
+    until the listening port is bound (``port=0`` picks an ephemeral
+    port; read ``self.port`` afterwards), so synchronous callers — tests,
+    examples, benchmark drivers — can use plain ``http.client`` against
+    it. ``stop()`` shuts the loop and the detokenizer pool down."""
+
+    def __init__(self, frontend: Any, host: str = "127.0.0.1",
+                 port: int = 0, *, max_concurrent: int = 8,
+                 max_queue: int = 32, detok_workers: Optional[int] = None,
+                 request_timeout: float = 300.0):
+        self.frontend = frontend
+        self.host = host
+        self.port = port
+        self.max_concurrent = max_concurrent
+        self.max_queue = max_queue
+        self.request_timeout = request_timeout
+        # each admitted request holds at most ONE detok-pool job (a unary
+        # result wait or a stream worker), so max_concurrent workers can
+        # never head-of-line block an admitted stream behind another
+        self._pool = ThreadPoolExecutor(
+            max_workers=detok_workers or max_concurrent,
+            thread_name_prefix="detok")
+        self._thread: Optional[threading.Thread] = None
+        self._ready = threading.Event()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._shutdown: Optional[asyncio.Event] = None
+        self._sem: Optional[asyncio.Semaphore] = None
+        self._waiting = 0
+        self.counters = {"requests": 0, "completions": 0, "streams": 0,
+                         "rejected_400": 0, "rejected_429": 0,
+                         "timeouts_408": 0, "disconnects": 0,
+                         "failures_500": 0}
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, timeout: float = 30.0) -> "GatewayServer":
+        self._thread = threading.Thread(target=self._run_loop, daemon=True,
+                                        name="gateway")
+        self._thread.start()
+        if not self._ready.wait(timeout):
+            raise RuntimeError("gateway failed to bind within timeout")
+        return self
+
+    def stop(self) -> None:
+        if self._loop is not None and self._shutdown is not None:
+            self._loop.call_soon_threadsafe(self._shutdown.set)
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self._pool.shutdown(wait=False)
+
+    def _run_loop(self) -> None:
+        asyncio.run(self._main())
+
+    async def _main(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self._shutdown = asyncio.Event()
+        self._sem = asyncio.Semaphore(self.max_concurrent)
+        server = await asyncio.start_server(self._client, self.host,
+                                            self.port)
+        self.port = server.sockets[0].getsockname()[1]
+        self._ready.set()
+        async with server:
+            await self._shutdown.wait()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    # ------------------------------------------------------------- routing
+    async def _client(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter) -> None:
+        try:
+            parsed = await self._read_http(reader)
+            if parsed is None:
+                return
+            method, path, body = parsed
+            self.counters["requests"] += 1
+            if path == "/health" and method == "GET":
+                writer.write(_response(200,
+                                       _json_bytes(self.frontend.health())))
+            elif path == "/metrics" and method == "GET":
+                writer.write(_response(200, _json_bytes(self._metrics())))
+            elif path == "/v1/chat/completions":
+                if method != "POST":
+                    writer.write(_response(
+                        405, _error_body(405, "use POST")))
+                else:
+                    await self._chat(reader, writer, body)
+            else:
+                writer.write(_response(
+                    404, _error_body(404, f"unknown path {path}")))
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError,
+                asyncio.IncompleteReadError):
+            pass
+        except Exception as e:                        # noqa: BLE001
+            try:
+                writer.write(_response(500, _error_body(500, repr(e))))
+                await writer.drain()
+            except Exception:                         # noqa: BLE001
+                pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except Exception:                         # noqa: BLE001
+                pass
+
+    async def _read_http(self, reader: asyncio.StreamReader
+                         ) -> Optional[tuple[str, str, bytes]]:
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin1").split()
+        if len(parts) < 3:
+            return None
+        method, path = parts[0], parts[1]
+        headers: dict[str, str] = {}
+        while True:
+            h = await reader.readline()
+            if h in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = h.decode("latin1").partition(":")
+            headers[k.strip().lower()] = v.strip()
+        n = int(headers.get("content-length", "0") or "0")
+        body = await reader.readexactly(n) if n else b""
+        return method, path, body
+
+    def _metrics(self) -> dict[str, Any]:
+        return {"gateway": dict(self.counters),
+                "admission": {"max_concurrent": self.max_concurrent,
+                              "max_queue": self.max_queue,
+                              "waiting": self._waiting},
+                "engine": self.frontend.stats}
+
+    # ---------------------------------------------------------- completions
+    async def _chat(self, reader: asyncio.StreamReader,
+                    writer: asyncio.StreamWriter, body: bytes) -> None:
+        try:
+            payload = json.loads(body.decode("utf-8"))
+            if not isinstance(payload, dict):
+                raise APIError("payload must be a JSON object")
+        except (ValueError, UnicodeDecodeError) as e:
+            self.counters["rejected_400"] += 1
+            writer.write(_response(400, _error_body(400, f"bad JSON: {e}")))
+            return
+
+        # bounded admission: beyond max_concurrent running and max_queue
+        # waiting, shed load with 429 instead of queueing unboundedly
+        if self._sem.locked() and self._waiting >= self.max_queue:
+            self.counters["rejected_429"] += 1
+            writer.write(_response(
+                429, _error_body(429, "admission queue full")))
+            return
+        self._waiting += 1
+        try:
+            await self._sem.acquire()
+        finally:
+            self._waiting -= 1
+        try:
+            await self._chat_admitted(reader, writer, payload)
+        finally:
+            self._sem.release()
+
+    async def _chat_admitted(self, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter,
+                             payload: dict) -> None:
+        try:
+            req = parse_chat_request(self.frontend.cfg, payload)
+            handle = self.frontend.submit(req)
+        except (APIError, ValueError, TypeError, KeyError) as e:
+            # schema errors (APIError from CompletionParams.validate /
+            # parse) and engine admission errors (capacity) are all the
+            # client's payload's fault
+            self.counters["rejected_400"] += 1
+            writer.write(_response(400, _error_body(400, str(e) or repr(e))))
+            return
+        if payload.get("stream"):
+            await self._stream_response(reader, writer, handle)
+        else:
+            await self._unary_response(reader, writer, handle)
+
+    def _collect(self, req_id: int) -> None:
+        collect = getattr(self.frontend, "collect", None)
+        if collect is not None:
+            collect(req_id)
+
+    # ------------------------------------------------------ unary responses
+    def _result_worker(self, handle: Any) -> dict:
+        """Detok-pool job: block on the engine result and shape the
+        OpenAI response off the event loop."""
+        out = handle.result(timeout=self.request_timeout)
+        if out.error is not None:
+            raise _EngineFailure(out.error)
+        return build_chat_response(self.frontend.cfg, out)
+
+    async def _unary_response(self, reader: asyncio.StreamReader,
+                              writer: asyncio.StreamWriter,
+                              handle: Any) -> None:
+        req_id = handle.req.req_id
+        fut = self._loop.run_in_executor(self._pool, self._result_worker,
+                                         handle)
+        watcher = asyncio.create_task(self._eof(reader))
+        try:
+            done, _ = await asyncio.wait(
+                {fut, watcher}, return_when=asyncio.FIRST_COMPLETED)
+            if fut not in done:
+                # client hung up before the result: abort server-side
+                self.counters["disconnects"] += 1
+                self.frontend.abort(req_id, "client disconnected")
+                await fut     # worker returns promptly (request FAILED)
+                return
+            resp = fut.result()
+            writer.write(_response(200, _json_bytes(resp)))
+            self.counters["completions"] += 1
+        except RequestTimeout:
+            self.counters["timeouts_408"] += 1
+            self.frontend.abort(req_id, "request timed out at the gateway")
+            writer.write(_response(
+                408, _error_body(408, "request timed out")))
+        except _EngineFailure as e:
+            self.counters["failures_500"] += 1
+            writer.write(_response(500, _error_body(500, str(e))))
+        finally:
+            watcher.cancel()
+            self._collect(req_id)
+
+    # -------------------------------------------------------- SSE streaming
+    def _stream_worker(self, handle: Any, q: asyncio.Queue,
+                       cancel: threading.Event) -> None:
+        """Detok-pool job: iterate the engine's token stream, detokenize
+        incrementally, and assemble SSE chunk bytes — all off the event
+        loop AND off the scheduler thread. ``None`` terminates."""
+        req = handle.req
+        cfg = self.frontend.cfg
+        detok = IncrementalDetokenizer()
+
+        def put(item) -> None:
+            try:
+                self._loop.call_soon_threadsafe(q.put_nowait, item)
+            except RuntimeError:      # loop closed mid-shutdown
+                pass
+
+        try:
+            put(_sse(build_chat_chunk(cfg, req, role=True)))
+            for tok in handle.stream(timeout=self.request_timeout):
+                if cancel.is_set():
+                    return
+                put(_sse(build_chat_chunk(cfg, req, detok.feed(tok))))
+            fr = req.finish_reason.value if req.finish_reason else "stop"
+            put(_sse(build_chat_chunk(cfg, req, finish_reason=fr)))
+            put(b"data: [DONE]\n\n")
+        except RequestTimeout:
+            put(_sse({"error": {"message": "request timed out",
+                                "code": 408}}))
+        except RuntimeError as e:
+            if not cancel.is_set():
+                put(_sse({"error": {"message": str(e), "code": 500}}))
+        finally:
+            put(None)
+
+    async def _stream_response(self, reader: asyncio.StreamReader,
+                               writer: asyncio.StreamWriter,
+                               handle: Any) -> None:
+        req_id = handle.req.req_id
+        self.counters["streams"] += 1
+        writer.write(b"HTTP/1.1 200 OK\r\n"
+                     b"Content-Type: text/event-stream\r\n"
+                     b"Cache-Control: no-cache\r\n"
+                     b"Connection: close\r\n\r\n")
+        await writer.drain()
+        q: asyncio.Queue = asyncio.Queue()
+        cancel = threading.Event()
+        fut = self._loop.run_in_executor(self._pool, self._stream_worker,
+                                         handle, q, cancel)
+        watcher = asyncio.create_task(self._eof_to_queue(reader, q))
+        disconnected = False
+        try:
+            while True:
+                item = await q.get()
+                if item is None:
+                    break
+                if item is _DISCONNECT:
+                    disconnected = True
+                    break
+                try:
+                    writer.write(item)
+                    await writer.drain()
+                except (ConnectionResetError, BrokenPipeError, OSError):
+                    disconnected = True
+                    break
+        finally:
+            watcher.cancel()
+            if disconnected:
+                # client hung up mid-stream: abort releases the KV blocks
+                # and ψ-channel state server-side; the worker notices the
+                # cancel flag (or its stream failing) and exits
+                cancel.set()
+                self.counters["disconnects"] += 1
+                self.frontend.abort(req_id, "client disconnected")
+            await fut
+            self._collect(req_id)
+
+    # ------------------------------------------------------------- watchers
+    async def _eof(self, reader: asyncio.StreamReader) -> None:
+        """Resolve when the client closes its end of the connection."""
+        try:
+            while await reader.read(1024):
+                pass
+        except Exception:                             # noqa: BLE001
+            pass
+
+    async def _eof_to_queue(self, reader: asyncio.StreamReader,
+                            q: asyncio.Queue) -> None:
+        await self._eof(reader)
+        q.put_nowait(_DISCONNECT)

@@ -1,0 +1,351 @@
+"""Disaggregation-aware load balancer over N engine backends.
+
+The gateway's front door for multi-engine deployments: register several
+backends (``EPDEngine`` or ``ClusterEngine`` — anything speaking the
+``EngineBase`` surface), health-check them with latency EWMAs, and route
+each request by **role** and **pressure**:
+
+  * role: a multimodal request can only go to a backend with an
+    E-capable instance (``current_roles``) — the modality-aware dispatch
+    ElasticMM (PAPERS.md) builds its elastic groups around;
+  * pressure: among eligible backends, pick the lowest composite score of
+    queue depth, LB-tracked in-flight count, KV pool occupancy
+    (1 - free-block fraction, weighted — a nearly-full pool means
+    imminent preemptions), and the health-probe latency EWMA (a limping
+    backend sheds load before it fails outright).
+
+Failure handling: ``max_failures`` consecutive failed/not-ok health
+probes mark a backend unhealthy; its requests that have not produced any
+token yet (queued / encoding / prefilling — "not-yet-admitted" work) are
+aborted there and **resubmitted** to a healthy backend as pristine
+clones, transparently to the caller — an ``LBTicket``'s ``result()`` /
+``stream()`` follow the request to its new home (zero tokens were
+delivered, so greedy replay is invisible). Requests already decoding are
+aborted and surface as failures (their stream position cannot be
+replayed without token loss guarantees). ``remove_backend`` drains the
+same way.
+
+Everything is stdlib + the existing engine API: the LB itself exposes the
+same duck-typed frontend surface the gateway consumes (``cfg``,
+``submit``, ``abort``, ``stats``, ``health``), so ``GatewayServer`` can
+front one engine or a balanced fleet without caring which.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Iterator, Optional
+
+import numpy as np
+
+from repro.serving.types import RequestTimeout, ServeRequest
+
+__all__ = ["Backend", "LBTicket", "LoadBalancer"]
+
+_FAILOVER_POLL = 0.1          # ticket wait slice while following a failover
+
+
+def clone_request(req: ServeRequest) -> ServeRequest:
+    """Pristine copy for failover resubmission: same req_id (registries
+    are per-engine), same prompt/sampling, fresh lifecycle state."""
+    return ServeRequest(
+        req_id=req.req_id, prompt=req.prompt, mm_embeds=req.mm_embeds,
+        mm_positions=req.mm_positions, max_new_tokens=req.max_new_tokens,
+        sampling=req.sampling)
+
+
+class Backend:
+    """One registered engine + the LB's view of its health and load."""
+
+    def __init__(self, name: str, engine: Any):
+        self.name = name
+        self.engine = engine
+        self.healthy = True
+        self.draining = False         # no new routes; in-flight finishes
+        self.ewma_ms: Optional[float] = None
+        self.consecutive_failures = 0
+        self.probes = 0
+
+    def serves_encode(self) -> bool:
+        return any("E" in r for r in self.engine.current_roles())
+
+    def observe_probe(self, latency_ms: float, ok: bool,
+                      alpha: float) -> None:
+        self.probes += 1
+        self.ewma_ms = (latency_ms if self.ewma_ms is None
+                        else alpha * latency_ms + (1 - alpha) * self.ewma_ms)
+        self.consecutive_failures = 0 if ok else self.consecutive_failures + 1
+
+    def snapshot(self) -> dict[str, Any]:
+        free, total = self.engine.kv_block_counts()
+        return {"name": self.name, "healthy": self.healthy,
+                "draining": self.draining,
+                "queue_depth": self.engine.queue_depth(),
+                "kv_free_blocks": free, "kv_total_blocks": total,
+                "ewma_ms": self.ewma_ms,
+                "roles": self.engine.current_roles()}
+
+
+class LBTicket:
+    """The caller's handle to a balanced request. Mirrors
+    ``RequestHandle.result()/stream()`` but follows the request across a
+    failover resubmission (the underlying engine handle is swapped and a
+    generation counter tells waiters to re-wait on the new one)."""
+
+    def __init__(self, lb: "LoadBalancer", backend: Backend, handle: Any):
+        self.lb = lb
+        self.backend = backend
+        self.handle = handle
+        self.generation = 0
+        self._lock = threading.Lock()
+
+    @property
+    def req_id(self) -> int:
+        return self.handle.req.req_id
+
+    @property
+    def req(self) -> ServeRequest:
+        return self.handle.req
+
+    def _current(self) -> tuple[int, Any]:
+        with self._lock:
+            return self.generation, self.handle
+
+    def _reassign(self, backend: Backend, handle: Any) -> None:
+        with self._lock:
+            self.backend = backend
+            self.handle = handle
+            self.generation += 1
+
+    def result(self, timeout: float = 300.0) -> ServeRequest:
+        deadline = time.time() + timeout
+        while True:
+            gen, handle = self._current()
+            try:
+                out = handle.result(timeout=min(_FAILOVER_POLL,
+                                                deadline - time.time()))
+            except RequestTimeout:
+                if time.time() >= deadline:
+                    raise RequestTimeout(self.req_id, timeout) from None
+                continue
+            if self._current()[0] != gen and out.finished and out.error:
+                continue              # failed over mid-wait: follow it
+            return out
+
+    def stream(self, timeout: float = 300.0) -> Iterator[int]:
+        deadline = time.time() + timeout
+        while True:
+            gen, handle = self._current()
+            yielded = 0
+            try:
+                for tok in handle.stream(timeout=deadline - time.time()):
+                    yield tok
+                    yielded += 1
+                return
+            except RuntimeError:
+                # the backend-side request failed; if the LB moved the
+                # request (zero tokens were ever delivered — failover
+                # only resubmits token-less requests) restart on the new
+                # handle, else surface the failure
+                if yielded == 0:
+                    spin = time.time() + 2 * _FAILOVER_POLL
+                    while self._current()[0] == gen and time.time() < spin:
+                        time.sleep(0.01)   # failover may still be swapping
+                    if self._current()[0] != gen:
+                        continue
+                raise
+
+
+class LoadBalancer:
+    """Role/pressure router + health checker over registered backends."""
+
+    def __init__(self, *, health_interval: float = 0.25,
+                 ewma_alpha: float = 0.3, max_failures: int = 3,
+                 kv_pressure_weight: float = 4.0):
+        self.backends: dict[str, Backend] = {}
+        self.tickets: dict[int, LBTicket] = {}
+        self.health_interval = health_interval
+        self.ewma_alpha = ewma_alpha
+        self.max_failures = max_failures
+        self.kv_pressure_weight = kv_pressure_weight
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.counters = {"routed": 0, "failovers": 0, "failover_failures": 0,
+                         "health_probes": 0, "backends_marked_unhealthy": 0}
+
+    # ------------------------------------------------------------ registry
+    def add_backend(self, name: str, engine: Any) -> Backend:
+        with self._lock:
+            if name in self.backends:
+                raise ValueError(f"backend {name!r} already registered")
+            b = Backend(name, engine)
+            self.backends[name] = b
+            return b
+
+    def remove_backend(self, name: str) -> None:
+        """Drain + deregister: no new routes, token-less requests fail
+        over to the remaining backends, decoding requests finish in
+        place (their tickets keep pointing at the removed engine)."""
+        with self._lock:
+            b = self.backends.get(name)
+            if b is None:
+                return
+            b.draining = True
+        self._failover(b, reason=f"backend {name} removed")
+        with self._lock:
+            self.backends.pop(name, None)
+
+    # ------------------------------------------------------------- routing
+    @property
+    def cfg(self):
+        """Model config of the fleet (gateway parses requests against it;
+        all backends are assumed to serve the same model)."""
+        with self._lock:
+            for b in self.backends.values():
+                return b.engine.cfg
+        raise RuntimeError("no backends registered")
+
+    def _eligible(self, req: ServeRequest) -> list[Backend]:
+        needs_e = (req.mm_embeds is not None
+                   and np.asarray(req.mm_embeds).shape[0] > 0)
+        with self._lock:
+            cands = [b for b in self.backends.values()
+                     if b.healthy and not b.draining]
+        if needs_e:
+            cands = [b for b in cands if b.serves_encode()]
+        return cands
+
+    def score(self, b: Backend) -> float:
+        """Composite pressure: queued work + pool occupancy + probe EWMA.
+        Lower is better; ties broken by registration order."""
+        free, total = b.engine.kv_block_counts()
+        free_frac = (free / total) if total else 1.0
+        with self._lock:
+            inflight = sum(1 for t in self.tickets.values()
+                           if t.backend is b and not t.req.finished)
+        return (b.engine.queue_depth() + inflight
+                + self.kv_pressure_weight * (1.0 - free_frac)
+                + (b.ewma_ms or 0.0) / 10.0)
+
+    def submit(self, req: ServeRequest) -> LBTicket:
+        cands = self._eligible(req)
+        if not cands:
+            raise RuntimeError(
+                "no eligible backend (none healthy, or no E-capable "
+                "backend for a multimodal request)")
+        best = min(cands, key=self.score)
+        handle = best.engine.submit(req)
+        ticket = LBTicket(self, best, handle)
+        with self._lock:
+            self.tickets[req.req_id] = ticket
+        self.counters["routed"] += 1
+        return ticket
+
+    def abort(self, req_id: int, reason: str = "aborted by client") -> bool:
+        with self._lock:
+            ticket = self.tickets.get(req_id)
+        if ticket is None:
+            return False
+        return ticket.backend.engine.abort(req_id, reason)
+
+    def collect(self, req_id: int) -> None:
+        """Drop a finished request's ticket and collect it on its backend
+        (gateway calls this after the response is written, so neither
+        registry can grow unbounded)."""
+        with self._lock:
+            ticket = self.tickets.pop(req_id, None)
+        if ticket is not None:
+            ticket.backend.engine.collect(req_id)
+
+    # ------------------------------------------------------------ failover
+    def _failover(self, dead: Backend, reason: str) -> None:
+        """Re-home ``dead``'s token-less requests; abort the rest.
+
+        Resubmission happens BEFORE the abort on the dead backend: the
+        ticket's generation bumps first, so a waiter woken by the abort
+        always finds the new handle and never surfaces the transient
+        failure. Requests that already delivered tokens cannot be
+        re-homed without replaying part of the stream, so they fail."""
+        with self._lock:
+            victims = [t for t in self.tickets.values()
+                       if t.backend is dead and not t.req.finished]
+        for t in victims:
+            req = t.req
+            if len(req.tokens) == 0 and not req.finished:
+                clone = clone_request(req)
+                cands = self._eligible(clone)
+                if cands:
+                    try:
+                        best = min(cands, key=self.score)
+                        t._reassign(best, best.engine.submit(clone))
+                        self.counters["failovers"] += 1
+                    except Exception:                 # noqa: BLE001
+                        self.counters["failover_failures"] += 1
+                else:
+                    self.counters["failover_failures"] += 1
+            dead.engine.abort(req.req_id, reason)
+
+    # -------------------------------------------------------- health loop
+    def health_check_once(self) -> None:
+        """One probe round (public so tests drive it without the timer)."""
+        with self._lock:
+            backends = list(self.backends.values())
+        for b in backends:
+            if b.draining:
+                continue
+            t0 = time.perf_counter()
+            try:
+                h = b.engine.health()
+                ok = bool(h.get("ok", False))
+            except Exception:                         # noqa: BLE001
+                ok = False
+            ms = (time.perf_counter() - t0) * 1e3
+            b.observe_probe(ms, ok, self.ewma_alpha)
+            self.counters["health_probes"] += 1
+            if (b.healthy and not ok
+                    and b.consecutive_failures >= self.max_failures):
+                b.healthy = False
+                self.counters["backends_marked_unhealthy"] += 1
+                self._failover(b, reason=f"backend {b.name} unhealthy")
+            elif not b.healthy and ok:
+                b.healthy = True      # probe recovered: take traffic again
+
+    def _health_loop(self) -> None:
+        while not self._stop.wait(self.health_interval):
+            self.health_check_once()
+
+    def start(self) -> None:
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._health_loop,
+                                            daemon=True, name="lb-health")
+            self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    # ------------------------------------------------------------- queries
+    def health(self) -> dict[str, Any]:
+        with self._lock:
+            backends = list(self.backends.values())
+        snaps = [b.snapshot() for b in backends]
+        return {"ok": any(s["healthy"] for s in snaps),
+                "backends": snaps,
+                "lb": dict(self.counters)}
+
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Aggregated engine counters across backends + LB counters."""
+        agg: dict[str, Any] = {}
+        with self._lock:
+            backends = list(self.backends.values())
+        for b in backends:
+            for k, v in b.engine.stats.items():
+                if isinstance(v, (int, float)):
+                    agg[k] = agg.get(k, 0) + v
+        agg["lb"] = dict(self.counters)
+        return agg

@@ -156,7 +156,7 @@ class Scheduler:
         while not self._stop.is_set():
             if self.task is None:
                 self.task = self._try_admit()
-            if self.task is None:
+            if self.task is None or self._drop_aborted_task():
                 break
             if (spent + self.chunk > self.budget
                     and not (stepped == 0 and chunks == 0)):
@@ -165,6 +165,18 @@ class Scheduler:
             chunks += 1
             self._advance_task()
         return bool(stepped or chunks)
+
+    def _drop_aborted_task(self) -> bool:
+        """Abandon the in-flight prefill task if its request was aborted
+        from outside the scheduler thread (client disconnect). The
+        abandon here — on the scheduler's own thread, between iterations
+        — is what frees the task's blocks: an external free could land
+        mid-iteration while a planned block table is in flight."""
+        if self.task is None or not self.task.req.finished:
+            return False
+        self.prefill.abandon(self.task)
+        self.task = None
+        return True
 
     def _advance_task(self) -> None:
         task = self.task
@@ -176,9 +188,23 @@ class Scheduler:
             return
         if done:
             self.task = None
-            self._commit_cache(task)
+            self._to_decode(task)
+
+    def _to_decode(self, task: PrefillProgress) -> None:
+        """Hand a completed prefill to decode — unless the request was
+        aborted mid-chunk, in which case its blocks are released here
+        instead (the KV content is still committed to the prefix index
+        first when caching is on: a fully-prefilled prompt's blocks are
+        valid for reuse regardless of the abort)."""
+        self._commit_cache(task)
+        try:
             task.req.advance(RequestState.DECODING)
-            self.psi_pd.send(task)
+        except ValueError:
+            if not task.req.finished:
+                raise
+            self.prefill.abandon(task)
+            return
+        self.psi_pd.send(task)
 
     def _commit_cache(self, task: PrefillProgress) -> None:
         """Publish a completed prefill's blocks into the prefix index
@@ -210,7 +236,7 @@ class Scheduler:
         while not self._stop.is_set():
             if self.task is None:
                 self.task = self._try_admit()
-            if self.task is None:
+            if self.task is None or self._drop_aborted_task():
                 break
             if self.task.done and self.task.first_tok is None:
                 # fully-cached prompt (prefix cache): ZERO prefill rows —
@@ -220,10 +246,8 @@ class Scheduler:
                 # entry, so the admission loop still terminates.
                 task = self.task
                 self.task = None
-                self._commit_cache(task)
                 self.stats.bump("prefill_completions")
-                task.req.advance(RequestState.DECODING)
-                self.psi_pd.send(task)
+                self._to_decode(task)
                 handed += 1
                 continue
             n_new = runner.next_chunk_len(self.task)
@@ -250,9 +274,7 @@ class Scheduler:
                 lambda r: self.on_fail(r, f"packed step failed: {e!r}"))
             return True
         for task in finished:
-            self._commit_cache(task)
-            task.req.advance(RequestState.DECODING)
-            self.psi_pd.send(task)
+            self._to_decode(task)
         return bool(stepped or chunks or handed)
 
     # ------------------------------------------------------------- shutdown

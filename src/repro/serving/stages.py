@@ -49,7 +49,7 @@ class ServeStats:
             "peak_cache_bytes": 0, "preemptions": 0,
             "mm_cache_hits": 0, "mm_cache_misses": 0,
             "prefill_chunks": 0, "admission_backoffs": 0,
-            "mm_inflight_hits": 0,
+            "mm_inflight_hits": 0, "aborts": 0,
             # per-stage job counters (sim cross-validation reads these;
             # both engines bump them) + cluster-only bookkeeping
             # (pd_migrations / role_switches / role_seconds stay 0/empty
@@ -798,6 +798,13 @@ class PagedDecodeStage:
             except queue.Empty:
                 break
             req = handoff.req
+            if req.finished:
+                # aborted while parked in ψ_PD: the handoff's block-table
+                # reference is the last owner — free here, on the decode
+                # stage's own thread
+                with self.kv.lock:
+                    self.kv.mgr.free(req.req_id)
+                continue
             if handoff.first_tok is None:
                 # fully-cached prompt: no prefill ran, so no first token
                 # yet. The next packed step recomputes the last prompt

@@ -25,6 +25,21 @@ class APIError(ValueError):
     """Invalid request payload or parameters."""
 
 
+class RequestTimeout(TimeoutError):
+    """A ``result()``/``stream()`` wait ran out of time.
+
+    Distinct from a FAILED request (which ``result()`` returns and
+    ``stream()`` surfaces as RuntimeError): on a timeout the request is
+    still live server-side — the caller decides whether to keep waiting
+    or ``abort()`` it. The HTTP gateway maps this to 408."""
+
+    def __init__(self, req_id: int, waited: float):
+        super().__init__(
+            f"request {req_id}: no terminal state within {waited:.1f}s")
+        self.req_id = req_id
+        self.waited = waited
+
+
 @dataclass(frozen=True)
 class SamplingParams:
     """Decode-head sampling controls (OpenAI-style semantics).
@@ -73,9 +88,11 @@ class RequestState(enum.Enum):
     FAILED = "failed"
 
 
-# legal lifecycle transitions; DECODING -> PREFILLING is preemption
+# legal lifecycle transitions; DECODING -> PREFILLING is preemption,
+# QUEUED -> FAILED is abort-before-admission
 _TRANSITIONS: dict[RequestState, tuple[RequestState, ...]] = {
-    RequestState.QUEUED: (RequestState.ENCODING, RequestState.PREFILLING),
+    RequestState.QUEUED: (RequestState.ENCODING, RequestState.PREFILLING,
+                          RequestState.FAILED),
     RequestState.ENCODING: (RequestState.PREFILLING, RequestState.FAILED),
     RequestState.PREFILLING: (RequestState.DECODING, RequestState.FAILED),
     RequestState.DECODING: (RequestState.DONE, RequestState.PREFILLING,
@@ -200,6 +217,13 @@ class ServeRequest:
 
     # ------------------------------------------------------------ lifecycle
     def advance(self, new_state: RequestState) -> None:
+        """Atomic under ``_cv``: an external ``abort`` (mark_failed) and a
+        stage-thread advance must serialize, or a racing advance could
+        overwrite the FAILED state and resurrect the request."""
+        with self._cv:
+            self._advance(new_state)
+
+    def _advance(self, new_state: RequestState) -> None:
         if new_state not in _TRANSITIONS[self.state]:
             raise ValueError(
                 f"request {self.req_id}: illegal transition "
@@ -207,8 +231,14 @@ class ServeRequest:
         self.state = new_state
 
     def emit(self, tok: int) -> None:
-        """Append a generated token and wake streaming consumers."""
+        """Append a generated token and wake streaming consumers.
+
+        No-op once terminal: an abort can land between a runner step
+        sampling a token and committing it, and a late token appended to
+        a FAILED request would leak into a concurrently-open stream."""
         with self._cv:
+            if self.finished:
+                return
             self.tokens.append(int(tok))
             self._cv.notify_all()
 
@@ -218,7 +248,10 @@ class ServeRequest:
         Stop/eos tokens are latched (``stop_hit``) but NOT emitted —
         OpenAI "stop" semantics exclude the matched token — so streams
         simply terminate. The retire path turns ``stop_hit`` into
-        ``FinishReason.STOP`` (vs LENGTH)."""
+        ``FinishReason.STOP`` (vs LENGTH). A request aborted mid-step
+        reports finished immediately so the decode sweep retires it."""
+        if self.finished:
+            return True
         if self.sampling.is_stop(int(tok)):
             self.stop_hit = True
             return True
@@ -242,7 +275,7 @@ class ServeRequest:
     def mark_done(self, reason: FinishReason) -> None:
         with self._cv:
             self.finish_reason = reason
-            self.advance(RequestState.DONE)
+            self._advance(RequestState.DONE)
             self._cv.notify_all()
 
     def mark_failed(self, error: str) -> bool:
@@ -254,7 +287,7 @@ class ServeRequest:
                 return False
             self.error = error
             self.finish_reason = FinishReason.ERROR
-            self.advance(RequestState.FAILED)
+            self._advance(RequestState.FAILED)
             self._cv.notify_all()
             return True
 

@@ -1,0 +1,133 @@
+"""In-memory fake engine speaking the duck-typed frontend surface.
+
+Lets the load-balancer and gateway tests exercise routing, failover and
+overload deterministically without booting a real model: a ``FakeEngine``
+completes (or deliberately never completes) requests on demand, and its
+health/pressure readings are plain attributes the test flips."""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Iterator
+
+from repro.configs import get_config
+from repro.serving.types import (FinishReason, RequestState, RequestTimeout,
+                                 ServeRequest)
+
+
+class FakeHandle:
+    """Mirrors ``RequestHandle.result()/stream()`` over a bare request."""
+
+    def __init__(self, req: ServeRequest, engine: "FakeEngine"):
+        self.req = req
+        self.engine = engine
+
+    @property
+    def req_id(self) -> int:
+        return self.req.req_id
+
+    def result(self, timeout: float = 300.0) -> ServeRequest:
+        deadline = time.time() + timeout
+        with self.req._cv:
+            while not self.req.finished:
+                remaining = deadline - time.time()
+                if remaining <= 0:
+                    raise RequestTimeout(self.req.req_id, timeout)
+                self.req._cv.wait(remaining)
+        return self.req
+
+    def stream(self, timeout: float = 300.0) -> Iterator[int]:
+        i = 0
+        deadline = time.time() + timeout
+        while True:
+            with self.req._cv:
+                while len(self.req.tokens) <= i and not self.req.finished:
+                    remaining = deadline - time.time()
+                    if remaining <= 0:
+                        raise RequestTimeout(self.req.req_id, timeout)
+                    self.req._cv.wait(remaining)
+                toks = list(self.req.tokens)
+                finished = self.req.finished
+                error = self.req.error
+            while i < len(toks):
+                yield toks[i]
+                i += 1
+            if finished:
+                if error is not None:
+                    raise RuntimeError(
+                        f"request {self.req.req_id} failed: {error}")
+                return
+
+
+def finish(req: ServeRequest, tokens=(1, 2, 3)) -> None:
+    """Walk a request to DONE emitting ``tokens`` (legal-lifecycle walk)."""
+    if req.state is RequestState.QUEUED:
+        req.advance(RequestState.PREFILLING)
+    if req.state is RequestState.PREFILLING:
+        req.advance(RequestState.DECODING)
+    for t in tokens:
+        req.emit(t)
+    req.mark_done(FinishReason.LENGTH)
+
+
+class FakeEngine:
+    """Frontend-surface stub: ``cfg``/``submit``/``abort``/``collect``/
+    ``stats``/``health``/``queue_depth``/``kv_block_counts``/
+    ``current_roles`` — everything the LB and gateway consume."""
+
+    def __init__(self, name: str = "fake", *, auto_complete: bool = True,
+                 tokens=(1, 2, 3), roles=("EPD",), ok: bool = True,
+                 depth: int = 0, kv=(64, 64), arch: str = "pixtral-12b"):
+        self.name = name
+        self.cfg = get_config(arch).reduced()
+        self.auto_complete = auto_complete
+        self.tokens = tuple(tokens)
+        self.roles = list(roles)
+        self.ok = ok                    # health-probe verdict (test flips it)
+        self.depth = depth
+        self.kv = kv
+        self.handles: dict[int, FakeHandle] = {}
+        self.aborted: list[tuple[int, str]] = []
+        self.collected: list[int] = []
+        self._lock = threading.Lock()
+
+    # --------------------------------------------------- frontend surface
+    def submit(self, req: ServeRequest) -> FakeHandle:
+        h = FakeHandle(req, self)
+        with self._lock:
+            self.handles[req.req_id] = h
+        if self.auto_complete:
+            finish(req, self.tokens)
+        return h
+
+    def abort(self, req_id: int, reason: str = "aborted by client") -> bool:
+        with self._lock:
+            h = self.handles.get(req_id)
+        if h is None or h.req.finished:
+            return False
+        self.aborted.append((req_id, reason))
+        return h.req.mark_failed(reason)
+
+    def collect(self, req_id: int) -> None:
+        self.collected.append(req_id)
+        with self._lock:
+            self.handles.pop(req_id, None)
+
+    def health(self) -> dict:
+        if not self.ok:
+            raise RuntimeError(f"{self.name} probe failed")
+        return {"ok": True, "running": True}
+
+    def queue_depth(self) -> int:
+        return self.depth
+
+    def kv_block_counts(self):
+        return self.kv
+
+    def current_roles(self):
+        return list(self.roles)
+
+    @property
+    def stats(self) -> dict:
+        return {"submitted": len(self.handles) + len(self.collected),
+                "aborts": len(self.aborted)}

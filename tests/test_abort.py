@@ -1,0 +1,173 @@
+"""Request cancellation: ``EngineBase.abort`` + ``RequestTimeout``.
+
+The abort contract (gateway disconnects depend on it): the request
+reaches FAILED promptly, every waiter (``result()``/``stream()``) wakes,
+the request's KV blocks return to the pool via the stage sweeps (the
+free-block count recovers to its pre-request baseline), and the engine
+keeps serving unrelated requests bit-identically."""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (EPDEngine, EngineConfig, RequestTimeout,
+                           ServeRequest)
+
+LONG = 64          # enough decode steps to reliably abort mid-flight
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def engine(setup):
+    cfg, params = setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=2, kv_blocks=64))
+    eng.start()
+    yield cfg, eng
+    eng.stop()
+
+
+_IDS = iter(range(10_000, 20_000))
+
+
+def _req(cfg, n_new=LONG, mm=False, seed=0):
+    rng = np.random.default_rng(seed)
+    M = cfg.modality.tokens_per_item
+    return ServeRequest(
+        req_id=next(_IDS),
+        prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+        mm_embeds=(rng.standard_normal((M, cfg.modality.enc_d_model))
+                   .astype(np.float32) * 0.1) if mm else None,
+        mm_positions=np.arange(1, M + 1, dtype=np.int32) if mm else None,
+        max_new_tokens=n_new)
+
+
+def _wait_free(eng, baseline, timeout=30.0):
+    """Block until the pool's free-block count recovers to ``baseline``
+    (abort frees via stage sweeps, so recovery is asynchronous)."""
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        free, _ = eng.kv_block_counts()
+        if free == baseline:
+            return free
+        time.sleep(0.05)
+    return eng.kv_block_counts()[0]
+
+
+def _quiesce(eng, timeout=30.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        free, total = eng.kv_block_counts()
+        if free == total and eng.queue_depth() == 0:
+            return free
+        time.sleep(0.05)
+    raise AssertionError(f"engine did not quiesce: {eng.kv_block_counts()}, "
+                         f"depth={eng.queue_depth()}")
+
+
+def test_abort_mid_stream_releases_blocks_and_unblocks(engine):
+    cfg, eng = engine
+    free0 = _quiesce(eng)
+    handle = eng.submit(_req(cfg))
+    got = []
+    with pytest.raises(RuntimeError, match="abort"):
+        for tok in handle.stream(timeout=60):
+            got.append(tok)
+            if len(got) == 3:
+                assert eng.abort(handle.req_id) is True
+    assert len(got) >= 3
+    out = handle.result(timeout=30)
+    assert out.error is not None and "abort" in out.error
+    assert len(out.tokens) < LONG          # cancelled before completion
+    assert _wait_free(eng, free0) == free0  # KV blocks back in the pool
+    # double-abort of a finished request is a no-op
+    assert eng.abort(handle.req_id) is False
+    eng.collect(handle.req_id)
+    assert eng.stats["aborts"] >= 1
+
+
+def test_abort_unknown_request(engine):
+    _, eng = engine
+    assert eng.abort(999_999) is False
+
+
+def test_abort_unblocks_concurrent_result_waiter(engine):
+    cfg, eng = engine
+    handle = eng.submit(_req(cfg))
+    box = {}
+
+    def waiter():
+        box["out"] = handle.result(timeout=60)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.2)
+    eng.abort(handle.req_id, "test abort")
+    t.join(timeout=10)
+    assert not t.is_alive(), "result() waiter not woken by abort"
+    assert box["out"].error == "test abort"
+
+
+def test_engine_serves_identically_after_abort(engine):
+    cfg, eng = engine
+    ref = eng.submit(_req(cfg, n_new=6, seed=7)).result(timeout=120)
+    victim = eng.submit(_req(cfg, seed=8))
+    eng.abort(victim.req_id)
+    victim.result(timeout=30)
+    again = eng.submit(_req(cfg, n_new=6, seed=7)).result(timeout=120)
+    assert list(again.tokens) == list(ref.tokens)   # greedy, bit-identical
+
+
+def test_abort_mm_leader_promotes_inflight_waiter(engine):
+    """Two requests sharing one mm payload dedup onto a single in-flight
+    encode; aborting the leader must not strand the follower."""
+    cfg, eng = engine
+    leader = eng.submit(_req(cfg, mm=True, seed=11))
+    follower = eng.submit(_req(cfg, n_new=4, mm=True, seed=11))
+    eng.abort(leader.req_id)
+    out = follower.result(timeout=120)
+    assert out.error is None and len(out.tokens) == 4
+    leader.result(timeout=30)
+    eng.collect(leader.req_id)
+
+
+def test_request_timeout_is_timeout_error(engine):
+    cfg, eng = engine
+    handle = eng.submit(_req(cfg))
+    with pytest.raises(RequestTimeout) as ei:
+        handle.result(timeout=0.05)
+    assert isinstance(ei.value, TimeoutError)
+    assert ei.value.req_id == handle.req_id
+    assert ei.value.waited == pytest.approx(0.05)
+    # stream() raises the same distinct subclass
+    with pytest.raises(RequestTimeout):
+        for _ in handle.stream(timeout=0.01):
+            pass
+    eng.abort(handle.req_id)
+    handle.result(timeout=30)
+
+
+def test_abort_in_dense_mode(setup):
+    cfg, params = setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=1, decode_batch=2, mode="dense"))
+    eng.start()
+    try:
+        victim = eng.submit(_req(cfg))
+        eng.abort(victim.req_id)
+        out = victim.result(timeout=30)
+        assert out.error is not None
+        ok = eng.submit(_req(cfg, n_new=3, seed=3)).result(timeout=120)
+        assert len(ok.tokens) == 3 and ok.error is None
+    finally:
+        eng.stop()

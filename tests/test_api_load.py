@@ -6,7 +6,9 @@ from repro.configs import get_config
 from repro.core import A100_80G
 from repro.core.load_estimator import LoadEstimator
 from repro.core.request import Request
-from repro.serving.api import APIError, parse_chat_request, to_sim_request
+from repro.serving.api import (APIError, IncrementalDetokenizer,
+                               build_chat_chunk, build_chat_response,
+                               parse_chat_request, to_sim_request)
 
 PIXTRAL = get_config("pixtral-12b")
 TEXT = get_config("internlm2-20b")
@@ -37,9 +39,19 @@ def test_plain_string_content():
 
 @pytest.mark.parametrize("payload,msg", [
     ({}, "missing messages"),
+    ({"messages": []}, "missing messages"),
     ({"messages": [{"role": "u", "content": [{"type": "bogus"}]}]}, "unknown"),
     ({"messages": [{"role": "u", "content": "x"}], "max_tokens": 0}, "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "max_tokens": 9000},
+     "range"),
     ({"messages": [{"role": "u", "content": "x"}], "temperature": 9}, "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "temperature": -0.1},
+     "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "top_p": 0.0}, "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "top_p": 1.5}, "range"),
+    ({"messages": [{"role": "u", "content": "x"}], "seed": -1}, "uint32"),
+    ({"messages": [{"role": "u", "content": "x"}], "seed": 2 ** 33},
+     "uint32"),
 ])
 def test_rejects_bad_payloads(payload, msg):
     with pytest.raises(APIError, match=msg):
@@ -66,6 +78,50 @@ def test_context_limit_oocl():
             "messages": [{"role": "u", "content": [
                 {"type": "text", "text": "q"},
                 _img(mini, tokens=40_000)]}]})
+
+
+def test_build_chat_response_usage_and_timings():
+    req = parse_chat_request(PIXTRAL, {
+        "messages": [{"role": "user", "content": [
+            {"type": "text", "text": "a b c"}, _img(PIXTRAL)]}],
+        "max_tokens": 8})
+    req.t_submit, req.t_first_token, req.t_done = 1.0, 1.5, 2.5
+    req.mm_cache_hit = True
+    for t in (11, 22, 33):
+        req.tokens.append(t)
+    resp = build_chat_response(PIXTRAL, req)
+    assert resp["object"] == "chat.completion"
+    assert resp["id"] == f"chatcmpl-{req.req_id}"
+    assert resp["choices"][0]["message"]["content"] == "11 22 33"
+    assert resp["choices"][0]["token_ids"] == [11, 22, 33]
+    # usage counts mm tokens as prompt tokens
+    assert resp["usage"] == {"prompt_tokens": 3 + 4,
+                             "completion_tokens": 3, "total_tokens": 10}
+    t = resp["timings"]
+    assert t["ttft"] == pytest.approx(0.5)
+    assert t["tpot"] == pytest.approx(0.5)       # (2.5 - 1.5) / (3 - 1)
+    assert t["n_preemptions"] == 0 and t["mm_cache_hit"] is True
+
+
+def test_incremental_detokenizer_matches_response_content():
+    toks = [5, 17, 0, 999]
+    detok = IncrementalDetokenizer()
+    assembled = "".join(detok.feed(t) for t in toks)
+    assert assembled == " ".join(str(t) for t in toks)
+
+
+def test_build_chat_chunk_shapes():
+    req = parse_chat_request(TEXT, {"messages": [
+        {"role": "u", "content": "x"}]})
+    first = build_chat_chunk(TEXT, req, role=True)
+    assert first["object"] == "chat.completion.chunk"
+    assert first["choices"][0]["delta"] == {"role": "assistant"}
+    mid = build_chat_chunk(TEXT, req, " 42")
+    assert mid["choices"][0]["delta"] == {"content": " 42"}
+    assert mid["choices"][0]["finish_reason"] is None
+    last = build_chat_chunk(TEXT, req, finish_reason="length")
+    assert last["choices"][0]["delta"] == {}
+    assert last["choices"][0]["finish_reason"] == "length"
 
 
 def test_to_sim_request():

@@ -1,0 +1,333 @@
+"""HTTP gateway: OpenAI-shaped serving over a live engine.
+
+Acceptance criteria from the serving-gateway PR:
+  * greedy completions through the gateway are token-identical to a
+    direct ``submit``/``result`` on the same engine — for both the
+    single-pipeline ``EPDEngine`` and a ``"2E1P1D"`` ``ClusterEngine``;
+  * SSE streaming yields the same tokens incrementally (concatenated
+    deltas == non-streaming content);
+  * exact HTTP status mapping (400/404/405/408/429/500) for the schema
+    errors ``api.parse_chat_request`` raises;
+  * a mid-stream client disconnect aborts server-side — the pool's
+    free-block count returns to baseline — without stalling other
+    streams.
+"""
+import http.client
+import json
+import threading
+import time
+
+import jax
+import pytest
+
+from fake_engine import FakeEngine, finish
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serving import (ClusterConfig, ClusterEngine, EPDEngine,
+                           EngineConfig, GatewayServer)
+from repro.serving.api import parse_chat_request
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def gateway(setup):
+    cfg, params = setup
+    eng = EPDEngine(cfg, params, EngineConfig(
+        n_encode_workers=2, decode_batch=2, kv_blocks=64))
+    eng.start()
+    gw = GatewayServer(eng, request_timeout=120.0).start()
+    yield cfg, eng, gw
+    gw.stop()
+    eng.stop()
+
+
+PAYLOAD = {"messages": [{"role": "user", "content": "hello epd gateway"}],
+           "max_tokens": 6, "temperature": 0.0}
+
+
+def _post(gw, payload, stream=False, timeout=120):
+    c = http.client.HTTPConnection(gw.host, gw.port, timeout=timeout)
+    c.request("POST", "/v1/chat/completions",
+              body=payload if isinstance(payload, (bytes, str))
+              else json.dumps(payload),
+              headers={"Content-Type": "application/json"})
+    r = c.getresponse()
+    if stream:
+        return r.status, r, c
+    body = r.read()
+    c.close()
+    return r.status, json.loads(body)
+
+
+def _get(gw, path):
+    c = http.client.HTTPConnection(gw.host, gw.port, timeout=30)
+    c.request("GET", path)
+    r = c.getresponse()
+    body = r.read()
+    c.close()
+    return r.status, json.loads(body)
+
+
+def _sse_events(raw: bytes):
+    out = []
+    for ev in raw.split(b"\n\n"):
+        if not ev:
+            continue
+        assert ev.startswith(b"data: "), ev
+        out.append(ev[6:].decode())
+    return out
+
+
+def _direct_tokens(cfg, eng, payload):
+    out = eng.submit(parse_chat_request(cfg, payload)).result(timeout=120)
+    assert out.error is None
+    return list(out.tokens)
+
+
+def test_unary_parity_with_direct_submit(gateway):
+    cfg, eng, gw = gateway
+    direct = _direct_tokens(cfg, eng, PAYLOAD)
+    st, resp = _post(gw, PAYLOAD)
+    assert st == 200
+    choice = resp["choices"][0]
+    assert choice["token_ids"] == direct          # token-identical
+    assert choice["message"]["content"] == " ".join(str(t) for t in direct)
+    assert choice["finish_reason"] == "length"
+    assert resp["usage"]["completion_tokens"] == len(direct)
+    assert resp["usage"]["total_tokens"] == (resp["usage"]["prompt_tokens"]
+                                             + len(direct))
+    t = resp["timings"]
+    assert t["ttft"] > 0 and "tpot" in t and "mm_cache_hit" in t
+
+
+def test_sse_stream_yields_same_tokens_incrementally(gateway):
+    cfg, eng, gw = gateway
+    direct = _direct_tokens(cfg, eng, PAYLOAD)
+    st, r, c = _post(gw, dict(PAYLOAD, stream=True), stream=True)
+    assert st == 200
+    assert r.getheader("Content-Type") == "text/event-stream"
+    events = _sse_events(r.read())
+    c.close()
+    assert events[-1] == "[DONE]"
+    chunks = [json.loads(e) for e in events[:-1]]
+    assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+    assert chunks[0]["object"] == "chat.completion.chunk"
+    deltas = [ch["choices"][0]["delta"]["content"] for ch in chunks
+              if "content" in ch["choices"][0]["delta"]]
+    assert len(deltas) == len(direct)             # one event per token
+    assert "".join(deltas) == " ".join(str(t) for t in direct)
+    assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+
+
+@pytest.mark.parametrize("payload,needle", [
+    ({"messages": []}, "missing messages"),
+    ({"messages": [{"role": "u", "content": "x"}], "temperature": 9.0},
+     "temperature out of range"),
+    ({"messages": [{"role": "u", "content": "x"}], "top_p": 0.0},
+     "top_p out of range"),
+    ({"messages": [{"role": "u", "content": "x"}], "max_tokens": 0},
+     "max_tokens out of range"),
+    ({"messages": [{"role": "u", "content": [{"type": "bogus"}]}]},
+     "unknown content type"),
+])
+def test_schema_errors_map_to_400(gateway, payload, needle):
+    _, _, gw = gateway
+    st, resp = _post(gw, payload)
+    assert st == 400
+    assert needle in resp["error"]["message"]
+
+
+def test_oversized_prompt_maps_to_400(gateway):
+    cfg, _, gw = gateway
+    words = " ".join("w%d" % i for i in range(cfg.max_context + 1))
+    st, resp = _post(gw, {"messages": [{"role": "u", "content": words}]})
+    assert st == 400
+    assert "OOCL" in resp["error"]["message"]
+
+
+def test_malformed_json_maps_to_400(gateway):
+    _, _, gw = gateway
+    st, resp = _post(gw, b"{not json")
+    assert st == 400 and "bad JSON" in resp["error"]["message"]
+    st, resp = _post(gw, b'["a", "list"]')
+    assert st == 400
+
+
+def test_unknown_path_404_and_bad_method_405(gateway):
+    _, _, gw = gateway
+    st, _ = _get(gw, "/v1/bogus")
+    assert st == 404
+    st, _ = _get(gw, "/v1/chat/completions")
+    assert st == 405
+
+
+def test_health_and_metrics_endpoints(gateway):
+    _, eng, gw = gateway
+    st, h = _get(gw, "/health")
+    assert st == 200 and h["ok"] is True
+    st, m = _get(gw, "/metrics")
+    assert st == 200
+    assert m["gateway"]["completions"] >= 1
+    assert m["admission"]["max_concurrent"] == gw.max_concurrent
+    # engine counters ride along: packed-runner and prefix-cache stats
+    for key in ("decode_steps", "packed_steps", "prefix_cache_hits",
+                "aborts"):
+        assert key in m["engine"], key
+
+
+def test_timeout_maps_to_408_and_aborts():
+    fake = FakeEngine(auto_complete=False)
+    gw = GatewayServer(fake, request_timeout=0.2).start()
+    try:
+        st, resp = _post(gw, PAYLOAD)
+        assert st == 408
+        assert "timed out" in resp["error"]["message"]
+        assert fake.aborted and gw.counters["timeouts_408"] == 1
+        deadline = time.time() + 5
+        while not fake.collected and time.time() < deadline:
+            time.sleep(0.01)
+        assert fake.collected        # gateway collected the dead request
+    finally:
+        gw.stop()
+
+
+def test_overload_sheds_with_429():
+    fake = FakeEngine(auto_complete=False)
+    gw = GatewayServer(fake, max_concurrent=1, max_queue=0,
+                       request_timeout=30.0).start()
+    try:
+        results = {}
+        first = threading.Thread(
+            target=lambda: results.update(first=_post(gw, PAYLOAD)))
+        first.start()
+        deadline = time.time() + 5
+        while not fake.handles and time.time() < deadline:
+            time.sleep(0.01)          # first request admitted + submitted
+        assert fake.handles
+        st, resp = _post(gw, PAYLOAD)
+        assert st == 429
+        assert "admission queue full" in resp["error"]["message"]
+        assert gw.counters["rejected_429"] == 1
+        finish(next(iter(fake.handles.values())).req, (1, 2))
+        first.join(timeout=10)
+        assert results["first"][0] == 200
+    finally:
+        gw.stop()
+
+
+def test_engine_failure_maps_to_500():
+    fake = FakeEngine(auto_complete=False)
+    gw = GatewayServer(fake, request_timeout=30.0).start()
+    try:
+        def fail_soon():
+            deadline = time.time() + 5
+            while not fake.handles and time.time() < deadline:
+                time.sleep(0.01)
+            next(iter(fake.handles.values())).req.mark_failed("boom")
+        t = threading.Thread(target=fail_soon)
+        t.start()
+        st, resp = _post(gw, PAYLOAD)
+        t.join()
+        assert st == 500 and "boom" in resp["error"]["message"]
+    finally:
+        gw.stop()
+
+
+def test_disconnect_mid_stream_frees_blocks_without_stalling_others(gateway):
+    cfg, eng, gw = gateway
+    deadline = time.time() + 30
+    while eng.kv_block_counts()[0] != eng.kv_block_counts()[1]:
+        assert time.time() < deadline, "engine did not quiesce"
+        time.sleep(0.05)
+    free0 = eng.kv_block_counts()[0]
+    long_payload = {"messages": [{"role": "user", "content": "victim req"}],
+                    "max_tokens": 100, "stream": True}
+    survivor_payload = dict(PAYLOAD, stream=True,
+                            messages=[{"role": "user",
+                                       "content": "survivor req"}])
+    direct = _direct_tokens(cfg, eng, dict(survivor_payload, stream=False))
+
+    st_v, rv, cv = _post(gw, long_payload, stream=True)
+    st_s, rs, cs = _post(gw, survivor_payload, stream=True)
+    assert st_v == 200 and st_s == 200
+    # read a few victim events to ensure it is decoding, then hang up
+    got = b""
+    while got.count(b"\n\n") < 3:
+        b1 = rv.read(1)
+        assert b1, "victim stream ended early"
+        got += b1
+    rv.close()
+    cv.close()
+    # the other stream keeps flowing to completion, tokens intact
+    events = _sse_events(rs.read())
+    cs.close()
+    assert events[-1] == "[DONE]"
+    deltas = [json.loads(e)["choices"][0]["delta"].get("content")
+              for e in events[:-1]]
+    deltas = [d for d in deltas if d is not None]
+    assert "".join(deltas) == " ".join(str(t) for t in direct)
+    # abort released the victim's blocks: pool returns to baseline
+    deadline = time.time() + 30
+    while eng.kv_block_counts()[0] != free0 and time.time() < deadline:
+        time.sleep(0.05)
+    assert eng.kv_block_counts()[0] == free0
+    assert gw.counters["disconnects"] >= 1
+    assert eng.stats["aborts"] >= 1
+
+
+@pytest.mark.cluster
+def test_cluster_2e1p1d_gateway_parity(setup):
+    """Greedy completions through a gateway fronting true EPD
+    disaggregation are token-identical to a direct engine submit."""
+    cfg, params = setup
+    ecfg = EngineConfig(n_encode_workers=2, decode_batch=2)
+    ref_eng = EPDEngine(cfg, params, ecfg)
+    ref_eng.start()
+    try:
+        direct = _direct_tokens(cfg, ref_eng, PAYLOAD)
+    finally:
+        ref_eng.stop()
+
+    cluster = ClusterEngine(cfg, params, ecfg,
+                            ClusterConfig(spec="2E1P1D"))
+    cluster.start()
+    gw = GatewayServer(cluster, request_timeout=300.0).start()
+    try:
+        st, resp = _post(gw, PAYLOAD)
+        assert st == 200
+        assert resp["choices"][0]["token_ids"] == direct
+        st, r, c = _post(gw, dict(PAYLOAD, stream=True), stream=True)
+        assert st == 200
+        events = _sse_events(r.read())
+        c.close()
+        assert events[-1] == "[DONE]"
+        deltas = [json.loads(e)["choices"][0]["delta"].get("content")
+                  for e in events[:-1]]
+        assert "".join(d for d in deltas if d) == " ".join(
+            str(t) for t in direct)
+        st, h = _get(gw, "/health")
+        assert st == 200 and h["ok"]
+    finally:
+        gw.stop()
+        cluster.stop()
+
+
+def test_gateway_smoke(gateway):
+    """CI fast-tier node: one unary + one SSE + one 400 on an ephemeral
+    port, then clean shutdown (the fixture's teardown)."""
+    _, _, gw = gateway
+    assert gw.port != 0
+    st, resp = _post(gw, PAYLOAD)
+    assert st == 200 and len(resp["choices"][0]["token_ids"]) == 6
+    st, r, c = _post(gw, dict(PAYLOAD, stream=True), stream=True)
+    events = _sse_events(r.read())
+    c.close()
+    assert st == 200 and events[-1] == "[DONE]"
+    st, resp = _post(gw, {"messages": []})
+    assert st == 400

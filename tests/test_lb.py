@@ -1,0 +1,250 @@
+"""Load balancer: role/pressure routing, health EWMAs, failover.
+
+Uses ``FakeEngine`` stubs so the routing and failover machinery is
+exercised deterministically (pressure readings are plain attributes, the
+health verdict is a flag the test flips, and requests complete — or
+deliberately never complete — on demand). One test at the bottom runs a
+real two-engine fleet end to end."""
+import threading
+
+import numpy as np
+import pytest
+
+from fake_engine import FakeEngine, finish
+from repro.serving import LoadBalancer, ServeRequest
+from repro.serving.lb import clone_request
+from repro.serving.types import RequestState
+
+_IDS = iter(range(30_000, 40_000))
+
+
+def _req(mm=False, n_new=4):
+    cfg = FakeEngine().cfg
+    M = 4
+    return ServeRequest(
+        req_id=next(_IDS),
+        prompt=np.arange(1, 6, dtype=np.int32),
+        mm_embeds=(np.zeros((M, cfg.modality.enc_d_model), np.float32)
+                   if mm else None),
+        mm_positions=np.arange(1, M + 1, dtype=np.int32) if mm else None,
+        max_new_tokens=n_new)
+
+
+def _lb(*backends, **kw):
+    lb = LoadBalancer(**kw)
+    for i, b in enumerate(backends):
+        lb.add_backend(b.name if b.name != "fake" else f"b{i}", b)
+    return lb
+
+
+def test_routes_to_lowest_queue_depth():
+    a = FakeEngine("a", depth=5)
+    b = FakeEngine("b", depth=0)
+    lb = _lb(a, b)
+    t = lb.submit(_req())
+    assert t.backend.name == "b"
+    assert t.result(timeout=5).tokens == [1, 2, 3]
+    lb.collect(t.req_id)
+    assert b.collected and not lb.tickets
+
+
+def test_kv_pressure_steers_away_from_full_pool():
+    a = FakeEngine("a", kv=(1, 64))     # nearly exhausted pool
+    b = FakeEngine("b", kv=(64, 64))
+    lb = _lb(a, b)
+    assert lb.submit(_req()).backend.name == "b"
+
+
+def test_probe_ewma_penalizes_limping_backend():
+    a = FakeEngine("a")
+    b = FakeEngine("b")
+    lb = _lb(a, b, ewma_alpha=0.5)
+    lb.backends["a"].observe_probe(500.0, ok=True, alpha=0.5)
+    assert lb.backends["a"].ewma_ms == 500.0
+    lb.backends["a"].observe_probe(100.0, ok=True, alpha=0.5)
+    assert lb.backends["a"].ewma_ms == pytest.approx(300.0)
+    assert lb.submit(_req()).backend.name == "b"
+
+
+def test_mm_requests_require_encode_capable_backend():
+    pd_only = FakeEngine("pd", roles=("PD",), depth=0)
+    full = FakeEngine("full", roles=("EPD",), depth=10)
+    lb = _lb(pd_only, full)
+    # text goes to the idle PD backend, mm must take the loaded EPD one
+    assert lb.submit(_req()).backend.name == "pd"
+    assert lb.submit(_req(mm=True)).backend.name == "full"
+
+
+def test_no_eligible_backend_raises():
+    pd_only = FakeEngine("pd", roles=("PD",))
+    lb = _lb(pd_only)
+    with pytest.raises(RuntimeError, match="E-capable"):
+        lb.submit(_req(mm=True))
+    with pytest.raises(RuntimeError):
+        LoadBalancer().submit(_req())       # empty fleet
+
+
+def test_abort_routes_to_owning_backend():
+    a = FakeEngine("a", auto_complete=False)
+    lb = _lb(a)
+    t = lb.submit(_req())
+    assert lb.abort(t.req_id, "test") is True
+    assert a.aborted == [(t.req_id, "test")]
+    assert lb.abort(404_404) is False
+
+
+def test_health_failover_resubmits_queued_request():
+    """Backend dies mid-wait: its token-less request is transparently
+    resubmitted and the caller's blocked ``result()`` returns the new
+    backend's completion, never the transient failure."""
+    a = FakeEngine("a", auto_complete=False)
+    b = FakeEngine("b", tokens=(7, 8, 9))
+    lb = _lb(a, b, max_failures=2)
+    t = lb.submit(_req())
+    assert t.backend.name == "a"
+
+    box = {}
+    waiter = threading.Thread(
+        target=lambda: box.update(out=t.result(timeout=10)))
+    waiter.start()
+
+    a.ok = False
+    for _ in range(2):
+        lb.health_check_once()
+    assert not lb.backends["a"].healthy
+    assert lb.counters["backends_marked_unhealthy"] == 1
+    assert lb.counters["failovers"] == 1
+
+    waiter.join(timeout=10)
+    assert not waiter.is_alive()
+    assert box["out"].error is None
+    assert box["out"].tokens == [7, 8, 9]
+    assert t.backend.name == "b"
+    assert t.generation == 1
+    assert a.aborted        # the dead backend's copy was cancelled
+
+
+def test_failover_stream_restarts_on_new_backend():
+    a = FakeEngine("a", auto_complete=False)
+    b = FakeEngine("b", tokens=(5, 6))
+    lb = _lb(a, b, max_failures=1)
+    t = lb.submit(_req())
+    box = {}
+
+    def consume():
+        box["toks"] = list(t.stream(timeout=10))
+
+    consumer = threading.Thread(target=consume)
+    consumer.start()
+    a.ok = False
+    lb.health_check_once()
+    consumer.join(timeout=10)
+    assert not consumer.is_alive()
+    assert box["toks"] == [5, 6]
+
+
+def test_decoding_request_fails_on_failover():
+    """A request that already delivered tokens cannot be re-homed; it
+    surfaces as a failure instead of silently replaying the stream."""
+    a = FakeEngine("a", auto_complete=False)
+    b = FakeEngine("b")
+    lb = _lb(a, b, max_failures=1)
+    t = lb.submit(_req())
+    # simulate partial progress: two tokens already streamed out
+    t.req.advance(RequestState.PREFILLING)
+    t.req.advance(RequestState.DECODING)
+    t.req.emit(1)
+    t.req.emit(2)
+    a.ok = False
+    lb.health_check_once()
+    out = t.result(timeout=5)
+    assert out.error is not None
+    assert lb.counters["failovers"] == 0
+
+
+def test_remove_backend_drains_and_fails_over():
+    a = FakeEngine("a", auto_complete=False)
+    b = FakeEngine("b", tokens=(4,))
+    lb = _lb(a, b)
+    t = lb.submit(_req())
+    lb.remove_backend("a")
+    assert "a" not in lb.backends
+    out = t.result(timeout=5)
+    assert out.error is None and out.tokens == [4]
+
+
+def test_unhealthy_backend_recovers_on_ok_probe():
+    a = FakeEngine("a")
+    lb = _lb(a, max_failures=1)
+    a.ok = False
+    lb.health_check_once()
+    assert not lb.backends["a"].healthy
+    a.ok = True
+    lb.health_check_once()
+    assert lb.backends["a"].healthy
+
+
+def test_clone_request_is_pristine():
+    req = _req(mm=True)
+    finish(req, (1, 2))
+    clone = clone_request(req)
+    assert clone.req_id == req.req_id
+    assert clone.tokens == [] and not clone.finished
+    assert np.array_equal(clone.prompt, req.prompt)
+    assert clone.mm_embeds is req.mm_embeds
+
+
+def test_health_and_stats_aggregation():
+    a = FakeEngine("a", kv=(10, 64))
+    b = FakeEngine("b", kv=(20, 64))
+    lb = _lb(a, b)
+    for _ in range(3):
+        t = lb.submit(_req())
+        t.result(timeout=5)
+        lb.collect(t.req_id)
+    h = lb.health()
+    assert h["ok"] and len(h["backends"]) == 2
+    names = {s["name"]: s for s in h["backends"]}
+    assert names["a"]["kv_free_blocks"] == 10
+    assert names["b"]["kv_total_blocks"] == 64
+    s = lb.stats
+    assert s["lb"]["routed"] == 3
+    assert s["submitted"] == 3       # summed across backends
+
+
+@pytest.mark.cluster
+def test_real_two_engine_fleet_greedy_parity():
+    """Two real engines behind the LB serve bit-identically to one."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serving import EPDEngine, EngineConfig
+
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    engines = [EPDEngine(cfg, params, EngineConfig(decode_batch=2))
+               for _ in range(2)]
+    for e in engines:
+        e.start()
+    lb = LoadBalancer()
+    lb.add_backend("b0", engines[0])
+    lb.add_backend("b1", engines[1])
+    lb.start()
+    try:
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+        ref = engines[0].submit(ServeRequest(
+            req_id=50_000, prompt=prompt, max_new_tokens=6)).result(
+                timeout=120)
+        outs = []
+        for i in range(4):
+            t = lb.submit(ServeRequest(req_id=50_001 + i, prompt=prompt,
+                                       max_new_tokens=6))
+            outs.append(list(t.result(timeout=120).tokens))
+            lb.collect(50_001 + i)
+        assert all(o == list(ref.tokens) for o in outs)
+        assert lb.counters["routed"] == 4
+    finally:
+        lb.stop()
+        for e in engines:
+            e.stop()
