@@ -1,15 +1,20 @@
 #!/usr/bin/env bash
 # Tiered CI. Run from the repo root:
 #
-#   scripts/ci.sh          # fast tier (default): unit + parity, < 2 min
+#   scripts/ci.sh          # fast tier (default): lint + unit + parity, < 2 min
+#   scripts/ci.sh lint     # reprolint only: concurrency + JIT-safety passes
 #   scripts/ci.sh full     # full tier: whole suite (~10 min) + benchmarks
 #
-# The fast tier is the inner-loop check: pure-python unit tests, the
-# ClusterEngine("1EPD") greedy bit-identical parity test, and a pallas
-# (interpret) backend smoke so the non-default attention backend cannot
-# silently rot. The full tier is what a merge gate runs — the entire
-# pytest suite (including the `slow`-marked cluster soak tests) and the
-# benchmark smokes.
+# The lint tier is the repo-specific static analysis (python -m
+# repro.analysis): lock-order/blocking-under-lock checks and JIT-safety
+# heuristics, gated on the committed analysis_baseline.json. The fast
+# tier runs it first (seconds, no jax compilation), then the inner-loop
+# checks: pure-python unit tests, the ClusterEngine("1EPD") greedy
+# bit-identical parity test, and a pallas (interpret) backend smoke so
+# the non-default attention backend cannot silently rot. The full tier
+# is what a merge gate runs — the entire pytest suite (including the
+# `slow`-marked cluster soak tests), one concurrency-heavy module under
+# the runtime lock-order sanitizer, and the benchmark smokes.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -17,7 +22,15 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 TIER="${1:-fast}"
 
+if [ "$TIER" = "lint" ]; then
+    echo "== lint tier: reprolint (concurrency + JIT-safety) =="
+    python -m repro.analysis src tests
+    exit $?
+fi
+
 if [ "$TIER" = "fast" ]; then
+    echo "== fast tier: reprolint (concurrency + JIT-safety) =="
+    python -m repro.analysis src tests || exit $?
     echo "== fast tier: unit + cluster parity (target < 2 min) =="
     python -m pytest -q -m "not slow" \
         tests/test_block_manager.py \
@@ -45,13 +58,23 @@ if [ "$TIER" = "fast" ]; then
 fi
 
 if [ "$TIER" != "full" ]; then
-    echo "usage: scripts/ci.sh [fast|full]" >&2
+    echo "usage: scripts/ci.sh [fast|lint|full]" >&2
     exit 2
 fi
+
+echo "== full tier: reprolint (concurrency + JIT-safety) =="
+python -m repro.analysis src tests || exit 1
 
 echo "== tier-1: pytest (full suite, includes slow cluster soak) =="
 python -m pytest -q
 tier1=$?
+
+echo "== sanitizer: role-switch cluster suite under REPRO_LOCK_SANITIZER =="
+# the most concurrency-heavy module (instance executors + monitor thread
+# + live role switches); the conftest session fixture fails the run on
+# any lock-hierarchy violation
+REPRO_LOCK_SANITIZER=1 python -m pytest -q tests/test_cluster_switch.py \
+    || exit 1
 
 echo "== smoke: offline throughput benchmark (quick) =="
 python benchmarks/offline_throughput.py --quick || exit 1

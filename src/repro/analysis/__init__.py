@@ -1,0 +1,23 @@
+"""reprolint: repo-specific concurrency & JIT-safety static analysis.
+
+Three passes over ``src/`` and ``tests/``:
+
+* :mod:`repro.analysis.concurrency` — lock/condvar acquisition graph,
+  cycle detection against the declared hierarchy
+  (:mod:`repro.analysis.hierarchy`), blocking calls under a held lock,
+  condvar waits without a predicate loop.
+* :mod:`repro.analysis.jit_safety` — host syncs inside jitted code,
+  mutable-closure captures, and ``jax.jit`` call sites whose shape
+  inputs don't flow through a bucket ladder (recompile risk).
+* :mod:`repro.analysis.lock_sanitizer` — opt-in runtime patch of
+  ``threading.Lock/RLock/Condition`` (``REPRO_LOCK_SANITIZER=1``) that
+  witnesses real acquisition order and asserts it against the same
+  declared hierarchy the static pass uses.
+
+Run the CLI with ``python -m repro.analysis [paths...]``; suppress
+intentional findings via the checked-in ``analysis_baseline.json``
+(every entry carries a justification).
+"""
+from repro.analysis.findings import FINDING_KEYS, Finding
+
+__all__ = ["Finding", "FINDING_KEYS"]

@@ -1,0 +1,105 @@
+"""Small AST helpers shared by the reprolint passes."""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterator, Optional
+
+# Directories never scanned by default: fixture snippets are deliberate
+# rule violations, caches are noise.
+DEFAULT_EXCLUDED_DIRS = {"__pycache__", "analysis_fixtures", ".git",
+                         ".pytest_cache", "build"}
+
+
+def iter_python_files(paths: list[Path],
+                      exclude_dirs: Optional[set] = None) -> Iterator[Path]:
+    """Yield .py files under ``paths`` (files pass through verbatim)."""
+    excl = DEFAULT_EXCLUDED_DIRS if exclude_dirs is None else exclude_dirs
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if not any(part in excl for part in f.parts):
+                    yield f
+
+
+def attr_chain(node: ast.expr) -> Optional[tuple[str, ...]]:
+    """``self.kv.lock`` -> ('self', 'kv', 'lock'); None if not a plain
+    Name/Attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[tuple[str, ...]]:
+    """The called expression as a chain, e.g. ``time.sleep(x)`` ->
+    ('time', 'sleep')."""
+    return attr_chain(node.func)
+
+
+def names_in(node: ast.AST) -> set[str]:
+    """All bare identifiers mentioned anywhere under ``node``."""
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def is_constant_true(node: ast.expr) -> bool:
+    return isinstance(node, ast.Constant) and bool(node.value) is True
+
+
+class ParentMap:
+    """child -> parent links for one module tree (ast has none)."""
+
+    def __init__(self, tree: ast.AST):
+        self._parent: dict[ast.AST, ast.AST] = {}
+        for parent in ast.walk(tree):
+            for child in ast.iter_child_nodes(parent):
+                self._parent[child] = parent
+
+    def parent(self, node: ast.AST) -> Optional[ast.AST]:
+        return self._parent.get(node)
+
+    def ancestors(self, node: ast.AST) -> Iterator[ast.AST]:
+        cur = self._parent.get(node)
+        while cur is not None:
+            yield cur
+            cur = self._parent.get(cur)
+
+
+def enclosing_function(pm: ParentMap, node: ast.AST):
+    for anc in pm.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def qualname_of(pm: ParentMap, node: ast.AST) -> str:
+    """``Class.method`` / ``func`` / ``<module>`` for any node."""
+    parts: list[str] = []
+    for anc in pm.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            parts.append(anc.name)
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                         ast.ClassDef)):
+        parts.insert(0, node.name)
+    return ".".join(reversed(parts)) if parts else "<module>"
+
+
+def enclosing_class_name(pm: ParentMap, node: ast.AST) -> Optional[str]:
+    for anc in pm.ancestors(node):
+        if isinstance(anc, ast.ClassDef):
+            return anc.name
+    return None
+
+
+def rel_path(path: Path, root: Path) -> str:
+    try:
+        return path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        return path.as_posix()

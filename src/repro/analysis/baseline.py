@@ -1,0 +1,72 @@
+"""Baseline suppression for reprolint findings.
+
+The baseline is a checked-in JSON list; every entry names a finding key,
+a repo-relative path, the enclosing symbol, and a mandatory ``why``
+justification. Matching is line-number independent so refactors inside
+a function don't churn the file. One entry suppresses every finding
+with the same (key, path, symbol) — intentional patterns usually
+produce a handful of hits in one function.
+
+Workflow:
+  * ``python -m repro.analysis src tests`` — exit 0 iff every finding
+    is baselined (stale entries warn).
+  * ``python -m repro.analysis --write-baseline`` — regenerate entries
+    for current findings with ``why: TODO`` placeholders; fill the
+    justifications in before committing.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+class BaselineError(ValueError):
+    pass
+
+
+def load(path: Path) -> list[dict]:
+    if not path.exists():
+        return []
+    entries = json.loads(path.read_text())
+    if not isinstance(entries, list):
+        raise BaselineError(f"{path}: expected a JSON list")
+    for e in entries:
+        missing = {"key", "path", "symbol", "why"} - set(e)
+        if missing:
+            raise BaselineError(f"{path}: entry {e!r} missing {missing}")
+        if not str(e["why"]).strip() or e["why"] == "TODO":
+            raise BaselineError(
+                f"{path}: entry for {e['key']} at {e['path']}:"
+                f"{e['symbol']} needs a real justification")
+    return entries
+
+
+def apply(findings: list, entries: list[dict]):
+    """Split findings into (active, suppressed) and report stale
+    baseline entries that matched nothing."""
+    index = {(e["key"], e["path"], e["symbol"]) for e in entries}
+    active, suppressed = [], []
+    used = set()
+    for f in findings:
+        if f.baseline_id in index:
+            suppressed.append(f)
+            used.add(f.baseline_id)
+        else:
+            active.append(f)
+    stale = [e for e in entries
+             if (e["key"], e["path"], e["symbol"]) not in used]
+    return active, suppressed, stale
+
+
+def write(path: Path, findings: list) -> None:
+    seen = set()
+    entries = []
+    for f in findings:
+        if f.baseline_id in seen:
+            continue
+        seen.add(f.baseline_id)
+        entries.append({"key": f.key, "path": f.path, "symbol": f.symbol,
+                        "why": "TODO"})
+    path.write_text(json.dumps(entries, indent=2) + "\n")

@@ -1,0 +1,104 @@
+"""reprolint CLI: ``python -m repro.analysis [paths...]``.
+
+Exit codes: 0 clean (or fully baselined), 1 active findings or broken
+baseline, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import concurrency, jit_safety
+from repro.analysis.findings import FINDING_KEYS, Finding
+
+
+def repo_root() -> Path:
+    """src/repro/analysis/cli.py -> repo root (three parents up from
+    the package)."""
+    return Path(__file__).resolve().parents[3]
+
+
+def analyze_paths(paths: list[Path], root: Path) -> list[Finding]:
+    """Run all static passes; sorted, deduplicated findings."""
+    findings = list(concurrency.analyze(paths, root).findings)
+    findings += jit_safety.analyze(paths, root)
+    uniq = {}
+    for f in findings:
+        uniq.setdefault((f.key, f.path, f.line, f.message), f)
+    return sorted(uniq.values(), key=lambda f: (f.path, f.line, f.key))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific concurrency & JIT-safety lint")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to scan (default: src tests)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: <root>/"
+                         f"{baseline_mod.DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write current findings as baseline entries "
+                         "(with TODO justifications) and exit")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline (show everything)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--keys", action="store_true",
+                    help="print the finding-key table and exit")
+    args = ap.parse_args(argv)
+
+    if args.keys:
+        for key, desc in FINDING_KEYS.items():
+            print(f"{key}  {desc}")
+        return 0
+
+    root = repo_root()
+    paths = [Path(p) if Path(p).is_absolute() else root / p
+             for p in args.paths]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"error: no such path(s): {missing}", file=sys.stderr)
+        return 2
+
+    findings = analyze_paths(paths, root)
+
+    bpath = Path(args.baseline) if args.baseline else \
+        root / baseline_mod.DEFAULT_BASELINE
+    if args.write_baseline:
+        baseline_mod.write(bpath, findings)
+        print(f"wrote {len(findings)} finding(s) to {bpath} — fill in "
+              f"the 'why' fields before committing")
+        return 0
+
+    suppressed, stale = [], []
+    if not args.no_baseline:
+        try:
+            entries = baseline_mod.load(bpath)
+        except baseline_mod.BaselineError as e:
+            print(f"baseline error: {e}", file=sys.stderr)
+            return 1
+        findings, suppressed, stale = baseline_mod.apply(findings, entries)
+
+    if args.format == "json":
+        print(json.dumps([f.__dict__ for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.format())
+        for e in stale:
+            print(f"warning: stale baseline entry {e['key']} "
+                  f"{e['path']}:{e['symbol']} (no matching finding)",
+                  file=sys.stderr)
+        tail = f"{len(findings)} finding(s)"
+        if suppressed:
+            tail += f", {len(suppressed)} baselined"
+        if stale:
+            tail += f", {len(stale)} stale baseline entr(ies)"
+        print(f"reprolint: {tail}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,379 @@
+"""Concurrency-discipline checker (RL001-RL004).
+
+Extracts the lock/condvar acquisition graph from ``with lock:`` scopes
+and ``.acquire()`` calls, including one level of light interprocedural
+reasoning: a name-indexed call graph propagates "locks acquirable
+during this call" and "this call can block", so
+``with self._done_cv: req.mark_done(...)`` yields the
+``engine.done_cv -> request.cv`` edge even though the inner acquisition
+lives in another module.
+
+The pass is deliberately name-based (no type inference): methods whose
+names collide with builtin-container operations (``get``/``put``/
+``pop``...) are excluded from propagation so ``self._entries.get(k)``
+under a cache lock does not resolve to the cache's own ``get`` and
+fabricate a self-deadlock.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis import hierarchy
+from repro.analysis.astutils import (ParentMap, attr_chain, call_name,
+                                     enclosing_class_name, is_constant_true,
+                                     iter_python_files, qualname_of, rel_path)
+from repro.analysis.findings import Finding
+
+# Method names too generic to resolve through the name-based call graph
+# (builtin containers / strings / files share them).
+RESOLUTION_DENYLIST = {
+    "get", "put", "pop", "append", "appendleft", "popleft", "add",
+    "remove", "discard", "clear", "update", "keys", "values", "items",
+    "setdefault", "extend", "insert", "index", "count", "copy", "join",
+    "split", "strip", "encode", "decode", "read", "write", "close",
+    "open", "sort", "reverse", "format", "items", "wait", "notify",
+    "notify_all", "acquire", "release", "set", "is_set",
+}
+
+_LOCKY_TAILS = ("lock", "mutex")
+_CV_TAILS = ("_cv", "cond", "condition")
+
+
+def _is_lock_chain(chain: tuple[str, ...]) -> bool:
+    tail = chain[-1].lower()
+    if any(t in tail for t in _LOCKY_TAILS):
+        return True
+    return tail == "cv" or any(tail.endswith(t) for t in _CV_TAILS)
+
+
+@dataclass
+class _Held:
+    name: str          # canonical
+    line: int
+    is_cv: bool
+
+
+@dataclass
+class FunctionRecord:
+    qual: str
+    path: str                       # repo-relative
+    line: int
+    acquisitions: list = field(default_factory=list)   # (canonical, line)
+    direct_edges: list = field(default_factory=list)   # (outer, inner, line)
+    lock_calls: list = field(default_factory=list)     # (outer, callee, line)
+    blocking: list = field(default_factory=list)       # (desc, line, held|None)
+    waits: list = field(default_factory=list)  # (cv, line, predicated, other)
+    calls: set = field(default_factory=set)            # callee name keys
+
+
+@dataclass
+class ModuleScan:
+    path: str
+    abspath: str
+    records: list = field(default_factory=list)
+    # lineno -> canonical lock name, for the runtime sanitizer's
+    # acquisition-site table
+    lock_sites: dict = field(default_factory=dict)
+
+
+def _blocking_desc(node: ast.Call) -> Optional[str]:
+    """Classify a call as a blocking operation (or None)."""
+    chain = call_name(node)
+    if chain is None:
+        return None
+    tail = chain[-1]
+    if chain[-2:] == ("time", "sleep") or chain == ("sleep",):
+        return "time.sleep"
+    if tail == "join" and len(chain) >= 2 and "path" not in chain \
+            and "os" not in chain:
+        # thread/process join; str.join on a constant receiver never
+        # forms a Name chain, and iterable-building args mark str.join
+        if not any(isinstance(a, (ast.GeneratorExp, ast.ListComp,
+                                  ast.Constant)) for a in node.args):
+            return f"{'.'.join(chain)}() join"
+    if tail == "result" and len(chain) >= 2:
+        return f"{'.'.join(chain)}() (future/handle result)"
+    if tail == "get" and len(chain) >= 2 and not node.args:
+        kw = {k.arg for k in node.keywords}
+        if "timeout" not in kw:
+            return f"{'.'.join(chain)}() without timeout"
+    if tail == "wait" and len(chain) >= 2 and not node.args:
+        kw = {k.arg for k in node.keywords}
+        if "timeout" not in kw and not _is_lock_chain(chain[:-1] or chain):
+            return f"{'.'.join(chain)}() without timeout"
+    return None
+
+
+def scan_module(path: Path, root: Path) -> Optional[ModuleScan]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError:
+        return None
+    pm = ParentMap(tree)
+    scan = ModuleScan(path=rel_path(path, root),
+                      abspath=str(path.resolve()))
+
+    funcs = [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+    for fn in funcs:
+        cls = enclosing_class_name(pm, fn)
+        rec = FunctionRecord(qual=qualname_of(pm, fn), path=scan.path,
+                             line=fn.lineno)
+        _walk(fn, rec, cls, pm, scan, held=[])
+        scan.records.append(rec)
+    return scan
+
+
+def _resolve_lock(node: ast.expr, cls: Optional[str]) -> Optional[_Held]:
+    chain = attr_chain(node)
+    if chain is None or not _is_lock_chain(chain):
+        return None
+    name = hierarchy.canonical_lock_name(chain, cls)
+    return _Held(name=name, line=node.lineno,
+                 is_cv=hierarchy.is_condition_name(name, chain[-1]))
+
+
+def _walk(node: ast.AST, rec: FunctionRecord, cls: Optional[str],
+          pm: ParentMap, scan: ModuleScan, held: list) -> None:
+    """Statement walk tracking the held-lock stack; does not descend
+    into nested function/lambda bodies (they execute later)."""
+    for child in ast.iter_child_nodes(node):
+        _walk_stmt(child, rec, cls, pm, scan, held)
+
+
+def _handle_with(child: ast.With, rec: FunctionRecord, cls: Optional[str],
+                 pm: ParentMap, scan: ModuleScan, held: list) -> None:
+    pushed = 0
+    for item in child.items:
+        lk = _resolve_lock(item.context_expr, cls)
+        if lk is None:
+            # non-lock context manager: still scan its expr for calls
+            _walk_stmt(item.context_expr, rec, cls, pm, scan, held)
+            continue
+        rec.acquisitions.append((lk.name, lk.line))
+        scan.lock_sites.setdefault(item.context_expr.lineno, lk.name)
+        if held:
+            rec.direct_edges.append((held[-1].name, lk.name, lk.line))
+        held.append(lk)
+        pushed += 1
+    for stmt in child.body:
+        _walk_stmt(stmt, rec, cls, pm, scan, held)
+    for _ in range(pushed):
+        held.pop()
+
+
+def _walk_stmt(child: ast.AST, rec: FunctionRecord, cls: Optional[str],
+               pm: ParentMap, scan: ModuleScan, held: list) -> None:
+    if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                          ast.Lambda)):
+        return
+    if isinstance(child, ast.With):
+        _handle_with(child, rec, cls, pm, scan, held)
+        return
+    if isinstance(child, ast.Call):
+        _handle_call(child, rec, cls, pm, scan, held)
+    _walk(child, rec, cls, pm, scan, held)
+
+
+def _handle_call(node: ast.Call, rec: FunctionRecord, cls: Optional[str],
+                 pm: ParentMap, scan: ModuleScan, held: list) -> None:
+    chain = call_name(node)
+    holder = held[-1].name if held else None
+
+    if chain is not None:
+        tail = chain[-1]
+        # explicit .acquire() on a lock-like receiver
+        if tail == "acquire" and len(chain) >= 2 \
+                and _is_lock_chain(chain[:-1]):
+            lk = _resolve_lock(node.func.value, cls)
+            if lk is not None:
+                rec.acquisitions.append((lk.name, node.lineno))
+                scan.lock_sites.setdefault(node.lineno, lk.name)
+                if holder:
+                    rec.direct_edges.append((holder, lk.name, node.lineno))
+            return
+        # condvar wait: predicate-loop rule + wait-while-holding-other
+        if tail in ("wait", "wait_for") and len(chain) >= 2 \
+                and _is_lock_chain(chain[:-1]):
+            lk = _resolve_lock(node.func.value, cls)
+            if lk is not None and lk.is_cv:
+                predicated = tail == "wait_for" or _has_predicate_loop(
+                    pm, node)
+                other = next((h.name for h in reversed(held)
+                              if h.name != lk.name), None)
+                rec.waits.append((lk.name, node.lineno, predicated, other))
+                return
+
+    desc = _blocking_desc(node)
+    if desc is not None:
+        rec.blocking.append((desc, node.lineno, holder))
+
+    if chain is not None:
+        key = chain[-1]
+        rec.calls.add(key)
+        if holder is not None:
+            rec.lock_calls.append((holder, key, node.lineno))
+
+
+def _has_predicate_loop(pm: ParentMap, node: ast.AST) -> bool:
+    for anc in pm.ancestors(node):
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return False
+        if isinstance(anc, ast.While) and not is_constant_true(anc.test):
+            return True
+    return False
+
+
+# ------------------------------------------------------------- analysis
+@dataclass
+class ConcurrencyResult:
+    findings: list
+    edges: dict            # (outer, inner) -> list of (path, line, note)
+    lock_sites: dict       # (abspath, lineno) -> canonical name
+
+
+def analyze(paths: list[Path], root: Path) -> ConcurrencyResult:
+    scans = [s for p in iter_python_files(paths)
+             if (s := scan_module(p, root)) is not None]
+    records = [r for s in scans for r in s.records]
+
+    # name-indexed "call graph": def name -> records
+    by_name: dict[str, list[FunctionRecord]] = {}
+    for r in records:
+        name = r.qual.rsplit(".", 1)[-1]
+        if name not in RESOLUTION_DENYLIST:
+            by_name.setdefault(name, []).append(r)
+
+    # fixpoint: locks acquirable during a call to <record>, and whether
+    # the call can block (with a witness description)
+    locks_of = {r.qual: {a for a, _ in r.acquisitions} for r in records}
+    blocks_of = {r.qual: (r.blocking[0][0] if r.blocking else
+                          ("waits on " + r.waits[0][0] if r.waits else None))
+                 for r in records}
+    changed = True
+    while changed:
+        changed = False
+        for r in records:
+            for callee in r.calls:
+                for tgt in by_name.get(callee, ()):
+                    extra = locks_of[tgt.qual] - locks_of[r.qual]
+                    if extra:
+                        locks_of[r.qual] |= extra
+                        changed = True
+                    if blocks_of[tgt.qual] and not blocks_of[r.qual]:
+                        blocks_of[r.qual] = (f"{callee}() -> "
+                                             f"{blocks_of[tgt.qual]}")
+                        changed = True
+
+    # assemble the static edge set (direct + through calls)
+    edges: dict[tuple[str, str], list] = {}
+    for r in records:
+        for outer, inner, line in r.direct_edges:
+            edges.setdefault((outer, inner), []).append(
+                (r.path, line, f"in {r.qual}"))
+        for outer, callee, line in r.lock_calls:
+            for tgt in by_name.get(callee, ()):
+                for inner in locks_of[tgt.qual]:
+                    if inner != outer:
+                        edges.setdefault((outer, inner), []).append(
+                            (r.path, line,
+                             f"in {r.qual} via {callee}()"))
+
+    findings: list[Finding] = []
+    declared = hierarchy.declared_edge_set()
+
+    # RL004: statically observed edge not in the declared hierarchy
+    for (outer, inner), wits in sorted(edges.items()):
+        if outer == inner:
+            continue    # reported under RL001 when non-reentrant
+        if (outer, inner) not in declared:
+            path, line, note = wits[0]
+            findings.append(Finding(
+                "RL004", path, line, note.split()[1],
+                f"undeclared lock edge {outer} -> {inner} ({note}); "
+                f"declare it in analysis/hierarchy.py or baseline it"))
+
+    # RL001: cycles over declared + observed edges; self-edges on
+    # non-reentrant locks count (Conditions are RLock-backed)
+    graph: dict[str, set[str]] = {}
+    for a, b in list(edges) + list(declared):
+        graph.setdefault(a, set()).add(b)
+    for (outer, inner), wits in sorted(edges.items()):
+        if outer == inner:
+            if not hierarchy.is_condition_name(outer, outer.split(".")[-1]):
+                path, line, note = wits[0]
+                findings.append(Finding(
+                    "RL001", path, line, note.split()[1],
+                    f"self-acquisition of non-reentrant {outer} ({note})"))
+            continue
+        if _reaches(graph, inner, outer):
+            path, line, note = wits[0]
+            findings.append(Finding(
+                "RL001", path, line, note.split()[1],
+                f"lock-order cycle: edge {outer} -> {inner} ({note}) "
+                f"closes a cycle back to {outer}"))
+
+    # RL002: blocking while holding a lock (direct + through calls)
+    for r in records:
+        for desc, line, holder in r.blocking:
+            if holder is not None:
+                findings.append(Finding(
+                    "RL002", r.path, line, r.qual,
+                    f"blocking {desc} while holding {holder}"))
+        for cv, line, _pred, other in r.waits:
+            if other is not None:
+                findings.append(Finding(
+                    "RL002", r.path, line, r.qual,
+                    f"waiting on {cv} while holding {other} "
+                    f"(wait only releases {cv})"))
+        for outer, callee, line in r.lock_calls:
+            for tgt in by_name.get(callee, ()):
+                why = blocks_of[tgt.qual]
+                if why and not locks_of[tgt.qual]:
+                    # calls that also take locks are covered by the edge
+                    # rules; pure-blocking callees are flagged here
+                    findings.append(Finding(
+                        "RL002", r.path, line, r.qual,
+                        f"call to {callee}() may block while holding "
+                        f"{outer}: {why}"))
+                    break
+
+    # RL003: condvar wait without a predicate loop
+    for r in records:
+        for cv, line, predicated, _other in r.waits:
+            if not predicated:
+                findings.append(Finding(
+                    "RL003", r.path, line, r.qual,
+                    f"{cv}.wait() is not governed by a predicate loop"))
+
+    sites = {}
+    for s in scans:
+        for line, name in s.lock_sites.items():
+            sites[(s.abspath, line)] = name
+    return ConcurrencyResult(findings=findings, edges=edges,
+                             lock_sites=sites)
+
+
+def _reaches(graph: dict, src: str, dst: str) -> bool:
+    seen, stack = set(), [src]
+    while stack:
+        cur = stack.pop()
+        if cur == dst:
+            return True
+        if cur in seen:
+            continue
+        seen.add(cur)
+        stack.extend(graph.get(cur, ()))
+    return False
+
+
+def collect_lock_sites(paths: list[Path], root: Path) -> dict:
+    """(abspath, lineno) -> canonical lock name, for the sanitizer."""
+    return analyze(paths, root).lock_sites
+
+
+def static_edge_names(paths: list[Path], root: Path) -> set:
+    """Name-level static edge set, for runtime cross-validation."""
+    return set(analyze(paths, root).edges)

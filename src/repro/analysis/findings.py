@@ -1,0 +1,48 @@
+"""Finding record + the registry of keyed rules reprolint can emit."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+#: key -> one-line rule description (the README table is generated from
+#: the same text; keep these short and declarative).
+FINDING_KEYS: dict[str, str] = {
+    "RL001": "lock-order cycle: acquisition edges form a cycle with the "
+             "declared hierarchy",
+    "RL002": "blocking call while holding a lock (sleep/join/result/"
+             "untimed queue.get, or waiting on a condvar while holding "
+             "a different lock)",
+    "RL003": "condvar wait() not governed by a predicate loop "
+             "(wakeups are advisory; waits must re-check their condition)",
+    "RL004": "lock acquisition edge not declared in the hierarchy "
+             "registry (declare it in analysis/hierarchy.py or baseline it)",
+    "RJ101": "host sync inside jit-traced code (.item()/np.asarray/"
+             "float()/int() on tracers forces a device round-trip)",
+    "RJ102": "jit closure captures a mutable/reassigned variable "
+             "(the trace freezes the value; later rebinds are ignored)",
+    "RJ103": "jit call site with shape inputs that do not flow through "
+             "a bucket ladder (every new extent compiles a new program)",
+}
+
+
+@dataclass
+class Finding:
+    """One analyzer hit, keyed and locatable.
+
+    ``symbol`` is the enclosing ``Class.method`` / function (or
+    ``<module>``) — baseline entries match on (key, path, symbol) so
+    they survive line-number churn.
+    """
+    key: str
+    path: str            # repo-relative, forward slashes
+    line: int
+    symbol: str
+    message: str
+    extra: dict = field(default_factory=dict)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: {self.key} [{self.symbol}] " \
+               f"{self.message}"
+
+    @property
+    def baseline_id(self) -> tuple[str, str, str]:
+        return (self.key, self.path, self.symbol)

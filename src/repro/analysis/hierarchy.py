@@ -1,0 +1,134 @@
+"""Declared lock hierarchy for the serving layer.
+
+This registry is the single source of truth for BOTH checkers: the
+static concurrency pass (cycles, undeclared edges) and the runtime
+lock-order sanitizer assert observed acquisition edges against it.
+
+An edge ``(outer, inner)`` declares that a thread may acquire ``inner``
+while holding ``outer``. The graph must stay acyclic — adding an edge
+that closes a cycle is a design bug, not a registry update.
+
+Canonical names: lock attribute expressions are mapped to short stable
+names (``self._done_cv`` -> ``engine.done_cv``) so the same lock is one
+node regardless of which alias reaches it. Locks the registry does not
+know are auto-named ``<Class>.<attr>`` — nesting them immediately
+surfaces as an undeclared edge (RL004), which forces either a registry
+entry here or a justified baseline entry.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+# ---------------------------------------------------------------- names
+# (enclosing class, attribute) -> canonical name. Most precise rule,
+# wins over the tail rules below.
+CLASS_ALIASES: dict[tuple[str, str], str] = {
+    ("EngineBase", "_done_cv"): "engine.done_cv",
+    ("ServeRequest", "_cv"): "request.cv",
+    ("ServeStats", "lock"): "stats.lock",
+    ("PagedKVState", "lock"): "kv.lock",
+    ("PagedKVState", "pool_lock"): "kv.pool_lock",
+    ("EncodeStage", "_lock"): "encode.lock",
+    ("PsiEP", "_lock"): "psi_ep.lock",
+    ("MMTokenCache", "_lock"): "mm_cache.lock",
+    ("LoadBalancer", "_lock"): "lb.lock",
+    ("LBTicket", "_lock"): "ticket.lock",
+    ("LoadEstimator", "_lock"): "load_estimator.lock",
+    ("InstanceWorker", "_mig_lock"): "instance.mig_lock",
+    ("FakeEngine", "_lock"): "fake_engine.lock",
+}
+
+# (owner attribute, lock attribute) -> canonical name, for access from
+# outside the owning class: ``self.kv.lock`` / ``inst._stats.lock``.
+OWNER_ALIASES: dict[tuple[str, str], str] = {
+    ("kv", "lock"): "kv.lock",
+    ("_kv", "lock"): "kv.lock",
+    ("kv", "pool_lock"): "kv.pool_lock",
+    ("_kv", "pool_lock"): "kv.pool_lock",
+    ("stats", "lock"): "stats.lock",
+    ("_stats", "lock"): "stats.lock",
+}
+
+# Unambiguous attribute tails (one lock repo-wide bears the name).
+TAIL_ALIASES: dict[str, str] = {
+    "_done_cv": "engine.done_cv",
+    "_cv": "request.cv",
+    "_mm_lock": "engine.mm_lock",
+    "_mig_lock": "instance.mig_lock",
+    "pool_lock": "kv.pool_lock",
+}
+
+#: canonical names known to be Conditions (RL003 predicate-loop rule
+#: applies; Locks and Events are exempt).
+CONDITIONS: set[str] = {"engine.done_cv", "request.cv"}
+
+# ---------------------------------------------------------------- edges
+#: Declared acquisition order (outer may hold while taking inner), with
+#: the code site that motivates each edge.
+EDGES: list[tuple[str, str]] = [
+    # engine._finish/_fail/abort: _collect takes _done_cv, and the lock
+    # order is _done_cv -> req._cv everywhere (serving/engine.py).
+    ("engine.done_cv", "request.cv"),
+    # paged stages account pool pressure while holding the block-manager
+    # lock: stage admission + KVBlockManager's on_stat=stats.bump
+    # callback (serving/stages.py), cluster migration admit
+    # (serving/cluster.py).
+    ("kv.lock", "stats.lock"),
+    # EngineBase.submit bumps mm-cache hit counters inside the in-flight
+    # dedup critical section (serving/engine.py).
+    ("engine.mm_lock", "stats.lock"),
+    # EngineBase.submit advances a dedup waiter to ENCODING while
+    # holding the in-flight registry lock (serving/engine.py);
+    # request.cv is a leaf, nothing is acquired under it.
+    ("engine.mm_lock", "request.cv"),
+    # PagedDecodeStage._prepare preempts a slot (reset_generation takes
+    # the request condvar) inside the pool critical section
+    # (serving/stages.py).
+    ("kv.lock", "request.cv"),
+]
+
+
+def canonical_lock_name(chain: tuple[str, ...],
+                        enclosing_class: Optional[str]) -> str:
+    """Map a lock attribute chain to its canonical node name.
+
+    Resolution order: class-qualified, owner-qualified, unambiguous
+    tail, then the ``<Class>.<attr>`` auto-name fallback.
+    """
+    tail = chain[-1]
+    # self.X inside a registered class
+    if enclosing_class and len(chain) == 2 and chain[0] in ("self", "cls"):
+        hit = CLASS_ALIASES.get((enclosing_class, tail))
+        if hit:
+            return hit
+    if len(chain) >= 2:
+        hit = OWNER_ALIASES.get((chain[-2], tail))
+        if hit:
+            return hit
+    hit = TAIL_ALIASES.get(tail)
+    if hit:
+        return hit
+    owner = enclosing_class or (chain[-2] if len(chain) >= 2 else chain[0])
+    if owner in ("self", "cls"):
+        owner = enclosing_class or "self"
+    return f"{owner}.{tail}"
+
+
+def is_condition_name(canonical: str, raw_tail: str) -> bool:
+    """Conditions get the RL003 predicate rule; recognize registered
+    names plus the repo's ``*_cv``/``*cond*`` naming convention."""
+    if canonical in CONDITIONS:
+        return True
+    t = raw_tail.lower()
+    return t.endswith("_cv") or t == "cv" or "cond" in t
+
+
+def declared_edge_set() -> set[tuple[str, str]]:
+    return set(EDGES)
+
+
+def hierarchy_graph() -> dict[str, set[str]]:
+    g: dict[str, set[str]] = {}
+    for a, b in EDGES:
+        g.setdefault(a, set()).add(b)
+    return g

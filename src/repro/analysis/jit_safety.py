@@ -1,0 +1,441 @@
+"""JIT-safety checker (RJ101-RJ103).
+
+Three rules, all heuristic but tuned to this repo's idioms:
+
+* RJ101 — host syncs inside jit-traced code. Roots are ``@jax.jit``
+  (or ``@partial(jax.jit, ...)``) functions, lambdas wrapped in
+  ``jax.jit(...)`` (the ``PagedJitKit`` programs), and everything they
+  reach through the name-indexed call graph. ``.item()``, ``np.*``
+  conversions, ``float()/int()`` on non-shape values and
+  ``device_get/block_until_ready`` force a device round-trip per trace.
+
+* RJ102 — jit closures over mutable state: a wrapped lambda/function
+  capturing a name that is reassigned after the wrap (or a loop
+  variable) traces one value and silently ignores the rebind.
+
+* RJ103 — unbucketed jit call sites. A call to a known-jitted callable
+  whose arguments build arrays with request-dependent extents
+  (``asarray`` of a dynamic sequence, ``zeros/full`` with a dynamic
+  shape, open ``arange``) compiles a new program per distinct extent.
+  Extents are considered SAFE when they flow through an identifier
+  mentioning ``bucket``/``pad`` (the runner's ladder idiom), come from
+  ``self``/config attributes, literals, or ``x.shape`` (trace-static).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+from repro.analysis.astutils import (ParentMap, attr_chain, call_name,
+                                     enclosing_function, iter_python_files,
+                                     qualname_of, rel_path)
+from repro.analysis.concurrency import RESOLUTION_DENYLIST
+from repro.analysis.findings import Finding
+
+_NUMPY_ROOTS = {"np", "jnp", "numpy", "onp"}
+_HOST_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+_ARRAY_CTORS = {"asarray", "array"}
+_SHAPE_CTORS = {"zeros", "ones", "full", "empty"}
+
+
+def _is_jit_expr(node: ast.expr) -> bool:
+    """``jax.jit(...)`` / ``jit(...)`` / ``partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    chain = call_name(node)
+    if chain and chain[-1] == "jit":
+        return True
+    if chain and chain[-1] == "partial" and node.args:
+        inner = attr_chain(node.args[0])
+        return bool(inner and inner[-1] == "jit")
+    return False
+
+
+@dataclass
+class _Module:
+    path: str
+    tree: ast.AST
+    pm: ParentMap
+
+
+@dataclass
+class JitIndex:
+    """Names bound to jitted callables, plus traced-root function
+    bodies (for the RJ101 scan)."""
+    jitted_tails: set = field(default_factory=set)
+    roots: list = field(default_factory=list)   # (module, node, qual)
+
+
+def _build_index(mods: list[_Module]) -> JitIndex:
+    idx = JitIndex()
+    assigns = []    # (lhs_tail, rhs_tail) for alias propagation
+    for m in mods:
+        for node in ast.walk(m.tree):
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    if _is_jit_expr(dec) or (
+                            (c := attr_chain(dec)) and c[-1] == "jit"):
+                        idx.jitted_tails.add(node.name)
+                        idx.roots.append((m, node,
+                                          qualname_of(m.pm, node)))
+            if isinstance(node, ast.Assign) and _is_jit_expr(node.value):
+                for tgt in node.targets:
+                    chain = attr_chain(tgt)
+                    if chain:
+                        idx.jitted_tails.add(chain[-1])
+                wrapped = node.value.args[0] if node.value.args else None
+                if isinstance(wrapped, ast.Lambda):
+                    idx.roots.append((m, wrapped,
+                                      qualname_of(m.pm, node)))
+                elif wrapped is not None and \
+                        (wc := attr_chain(wrapped)) is not None:
+                    idx.jitted_tails.add(wc[-1])
+            elif isinstance(node, ast.Assign):
+                # plain aliases, incl. guarded ones:
+                # self._inject_fn = kit.pool_inject if kit else None
+                rhs_exprs = [node.value]
+                if isinstance(node.value, ast.IfExp):
+                    rhs_exprs = [node.value.body, node.value.orelse]
+                for rv in rhs_exprs:
+                    rhs = attr_chain(rv)
+                    if rhs:
+                        for tgt in node.targets:
+                            lhs = attr_chain(tgt)
+                            if lhs:
+                                assigns.append((lhs[-1], rhs[-1]))
+    # propagate jittedness through plain alias assignments
+    # (self._step = kit.decode_step)
+    changed = True
+    while changed:
+        changed = False
+        for lhs, rhs in assigns:
+            if rhs in idx.jitted_tails and lhs not in idx.jitted_tails:
+                idx.jitted_tails.add(lhs)
+                changed = True
+    return idx
+
+
+# ------------------------------------------------------ RJ101 host sync
+def _host_sync_hits(body_nodes) -> list[tuple[int, str]]:
+    hits = []
+    for node in body_nodes:
+        if not isinstance(node, ast.Call):
+            continue
+        chain = call_name(node)
+        if chain is None:
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _HOST_SYNC_ATTRS:
+                hits.append((node.lineno, f".{node.func.attr}()"))
+            continue
+        tail = chain[-1]
+        if tail in _HOST_SYNC_ATTRS and len(chain) >= 2:
+            hits.append((node.lineno, f".{tail}()"))
+        elif chain[0] in ("np", "numpy", "onp") and tail in (
+                _ARRAY_CTORS | _SHAPE_CTORS | {"concatenate", "stack"}):
+            hits.append((node.lineno,
+                         f"{'.'.join(chain)}() materializes on host"))
+        elif chain[-2:] == ("jax", "device_get") or tail == "device_get":
+            hits.append((node.lineno, "jax.device_get()"))
+        elif chain == ("float",) or chain == ("int",):
+            # only direct casts of a value (not arithmetic over config
+            # scalars, which is trace-static)
+            arg = node.args[0] if node.args else None
+            if isinstance(arg, (ast.Name, ast.Attribute, ast.Subscript)) \
+                    and not _shape_like(arg):
+                hits.append((node.lineno, f"{tail}() on a traced value"))
+    return hits
+
+
+def _shape_like(node: ast.expr) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in ("shape",
+                                                           "ndim", "size"):
+            return True
+        if isinstance(sub, ast.Call):
+            c = call_name(sub)
+            if c and c[-1] == "len":
+                return True
+    return False
+
+
+def _body_calls(node) -> set[str]:
+    """Callee names a traced body can reach. Only bare-name calls and
+    module-qualified ``mod.func(...)`` count — method dispatch
+    (``self.x()``/``obj.m()``) does not propagate tracedness, since
+    generic method tails (``step``/``execute``) would otherwise smear
+    the traced set over the whole host-side engine."""
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            c = call_name(sub)
+            if c and len(c) <= 2 and c[0] not in ("self", "cls") \
+                    and c[-1] not in RESOLUTION_DENYLIST:
+                out.add(c[-1])
+    return out
+
+
+# --------------------------------------------------- RJ103 shape flow
+class _ScopeInfo:
+    """Per-function dataflow for the dynamic-extent heuristic."""
+
+    def __init__(self, fn: Optional[ast.AST]):
+        self.params: set[str] = set()
+        self.rhs: dict[str, list[ast.expr]] = {}
+        self.dict_items: dict[str, list[ast.expr]] = {}
+        self.bucketed: set[str] = set()
+        if fn is None or isinstance(fn, ast.Lambda):
+            return
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if a.arg not in ("self", "cls"):
+                self.params.add(a.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        self.rhs.setdefault(tgt.id, []).append(node.value)
+                        if _mentions_bucket(node.value):
+                            self.bucketed.add(tgt.id)
+                        if isinstance(node.value, ast.Dict):
+                            self.dict_items.setdefault(tgt.id, []).extend(
+                                v for v in node.value.values
+                                if v is not None)
+                    elif isinstance(tgt, ast.Subscript) and \
+                            isinstance(tgt.value, ast.Name):
+                        self.dict_items.setdefault(
+                            tgt.value.id, []).append(node.value)
+            elif isinstance(node, (ast.Tuple, ast.List)):
+                pass
+        # bucketedness flows through assignments: a value computed from
+        # a bucketed/padded value is itself extent-stable
+        changed = True
+        while changed:
+            changed = False
+            for name, exprs in self.rhs.items():
+                if name in self.bucketed:
+                    continue
+                for e in exprs:
+                    if {n for n, _ in _names_skipping_shape(e)} \
+                            & self.bucketed:
+                        self.bucketed.add(name)
+                        changed = True
+                        break
+
+    def is_dynamic(self, expr: ast.expr, _depth: int = 0) -> bool:
+        """Does this expression's VALUE depend on request-sized data?
+        (``.shape`` chains are trace-static; bucketed locals are safe.)"""
+        if _depth > 4:
+            return False
+        for name, chain in _names_skipping_shape(expr):
+            if name in ("self", "cls"):
+                continue
+            if name in self.bucketed:
+                continue
+            if name in self.params:
+                return True
+            for r in self.rhs.get(name, ()):
+                if self.is_dynamic(r, _depth + 1):
+                    return True
+        return False
+
+
+def _mentions_bucket(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        ident = None
+        if isinstance(sub, ast.Name):
+            ident = sub.id
+        elif isinstance(sub, ast.Attribute):
+            ident = sub.attr
+        elif isinstance(sub, ast.FunctionDef):
+            ident = sub.name
+        if ident and ("bucket" in ident.lower() or "pad" in ident.lower()):
+            return True
+    return False
+
+
+def _names_skipping_shape(expr: ast.expr):
+    """Yield (root name, chain) for identifier chains under ``expr``,
+    skipping any subtree under an ``x.shape``/``len()``-style access
+    (those are static at trace boundaries)."""
+    out = []
+
+    def visit(node):
+        if isinstance(node, ast.Attribute) and node.attr in ("shape",
+                                                             "ndim",
+                                                             "dtype"):
+            return
+        chain = attr_chain(node) if isinstance(
+            node, (ast.Attribute, ast.Name)) else None
+        if chain is not None:
+            out.append((chain[0], chain))
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(expr)
+    return out
+
+
+def _ctor_findings(scope: _ScopeInfo, expr: ast.expr) -> list[tuple[int,
+                                                                    str]]:
+    """Dynamic-extent array constructors inside one argument expr."""
+    hits = []
+    for node in ast.walk(expr):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = call_name(node)
+        if not chain or len(chain) < 2 or chain[0] not in _NUMPY_ROOTS:
+            continue
+        tail = chain[-1]
+        if tail in _ARRAY_CTORS and node.args:
+            arg = node.args[0]
+            if isinstance(arg, (ast.List, ast.Tuple, ast.Constant)):
+                continue            # literal structure: fixed length
+            if scope.is_dynamic(arg):
+                hits.append((node.lineno,
+                             f"{'.'.join(chain)}() over a request-sized "
+                             f"sequence"))
+        elif tail in _SHAPE_CTORS and node.args:
+            shape = node.args[0]
+            if scope.is_dynamic(shape):
+                hits.append((node.lineno,
+                             f"{'.'.join(chain)}() with a dynamic shape"))
+        elif tail == "arange":
+            if _arange_dynamic(scope, node):
+                hits.append((node.lineno,
+                             f"{'.'.join(chain)}() with a dynamic length"))
+    return hits
+
+
+def _arange_dynamic(scope: _ScopeInfo, node: ast.Call) -> bool:
+    args = node.args
+    if not args:
+        return False
+    if len(args) == 1:
+        return scope.is_dynamic(args[0])
+    start, stop = args[0], args[1]
+    # arange(t0, t0 + C): length C — static iff C is
+    if isinstance(stop, ast.BinOp) and isinstance(stop.op, ast.Add):
+        if ast.dump(stop.left) == ast.dump(start):
+            return scope.is_dynamic(stop.right)
+        if ast.dump(stop.right) == ast.dump(start):
+            return scope.is_dynamic(stop.left)
+    return scope.is_dynamic(start) or scope.is_dynamic(stop)
+
+
+# -------------------------------------------------------------- analyze
+def analyze(paths: list[Path], root: Path) -> list[Finding]:
+    mods = []
+    for p in iter_python_files(paths):
+        try:
+            tree = ast.parse(p.read_text(), filename=str(p))
+        except SyntaxError:
+            continue
+        mods.append(_Module(path=rel_path(p, root), tree=tree,
+                            pm=ParentMap(tree)))
+    idx = _build_index(mods)
+    findings: list[Finding] = []
+
+    # RJ101: host syncs in traced roots + everything they call (one
+    # fixpoint over the name-indexed call graph)
+    # tracedness only propagates into module-level functions (methods
+    # are host-side orchestration in this codebase; traced helpers are
+    # free functions in dense/kernels/optim)
+    defs_by_name: dict[str, list] = {}
+    for m in mods:
+        for node in m.tree.body:
+            if isinstance(node, ast.FunctionDef):
+                defs_by_name.setdefault(node.name, []).append((m, node))
+    traced: dict[int, tuple] = {id(n): (m, n, q) for m, n, q in idx.roots}
+    frontier = list(traced.values())
+    while frontier:
+        m, node, qual = frontier.pop()
+        for callee in _body_calls(node):
+            for cm, cnode in defs_by_name.get(callee, ()):
+                if id(cnode) not in traced:
+                    cq = qualname_of(cm.pm, cnode)
+                    traced[id(cnode)] = (cm, cnode, cq)
+                    frontier.append((cm, cnode, cq))
+    for m, node, qual in traced.values():
+        body = list(ast.walk(node))
+        for line, desc in _host_sync_hits(body):
+            findings.append(Finding(
+                "RJ101", m.path, line, qual,
+                f"host sync in jit-traced code: {desc}"))
+
+    # RJ102: mutable/loop captures in jit wraps
+    for m in mods:
+        for node in ast.walk(m.tree):
+            if not (isinstance(node, ast.Call) and _is_jit_expr(node)
+                    and node.args):
+                continue
+            wrapped = node.args[0]
+            if not isinstance(wrapped, ast.Lambda):
+                continue
+            fn = enclosing_function(m.pm, node)
+            if fn is None:
+                continue
+            params = {a.arg for a in wrapped.args.args}
+            captured = {n.id for n in ast.walk(wrapped.body)
+                        if isinstance(n, ast.Name)} - params
+            qual = qualname_of(m.pm, fn)
+            for cap in sorted(captured):
+                for sub in ast.walk(fn):
+                    if isinstance(sub, (ast.Assign, ast.AugAssign)) \
+                            and sub.lineno > node.lineno:
+                        tgts = sub.targets if isinstance(
+                            sub, ast.Assign) else [sub.target]
+                        if any(isinstance(t, ast.Name) and t.id == cap
+                               for t in tgts):
+                            findings.append(Finding(
+                                "RJ102", m.path, node.lineno, qual,
+                                f"jit lambda captures '{cap}' which is "
+                                f"reassigned at line {sub.lineno} (the "
+                                f"trace freezes the old value)"))
+                            break
+                for anc in m.pm.ancestors(node):
+                    if isinstance(anc, ast.For) and \
+                            isinstance(anc.target, ast.Name) and \
+                            anc.target.id == cap:
+                        findings.append(Finding(
+                            "RJ102", m.path, node.lineno, qual,
+                            f"jit lambda captures loop variable '{cap}' "
+                            f"(every wrap traces the same last value)"))
+
+    # RJ103: unbucketed shape inputs at jit call sites
+    for m in mods:
+        for node in ast.walk(m.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = call_name(node)
+            if not chain or chain[-1] not in idx.jitted_tails:
+                continue
+            if _is_jit_expr(node):
+                continue            # the wrap itself, not a call
+            fn = enclosing_function(m.pm, node)
+            scope = _ScopeInfo(fn)
+            qual = qualname_of(m.pm, fn) if fn is not None else "<module>"
+            exprs = list(node.args) + [k.value for k in node.keywords]
+            seen_names = set()
+            expanded = []
+            for e in exprs:
+                expanded.append(e)
+                if isinstance(e, ast.Name) and e.id not in seen_names:
+                    seen_names.add(e.id)
+                    expanded.extend(scope.dict_items.get(e.id, ()))
+                    expanded.extend(scope.rhs.get(e.id, ()))
+            reported = set()
+            for e in expanded:
+                for line, desc in _ctor_findings(scope, e):
+                    if (line, desc) in reported:
+                        continue
+                    reported.add((line, desc))
+                    findings.append(Finding(
+                        "RJ103", m.path, line, qual,
+                        f"jit call to '{chain[-1]}' with unbucketed "
+                        f"shape input: {desc} (compiles per extent)"))
+    return findings

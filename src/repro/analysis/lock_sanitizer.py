@@ -1,0 +1,361 @@
+"""Runtime lock-order sanitizer (opt-in: ``REPRO_LOCK_SANITIZER=1``).
+
+Patches ``threading.Lock/RLock/Condition`` so every acquisition records
+a per-thread stack. Acquisition SITES (file, line) are mapped to the
+same canonical lock names the static pass uses — the site table is
+built by running :mod:`repro.analysis.concurrency` over the repo at
+install time — and every named->named nesting becomes an observed
+edge. An edge that closes a cycle against the declared hierarchy
+(:mod:`repro.analysis.hierarchy`) plus everything witnessed so far is a
+violation: recorded always, raised immediately when
+``REPRO_LOCK_SANITIZER=raise``.
+
+Locks acquired at unnamed sites (queue internals, executors) are
+tracked for nesting but produce no edges, so third-party machinery adds
+no noise. ``dump()`` writes the witnessed name-level graph for
+cross-validation against the static edge set
+(``tests/test_analysis_crossval.py``).
+
+Install BEFORE the serving modules create their locks (the pytest hook
+in ``tests/conftest.py`` does this at collection time); locks created
+earlier stay unpatched and invisible, which is the right default for
+jax/stdlib internals.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import threading
+from pathlib import Path
+
+import _thread
+
+_REAL_LOCK = _thread.allocate_lock
+_REAL_RLOCK = threading.RLock
+_REAL_CONDITION = threading.Condition
+
+_SKIP_SUBSTRINGS = (
+    os.sep + "threading.py",
+    os.sep + "queue.py",
+    os.sep + "lock_sanitizer.py",
+    "concurrent" + os.sep + "futures",
+    os.sep + "_weakrefset.py",
+)
+
+
+class LockOrderViolation(RuntimeError):
+    pass
+
+
+class _ThreadState(threading.local):
+    def __init__(self):
+        self.stack = []        # [(obj_id, name_or_None)]
+        self.depth = {}        # obj_id -> reentry count
+
+
+class Sanitizer:
+    """Shared sanitizer state: site names, witnessed graph, violations."""
+
+    def __init__(self, site_names: dict, declared_edges: set,
+                 raise_on_violation: bool = False):
+        self.site_names = site_names          # (abspath, line) -> name
+        self.declared = set(declared_edges)
+        self.graph: dict[str, set] = {}
+        for a, b in self.declared:
+            self.graph.setdefault(a, set()).add(b)
+        self.witnessed: set = set()           # (outer, inner)
+        self.violations: list[str] = []
+        self.acquisitions = 0
+        self._meta = _REAL_LOCK()             # leaf; guards graph state
+        self._tls = _ThreadState()
+        self.raise_on_violation = raise_on_violation
+
+    # ---------------------------------------------------------- events
+    def _site_name(self):
+        f = sys._getframe(2)
+        while f is not None:
+            fname = f.f_code.co_filename
+            if not any(s in fname for s in _SKIP_SUBSTRINGS):
+                return self.site_names.get(
+                    (os.path.abspath(fname), f.f_lineno))
+            f = f.f_back
+        return None
+
+    def on_acquired(self, obj) -> None:
+        tls = self._tls
+        oid = id(obj)
+        tls.depth[oid] = tls.depth.get(oid, 0) + 1
+        if tls.depth[oid] > 1:
+            return                             # reentrant re-acquire
+        name = self._site_name()
+        self._record_push(oid, name)
+
+    def _record_push(self, oid, name) -> None:
+        tls = self._tls
+        self.acquisitions += 1
+        if name is not None:
+            holder = next((n for _o, n in reversed(tls.stack)
+                           if n is not None and n != name), None)
+            if holder is not None:
+                self._record_edge(holder, name)
+        tls.stack.append((oid, name))
+
+    def _record_edge(self, outer: str, inner: str) -> None:
+        with self._meta:
+            if (outer, inner) in self.witnessed:
+                return
+            if self._reaches(inner, outer):
+                msg = (f"lock-order violation: acquiring {inner} while "
+                       f"holding {outer} closes a cycle against the "
+                       f"declared+witnessed hierarchy")
+                self.violations.append(msg)
+                if self.raise_on_violation:
+                    raise LockOrderViolation(msg)
+                return
+            self.witnessed.add((outer, inner))
+            self.graph.setdefault(outer, set()).add(inner)
+
+    def _reaches(self, src: str, dst: str) -> bool:
+        seen, stack = set(), [src]
+        while stack:
+            cur = stack.pop()
+            if cur == dst:
+                return True
+            if cur not in seen:
+                seen.add(cur)
+                stack.extend(self.graph.get(cur, ()))
+        return False
+
+    def on_released(self, obj) -> None:
+        tls = self._tls
+        oid = id(obj)
+        d = tls.depth.get(oid, 0)
+        if d > 1:
+            tls.depth[oid] = d - 1
+            return
+        tls.depth.pop(oid, None)
+        for i in range(len(tls.stack) - 1, -1, -1):
+            if tls.stack[i][0] == oid:
+                del tls.stack[i]
+                return
+
+    def suspend(self, obj):
+        """Condition.wait releases its lock: pop the entry, return the
+        name so resume can re-record the re-acquisition."""
+        tls = self._tls
+        oid = id(obj)
+        name = None
+        for i in range(len(tls.stack) - 1, -1, -1):
+            if tls.stack[i][0] == oid:
+                name = tls.stack[i][1]
+                del tls.stack[i]
+                break
+        depth, tls.depth[oid] = tls.depth.get(oid, 1), 0
+        tls.depth.pop(oid, None)
+        return name, depth
+
+    def resume(self, obj, saved) -> None:
+        name, depth = saved
+        tls = self._tls
+        tls.depth[id(obj)] = depth
+        self._record_push(id(obj), name)
+
+    # --------------------------------------------------------- reports
+    def report(self) -> str:
+        lines = [f"lock sanitizer: {self.acquisitions} acquisitions, "
+                 f"{len(self.witnessed)} witnessed edge(s), "
+                 f"{len(self.violations)} violation(s)"]
+        lines += [f"  {a} -> {b}" for a, b in sorted(self.witnessed)]
+        lines += [f"  VIOLATION: {v}" for v in self.violations]
+        return "\n".join(lines)
+
+    def dump(self, path) -> None:
+        payload = {
+            "edges": sorted(list(e) for e in self.witnessed),
+            "declared": sorted(list(e) for e in self.declared),
+            "violations": list(self.violations),
+            "acquisitions": self.acquisitions,
+        }
+        Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+
+_ACTIVE: Sanitizer | None = None
+
+
+class _SanLock:
+    """Drop-in ``threading.Lock`` recording acquisition order."""
+
+    __slots__ = ("_lk",)
+
+    def __init__(self):
+        self._lk = _REAL_LOCK()
+
+    def acquire(self, blocking=True, timeout=-1):
+        got = self._lk.acquire(blocking, timeout)
+        if got and _ACTIVE is not None:
+            _ACTIVE.on_acquired(self)
+        return got
+
+    acquire_lock = acquire
+
+    def release(self):
+        if _ACTIVE is not None:
+            _ACTIVE.on_released(self)
+        self._lk.release()
+
+    release_lock = release
+
+    def locked(self):
+        return self._lk.locked()
+
+    def _at_fork_reinit(self):
+        self._lk._at_fork_reinit()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+    def __repr__(self):
+        return f"<_SanLock {self._lk!r}>"
+
+
+class _SanRLock:
+    """Drop-in ``threading.RLock`` (reentry collapsed to one entry)."""
+
+    __slots__ = ("_lk",)
+
+    def __init__(self):
+        self._lk = _REAL_RLOCK()
+
+    def acquire(self, blocking=True, timeout=-1):
+        got = self._lk.acquire(blocking, timeout)
+        if got and _ACTIVE is not None:
+            _ACTIVE.on_acquired(self)
+        return got
+
+    def release(self):
+        if _ACTIVE is not None:
+            _ACTIVE.on_released(self)
+        self._lk.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+
+    # Condition integration (threading.Condition probes for these)
+    def _release_save(self):
+        if _ACTIVE is not None:
+            _ACTIVE.on_released(self)
+        return self._lk._release_save()
+
+    def _acquire_restore(self, state):
+        self._lk._acquire_restore(state)
+        if _ACTIVE is not None:
+            _ACTIVE.on_acquired(self)
+
+    def _is_owned(self):
+        return self._lk._is_owned()
+
+    def _at_fork_reinit(self):
+        self._lk._at_fork_reinit()
+
+    def __repr__(self):
+        return f"<_SanRLock {self._lk!r}>"
+
+
+class _SanCondition(_REAL_CONDITION):
+    """``threading.Condition`` tracking itself as one lock node.
+
+    The default inner lock stays a REAL RLock (the condvar is the
+    tracked entity; double-tracking its backing lock would only add an
+    unnamed twin entry). Explicitly passed locks — e.g. queue.Queue
+    building conditions over its own (patched) mutex — keep whatever
+    tracking they already have.
+    """
+
+    def __init__(self, lock=None):
+        if lock is None:
+            lock = _REAL_RLOCK()
+        super().__init__(lock)
+
+    def __enter__(self):
+        res = super().__enter__()
+        if _ACTIVE is not None:
+            _ACTIVE.on_acquired(self)
+        return res
+
+    def __exit__(self, *exc):
+        if _ACTIVE is not None:
+            _ACTIVE.on_released(self)
+        return super().__exit__(*exc)
+
+    def wait(self, timeout=None):
+        saved = _ACTIVE.suspend(self) if _ACTIVE is not None else None
+        try:
+            return super().wait(timeout)
+        finally:
+            if _ACTIVE is not None:
+                _ACTIVE.resume(self, saved)
+
+    def wait_for(self, predicate, timeout=None):
+        # the loop calls self.wait(); per-wait tracking above suffices
+        return super().wait_for(predicate, timeout)
+
+
+def default_site_table() -> dict:
+    """(abspath, line) -> canonical name, from the static pass over the
+    repo's src/ and tests/ trees."""
+    from repro.analysis import concurrency
+    root = Path(__file__).resolve().parents[3]
+    paths = [p for p in (root / "src", root / "tests") if p.exists()]
+    sites = concurrency.collect_lock_sites(paths, root)
+    return {(os.path.abspath(f), line): name
+            for (f, line), name in sites.items()}
+
+
+def install(site_table: dict | None = None,
+            declared: set | None = None,
+            raise_on_violation: bool | None = None) -> Sanitizer:
+    """Patch threading and return the active :class:`Sanitizer`."""
+    global _ACTIVE
+    if _ACTIVE is not None:
+        return _ACTIVE
+    if site_table is None:
+        site_table = default_site_table()
+    if declared is None:
+        from repro.analysis import hierarchy
+        declared = hierarchy.declared_edge_set()
+    if raise_on_violation is None:
+        raise_on_violation = (os.environ.get("REPRO_LOCK_SANITIZER", "")
+                              == "raise")
+    _ACTIVE = Sanitizer(site_table, declared,
+                        raise_on_violation=raise_on_violation)
+    threading.Lock = _SanLock
+    threading.RLock = _SanRLock
+    threading.Condition = _SanCondition
+    return _ACTIVE
+
+
+def uninstall() -> None:
+    """Restore threading factories. Already-created sanitized locks
+    keep working but stop recording."""
+    global _ACTIVE
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    threading.Condition = _REAL_CONDITION
+    _ACTIVE = None
+
+
+def active() -> Sanitizer | None:
+    return _ACTIVE
+
+
+def enabled_by_env() -> bool:
+    return os.environ.get("REPRO_LOCK_SANITIZER", "") not in ("", "0")

@@ -559,7 +559,7 @@ class ClusterEngine(EngineBase):
         except RuntimeError as e:
             self._fail(req, f"encode routing failed: {e!r}")
             self.psi_ep.drop(req.req_id)
-            self._fail_inflight(key, f"encode routing failed: {e!r}")
+            self._fail_inflight(req, key, f"encode routing failed: {e!r}")
 
     def _release_blocks(self, req: ServeRequest) -> None:
         # at most one instance pool holds this request's blocks; free is

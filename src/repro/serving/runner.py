@@ -38,7 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.serving.stages import PagedDecodeStage, PagedJitKit, PagedKVState, ServeStats
+from repro.serving.stages import (PagedDecodeStage, PagedJitKit,
+                                  PagedKVState, ServeStats, _bucket_ladder)
 from repro.serving.transfer import PrefillProgress, PsiPD
 from repro.serving.types import EngineConfig, ServeRequest
 
@@ -57,18 +58,6 @@ class ChunkWork:
     n_new: int
     blocks: np.ndarray
     final: bool
-
-
-def _bucket_ladder(quantum: int, cap: int) -> tuple[int, ...]:
-    """Static prefill-region widths: quantum-doubling up to ``cap``."""
-    cap = max(quantum, -(-cap // quantum) * quantum)
-    widths = []
-    w = quantum
-    while w < cap:
-        widths.append(w)
-        w *= 2
-    widths.append(cap)
-    return tuple(widths)
 
 
 class ModelRunner(PagedDecodeStage):

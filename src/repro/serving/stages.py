@@ -272,6 +272,20 @@ def prefix_salt(req: ServeRequest) -> str:
             + hashlib.sha1(pos.tobytes()).hexdigest())
 
 
+def _bucket_ladder(quantum: int, cap: int) -> tuple[int, ...]:
+    """Static widths for shape-bucketed jit calls: quantum-doubling up
+    to ``cap``. Shared by the packed runner's prefill-region/block-table
+    ladders and the migration scatter below."""
+    cap = max(quantum, -(-cap // quantum) * quantum)
+    widths = []
+    w = quantum
+    while w < cap:
+        widths.append(w)
+        w *= 2
+    widths.append(cap)
+    return tuple(widths)
+
+
 class PagedKVState:
     """Shared paged KV pool + block manager (P writes, D reads/appends)."""
 
@@ -288,12 +302,15 @@ class PagedKVState:
         self.max_blocks = math.ceil(ecfg.max_seq_len / bs)
         self.trash = ecfg.kv_blocks          # reserved block id N-1
         self.k_pool, self.v_pool = model.init_kv_pool(ecfg.kv_blocks, bs)
-        # migration scatter: jitted + pool-donating via the shared kit (one
-        # compile per migrated block count serves every instance; on
-        # accelerators donation updates the pool in place instead of
-        # copying it per migration) — eager fallback for standalone use
+        # migration scatter: jitted + pool-donating via the shared kit
+        # (on accelerators donation updates the pool in place instead of
+        # copying it per migration) — eager fallback for standalone use.
+        # Migrated block counts are padded to a power-of-two ladder so
+        # one compile per BUCKET serves every migration size (pad rows
+        # scatter zeros into the trash block).
         self._inject_fn = kit.pool_inject if kit is not None else None
         self._copy_fn = kit.pool_copy if kit is not None else None
+        self._inject_buckets = _bucket_ladder(1, self.max_blocks)
         # bytes of one (k + v) block pair, for peak-memory accounting
         self.block_bytes = 2 * (cfg.n_layers * bs * cfg.n_kv_heads
                                 * cfg.head_dim
@@ -367,9 +384,25 @@ class PagedKVState:
                 matched = 0
         n_copy = k_blocks.shape[1]
         if matched < n_copy:
-            ids = jnp.asarray(blocks[matched:n_copy], jnp.int32)
-            k = jnp.asarray(k_blocks[:, matched:], self.k_pool.dtype)
-            v = jnp.asarray(v_blocks[:, matched:], self.v_pool.dtype)
+            # bucket-pad the scatter so pool_inject compiles once per
+            # ladder width, not per migrated block count: pad indices
+            # point at the reserved trash block, pad payload is zeros,
+            # so real blocks land byte-identically to the unpadded form
+            pad = next(w for w in self._inject_buckets
+                       if n_copy - matched <= w) - (n_copy - matched)
+            ids_np = np.asarray(blocks[matched:n_copy], np.int32)
+            kb = np.asarray(k_blocks[:, matched:])
+            vb = np.asarray(v_blocks[:, matched:])
+            if pad:
+                ids_np = np.concatenate(
+                    [ids_np, np.full(pad, self.trash, np.int32)])
+                zeros = np.zeros((kb.shape[0], pad) + kb.shape[2:],
+                                 kb.dtype)
+                kb = np.concatenate([kb, zeros], axis=1)
+                vb = np.concatenate([vb, zeros], axis=1)
+            ids = jnp.asarray(ids_np)
+            k = jnp.asarray(kb, self.k_pool.dtype)
+            v = jnp.asarray(vb, self.v_pool.dtype)
             with self.pool_lock:
                 if self._inject_fn is not None:
                     self.k_pool, self.v_pool = self._inject_fn(
@@ -735,8 +768,9 @@ class PagedJitKit:
         self.packed_step = jax.jit(
             lambda p, b: dense.packed_step_core(p, cfg, b, backend=backend),
             donate_argnums=() if on_cpu else (1,))
-        # PD-migration scatter (PagedKVState.inject): retraces per
-        # migrated block count, donates the destination pool
+        # PD-migration scatter (PagedKVState.inject): block counts are
+        # bucket-padded by the caller, so this compiles once per ladder
+        # width; donates the destination pool
         self.pool_inject = jax.jit(
             lambda kp, vp, k, v, ids: (kp.at[:, ids].set(k),
                                        vp.at[:, ids].set(v)),

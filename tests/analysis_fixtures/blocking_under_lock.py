@@ -1,0 +1,12 @@
+"""Golden fixture: blocking calls while holding a lock -> RL002."""
+import threading
+import time
+
+state_lock = threading.Lock()
+
+
+def slow_update(worker, jobs):
+    with state_lock:
+        time.sleep(0.1)
+        worker.join()
+        jobs.get()

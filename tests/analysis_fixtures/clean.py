@@ -1,0 +1,32 @@
+"""Golden fixture: idiomatic concurrency + jit code -> ZERO findings.
+
+Every pattern here is the blessed counterpart of one of the bad
+fixtures: predicate-looped wait, consistent single-lock discipline,
+pure jitted math, and a bucket-laddered call site.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+
+lock = threading.Lock()
+cv = threading.Condition(lock)
+_done = False
+
+
+def wait_done():
+    with cv:
+        while not _done:
+            cv.wait()
+
+
+@jax.jit
+def scaled_sum(x):
+    return jnp.sum(x) * 2.0
+
+
+def run(xs, bucket_sizes):
+    n = len(xs)
+    width = next(b for b in bucket_sizes if n <= b)
+    x = jnp.zeros((width,), jnp.float32)
+    return scaled_sum(x)

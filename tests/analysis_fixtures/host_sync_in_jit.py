@@ -1,0 +1,11 @@
+"""Golden fixture: host synchronisation inside a jitted fn -> RJ101."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_norm(x):
+    s = jnp.sum(x)
+    host = np.asarray(s)
+    return host, s.item()

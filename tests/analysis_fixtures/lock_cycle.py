@@ -1,0 +1,17 @@
+"""Golden fixture: inconsistent acquisition order -> RL001 (+RL004)."""
+import threading
+
+table_lock = threading.Lock()
+stats_lock = threading.Lock()
+
+
+def forward():
+    with table_lock:
+        with stats_lock:
+            pass
+
+
+def backward():
+    with stats_lock:
+        with table_lock:
+            pass

@@ -1,0 +1,10 @@
+"""Golden fixture: jit-wrapped lambda closing over a loop variable ->
+RJ102 (every compiled fn sees the last value)."""
+import jax
+
+
+def build():
+    compiled = []
+    for scale in (1.0, 2.0):
+        compiled.append(jax.jit(lambda x: x * scale))
+    return compiled

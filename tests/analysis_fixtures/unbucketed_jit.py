@@ -1,0 +1,15 @@
+"""Golden fixture: jit call site whose input extent is data-dependent
+and never flows through a bucket ladder -> RJ103."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def kernel(x):
+    return x * 2.0
+
+
+def run(tokens):
+    n = len(tokens)
+    x = jnp.zeros((n,), jnp.float32)
+    return kernel(x)

@@ -1,0 +1,9 @@
+"""Golden fixture: condvar wait outside a predicate loop -> RL003."""
+import threading
+
+cv = threading.Condition()
+
+
+def consume():
+    with cv:
+        cv.wait()

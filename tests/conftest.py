@@ -1,8 +1,33 @@
 # NOTE: deliberately does NOT set --xla_force_host_platform_device_count —
 # smoke tests and benches must see the 1 real device; only the dry-run
 # (repro.launch.dryrun, run as its own process) forces 512 host devices.
+import os
+
 import jax
 import pytest
+
+# Opt-in runtime lock-order sanitizer (REPRO_LOCK_SANITIZER=1): patch
+# threading BEFORE test modules import repro.serving so every engine
+# lock/condvar is created tracked. Installing after `import jax` keeps
+# jax/stdlib internals unpatched (their locks predate the patch).
+_SANITIZER = None
+if os.environ.get("REPRO_LOCK_SANITIZER", "") not in ("", "0"):
+    from repro.analysis import lock_sanitizer
+
+    _SANITIZER = lock_sanitizer.install()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_sanitizer_session():
+    """Dump the witnessed acquisition graph and fail the session on any
+    hierarchy violation (teardown errors surface as pytest errors)."""
+    yield
+    if _SANITIZER is None:
+        return
+    dump = os.environ.get("REPRO_LOCK_SANITIZER_DUMP")
+    if dump:
+        _SANITIZER.dump(dump)
+    assert not _SANITIZER.violations, _SANITIZER.report()
 
 
 @pytest.fixture(scope="session")

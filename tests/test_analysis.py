@@ -1,0 +1,213 @@
+"""Analyzer goldens, baseline workflow, and lock-sanitizer unit tests.
+
+The fixture snippets in ``tests/analysis_fixtures/`` are excluded from
+normal reprolint runs (``DEFAULT_EXCLUDED_DIRS``) and scanned only
+here, each pinned to the exact finding keys it must produce — plus a
+``clean.py`` that must produce none (false-positive canary).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import baseline as baseline_mod
+from repro.analysis import lock_sanitizer
+from repro.analysis.baseline import BaselineError
+from repro.analysis.cli import analyze_paths
+from repro.analysis.findings import Finding
+from repro.analysis.lock_sanitizer import LockOrderViolation, Sanitizer
+
+FIXDIR = Path(__file__).parent / "analysis_fixtures"
+
+GOLDEN = {
+    "lock_cycle.py": {"RL001", "RL004"},
+    "blocking_under_lock.py": {"RL002"},
+    "wait_without_predicate.py": {"RL003"},
+    "host_sync_in_jit.py": {"RJ101"},
+    "unbucketed_jit.py": {"RJ103"},
+    "mutable_capture.py": {"RJ102"},
+    "clean.py": set(),
+}
+
+
+# ------------------------------------------------------------- goldens
+@pytest.mark.parametrize("name,keys", sorted(GOLDEN.items()))
+def test_golden_fixture_keys(name, keys):
+    findings = analyze_paths([FIXDIR / name], FIXDIR)
+    assert {f.key for f in findings} == keys, \
+        "\n".join(f.format() for f in findings)
+
+
+def test_lock_cycle_flags_both_orders():
+    findings = analyze_paths([FIXDIR / "lock_cycle.py"], FIXDIR)
+    cycles = [f for f in findings if f.key == "RL001"]
+    assert {f.symbol for f in cycles} == {"forward", "backward"}
+
+
+def test_blocking_under_lock_flags_each_call():
+    findings = analyze_paths([FIXDIR / "blocking_under_lock.py"], FIXDIR)
+    msgs = " | ".join(f.message for f in findings)
+    assert "time.sleep" in msgs
+    assert "join" in msgs
+    assert "without timeout" in msgs
+
+
+def test_fixtures_are_excluded_from_repo_scans():
+    # scanning tests/ at large must NOT pick up the bad snippets
+    tests_dir = Path(__file__).parent
+    findings = analyze_paths([tests_dir], tests_dir.parent)
+    assert not any("analysis_fixtures" in f.path for f in findings)
+
+
+# ------------------------------------------------------ baseline flow
+def _finding(key="RJ103", path="src/x.py", line=3, symbol="f",
+             message="msg"):
+    return Finding(key, path, line, symbol, message)
+
+
+def test_baseline_write_then_load_requires_real_why(tmp_path):
+    p = tmp_path / "b.json"
+    baseline_mod.write(p, [_finding()])
+    with pytest.raises(BaselineError):
+        baseline_mod.load(p)          # why is still "TODO"
+    entries = json.loads(p.read_text())
+    entries[0]["why"] = "parity oracle, retraces by design"
+    p.write_text(json.dumps(entries))
+    assert len(baseline_mod.load(p)) == 1
+
+
+def test_baseline_match_is_line_number_independent(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps([{"key": "RJ103", "path": "src/x.py",
+                              "symbol": "f", "why": "justified"}]))
+    entries = baseline_mod.load(p)
+    active, suppressed, stale = baseline_mod.apply(
+        [_finding(line=999)], entries)
+    assert not active and len(suppressed) == 1 and not stale
+
+
+def test_baseline_stale_entry_is_reported(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps([{"key": "RJ103", "path": "src/x.py",
+                              "symbol": "gone", "why": "justified"}]))
+    entries = baseline_mod.load(p)
+    active, suppressed, stale = baseline_mod.apply([_finding()], entries)
+    assert len(active) == 1 and not suppressed and len(stale) == 1
+
+
+def test_baseline_rejects_missing_fields(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps([{"key": "RJ103", "path": "src/x.py"}]))
+    with pytest.raises(BaselineError):
+        baseline_mod.load(p)
+
+
+def test_cli_exit_codes(capsys):
+    from repro.analysis import cli
+    assert cli.main(["tests/analysis_fixtures/clean.py",
+                     "--no-baseline"]) == 0
+    assert cli.main(["tests/analysis_fixtures/lock_cycle.py",
+                     "--no-baseline"]) == 1
+    assert cli.main(["--keys"]) == 0
+    capsys.readouterr()
+
+
+# -------------------------------------------------- sanitizer (unit)
+def test_sanitizer_records_declared_edge_without_violation():
+    s = Sanitizer({}, {("a", "b")})
+    s._record_push(1, "a")
+    s._record_push(2, "b")
+    assert ("a", "b") in s.witnessed
+    assert not s.violations
+
+
+def test_sanitizer_detects_inverted_order():
+    s = Sanitizer({}, {("a", "b")})
+    s._record_push(1, "a")
+    s._record_push(2, "b")
+    s._tls.stack.clear()
+    s._record_push(2, "b")
+    s._record_push(1, "a")            # b -> a closes the cycle
+    assert len(s.violations) == 1
+    assert ("b", "a") not in s.witnessed
+
+
+def test_sanitizer_raise_mode():
+    s = Sanitizer({}, set(), raise_on_violation=True)
+    s._record_push(1, "a")
+    s._record_push(2, "b")
+    s._tls.stack.clear()
+    s._record_push(2, "b")
+    with pytest.raises(LockOrderViolation):
+        s._record_push(1, "a")
+
+
+def test_sanitizer_transitive_cycle():
+    s = Sanitizer({}, {("a", "b"), ("b", "c")})
+    s._record_push(1, "c")
+    s._record_push(2, "a")            # c -> a cycles via declared chain
+    assert len(s.violations) == 1
+
+
+def test_sanitizer_unnamed_sites_produce_no_edges():
+    s = Sanitizer({}, set())
+    s._record_push(1, None)
+    s._record_push(2, "b")
+    s._record_push(3, None)
+    assert not s.witnessed and not s.violations
+
+
+# -------------------------------------------- sanitizer (integration)
+def test_sanitizer_install_witnesses_named_nesting(tmp_path):
+    if lock_sanitizer.active() is not None:
+        pytest.skip("sanitizer already active session-wide")
+    src = ("import threading\n"
+           "a = threading.Lock()\n"
+           "b = threading.RLock()\n"
+           "def run():\n"
+           "    with a:\n"
+           "        with b:\n"
+           "            with b:\n"          # reentry collapses
+           "                pass\n"
+           "run()\n")
+    p = tmp_path / "snippet.py"
+    p.write_text(src)
+    table = {(str(p), 5): "outer.lock", (str(p), 6): "inner.lock",
+             (str(p), 7): "inner.lock"}
+    san = lock_sanitizer.install(site_table=table, declared=set())
+    try:
+        exec(compile(src, str(p), "exec"), {})
+    finally:
+        lock_sanitizer.uninstall()
+    assert ("outer.lock", "inner.lock") in san.witnessed
+    assert not san.violations
+    assert san.acquisitions >= 2
+
+
+def test_sanitizer_install_flags_inverted_order_at_runtime(tmp_path):
+    if lock_sanitizer.active() is not None:
+        pytest.skip("sanitizer already active session-wide")
+    src = ("import threading\n"
+           "a = threading.Lock()\n"
+           "b = threading.Lock()\n"
+           "def fwd():\n"
+           "    with a:\n"
+           "        with b:\n"
+           "            pass\n"
+           "def bwd():\n"
+           "    with b:\n"
+           "        with a:\n"
+           "            pass\n"
+           "fwd()\n"
+           "bwd()\n")
+    p = tmp_path / "snippet.py"
+    p.write_text(src)
+    table = {(str(p), 5): "a.lock", (str(p), 6): "b.lock",
+             (str(p), 9): "b.lock", (str(p), 10): "a.lock"}
+    san = lock_sanitizer.install(site_table=table, declared=set())
+    try:
+        exec(compile(src, str(p), "exec"), {})
+    finally:
+        lock_sanitizer.uninstall()
+    assert ("a.lock", "b.lock") in san.witnessed
+    assert len(san.violations) == 1 and "b.lock" in san.violations[0]

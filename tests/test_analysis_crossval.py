@@ -1,0 +1,86 @@
+"""Cross-validate the three views of the lock hierarchy.
+
+The repo carries the acquisition order in three places that must agree:
+
+1. the DECLARED registry (``repro.analysis.hierarchy.EDGES``),
+2. the STATIC edge set the concurrency pass extracts from the source,
+3. the WITNESSED edges from real engine/cluster/gateway executions
+   under ``REPRO_LOCK_SANITIZER=1``
+   (``tests/fixtures/lock_order_edges.json`` — regeneration command in
+   the fixture's ``_note``).
+
+Drift in any direction is a bug: a witnessed edge the static pass
+cannot see means the analyzer lost coverage; a declared edge with no
+static witness is a stale registry entry; a cycle anywhere is a
+deadlock waiting for the right interleaving.
+"""
+import json
+from pathlib import Path
+
+from repro.analysis import hierarchy
+from repro.analysis.concurrency import static_edge_names
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURE = Path(__file__).parent / "fixtures" / "lock_order_edges.json"
+
+
+def _witnessed():
+    data = json.loads(FIXTURE.read_text())
+    return {tuple(e) for e in data["edges"]}, data
+
+
+def _static():
+    return static_edge_names([REPO / "src", REPO / "tests"], REPO)
+
+
+def test_fixture_run_was_clean_and_meaningful():
+    witnessed, data = _witnessed()
+    assert data["violations"] == []
+    assert data["acquisitions"] > 1000, \
+        "fixture run barely exercised the engines"
+    assert witnessed, "no named edges witnessed — site table broken?"
+    # the documented engine edge must actually be exercised at runtime
+    assert ("engine.done_cv", "request.cv") in witnessed
+
+
+def test_witnessed_edges_are_statically_known():
+    """Every runtime-observed edge must be visible to the static pass
+    or declared: an invisible edge means the analyzer would miss the
+    inverse-order bug too."""
+    witnessed, _ = _witnessed()
+    known = _static() | hierarchy.declared_edge_set()
+    assert witnessed <= known, \
+        f"runtime edges unknown to the static pass: {witnessed - known}"
+
+
+def test_declared_edges_have_static_witnesses():
+    """The registry documents real code, not folklore: every declared
+    edge must be observed somewhere in the source."""
+    static = _static()
+    stale = hierarchy.declared_edge_set() - static
+    assert not stale, f"declared edges with no static witness: {stale}"
+
+
+def test_combined_graph_is_acyclic():
+    """Declared + witnessed edges together must stay a DAG."""
+    witnessed, _ = _witnessed()
+    graph = {}
+    for a, b in witnessed | hierarchy.declared_edge_set():
+        graph.setdefault(a, set()).add(b)
+
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in
+             set(graph) | {b for bs in graph.values() for b in bs}}
+
+    def dfs(n):
+        color[n] = GRAY
+        for m in graph.get(n, ()):
+            if color[m] == GRAY:
+                raise AssertionError(f"cycle through {n} -> {m}")
+            if color[m] == WHITE:
+                dfs(m)
+        color[n] = BLACK
+
+    for n in list(color):
+        if color[n] == WHITE:
+            dfs(n)

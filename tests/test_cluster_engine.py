@@ -171,3 +171,35 @@ def test_mm_request_requires_e_coverage(vlm_setup):
                 (M, cfg.modality.enc_d_model)).astype(np.float32),
             mm_positions=np.arange(1, M + 1, dtype=np.int32),
             max_new_tokens=2))
+
+
+def test_encode_routing_failure_releases_dedup_waiters(vlm_setup):
+    """Regression: when encode dispatch fails, the waiters merged onto
+    the leader's in-flight ψ_EP key must fail with it. An arity bug
+    passed the key as the leader argument, so ``_fail_inflight`` popped
+    nothing and dedup waiters stranded until their result() timeout."""
+    cfg, params = vlm_setup
+    rng = np.random.default_rng(31)
+    M = 2 * cfg.modality.tokens_per_item
+    mm = rng.standard_normal((M, cfg.modality.enc_d_model)).astype(
+        np.float32) * 0.1
+    mk = lambda rid: ServeRequest(
+        req_id=rid, prompt=rng.integers(0, cfg.vocab, 12).astype(np.int32),
+        mm_embeds=mm.copy(),
+        mm_positions=np.arange(1, M + 1, dtype=np.int32),
+        max_new_tokens=4)
+    clu = ClusterEngine(cfg, params, _ecfg(), "2E1P1D")
+    # engine NOT started: submits only enqueue, so the leader's encode
+    # stays in-flight while the identical-payload waiter merges onto it
+    h_lead, h_wait = clu.submit(mk(901)), clu.submit(mk(902))
+    assert clu.stats["mm_inflight_hits"] == 1
+    key = clu._mm_leading[901]
+
+    def boom(job):
+        raise RuntimeError("router down")
+
+    clu._route_encode_job = boom
+    clu._dispatch_encode(h_lead.req, key)       # re-dispatch fails
+    assert h_lead.req.finished and h_wait.req.finished
+    assert "encode routing failed" in (h_wait.req.error or "")
+    assert key not in clu._mm_inflight and 901 not in clu._mm_leading
