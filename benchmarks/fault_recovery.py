@@ -1,0 +1,196 @@
+"""Fault-recovery benchmark: recovery time and SLO attainment under
+injected instance faults, on the REAL multi-instance cluster engine.
+
+Four scenarios on a text-only "1P2D" cluster (codeqwen reduced):
+
+  baseline     no faults — the drain wall-clock every other row is read
+               against
+  kv-migrate   the first D instance dies mid-decode with its KV pool
+               reachable: residents move to the surviving D via the
+               byte-exact ψ_PD extract/inject path (greedy streams stay
+               bit-identical)
+  kv-replay    same death but the KV is declared lost: residents replay
+               from the prompt through P (preemption-replay)
+  straggler    no death — a 6x slowdown on one D under the
+               latency-aware assigner, which sheds load off the limping
+               instance
+
+Reported metrics: completed/stranded counts, failover/replay counters,
+recovery wall-clock (fault injection -> last request done) and SLO
+attainment against a fixed per-request e2e budget. CI asserts the
+structural rows (zero stranded, the right counter moved), never timing
+ratios — this container's timings are noisy.
+
+    PYTHONPATH=src python benchmarks/fault_recovery.py [--quick]
+"""
+from __future__ import annotations
+
+if __package__ in (None, ""):
+    import os
+    import sys
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(_root, "src"))
+    sys.path.insert(0, _root)
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Row
+
+WALL_BOUND_S = 420.0       # --quick must finish inside this (CI smoke)
+SLO_E2E_S = 120.0          # generous per-request e2e budget (reduced model)
+
+SCENARIOS = ("baseline", "kv-migrate", "kv-replay", "straggler")
+
+
+def fault_recovery_stats(quick: bool = False,
+                         arch: str = "codeqwen1.5-7b") -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.core import Death, FaultPlan, Slowdown
+    from repro.models import build_model
+    from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                               RequestState, ServeRequest)
+
+    cfg = get_config(arch).reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    n_req = 4 if quick else 8
+    max_new = 12 if quick else 24
+
+    def wait(pred, timeout=120.0, dt=0.02):
+        deadline = time.time() + timeout
+        while time.time() < deadline:
+            if pred():
+                return True
+            time.sleep(dt)
+        return False
+
+    out = {}
+    for label in SCENARIOS:
+        rng = np.random.default_rng(0)
+        policy = "latency_aware" if label == "straggler" else "least_loaded"
+        clu = ClusterEngine(
+            cfg, params,
+            EngineConfig(n_encode_workers=1, max_new_tokens=max_new,
+                         decode_batch=2, kv_blocks=32, kv_block_size=16,
+                         max_seq_len=128),
+            ClusterConfig(spec="1P2D", assign_policy=policy,
+                          monitor_interval=0.1))
+        if label == "straggler":
+            # the limping instance is present from the start; the
+            # latency-aware assigner observes its service EWMA and sheds
+            clu.set_fault_plan(FaultPlan(slowdowns=[
+                Slowdown(iid=1, start=0.0, factor=6.0)]))
+        clu.start()
+        t0 = time.perf_counter()
+        submit_t = {}
+        reqs = []
+        try:
+            for i in range(n_req):
+                r = ServeRequest(
+                    req_id=i,
+                    prompt=rng.integers(0, cfg.vocab, 15).astype(np.int32),
+                    max_new_tokens=max_new)
+                submit_t[i] = time.perf_counter()
+                clu.submit(r)
+                reqs.append(r)
+            t_fault = None
+            if label in ("kv-migrate", "kv-replay"):
+                # steady state first: every request handed to a decode pool
+                assert wait(
+                    lambda: clu.stats["pd_migrations"] >= n_req), \
+                    "requests never reached decode"
+                t_fault = time.perf_counter()
+                clu.set_fault_plan(FaultPlan(deaths=[Death(
+                    iid=1, at=0.0,
+                    kv_reachable=(label == "kv-migrate"))]))
+            lat = {}
+            outs = []
+            for r in reqs:
+                outs.append(clu.result(r.req_id, timeout=600))
+                lat[r.req_id] = time.perf_counter() - submit_t[r.req_id]
+            t_done = time.perf_counter()
+        finally:
+            clu.stop()
+        s = clu.stats
+        done = sum(o.state is RequestState.DONE for o in outs)
+        out[label] = {
+            "completed": done,
+            "stranded": len(outs) - done,
+            "instance_deaths": s["instance_deaths"],
+            "fault_failovers": s["fault_failovers"],
+            "fault_replays": s["fault_replays"],
+            "jobs_rerouted": s["jobs_rerouted"],
+            "preemptions": s["preemptions"],
+            "recovery_s": (t_done - t_fault) if t_fault is not None
+            else None,
+            "slo_attainment": sum(v <= SLO_E2E_S for v in lat.values())
+            / max(len(lat), 1),
+            "latency_mean_s": sum(lat.values()) / max(len(lat), 1),
+            "total_wall_s": t_done - t0,
+        }
+    return out
+
+
+def run(quick: bool = False) -> list:
+    """benchmarks.run entry point."""
+    return rows(quick=quick)
+
+
+def rows(quick: bool = False) -> list:
+    st = fault_recovery_stats(quick=quick)
+    out = []
+    for label in SCENARIOS:
+        d = st[label]
+        rec = (f"recovery={d['recovery_s']:.2f}s "
+               if d["recovery_s"] is not None else "")
+        out.append(Row(
+            name=f"fault_recovery/{label}",
+            us_per_call=d["total_wall_s"] * 1e6,
+            derived=f"{rec}slo={d['slo_attainment']:.2f} "
+                    f"failovers={d['fault_failovers']} "
+                    f"replays={d['fault_replays']} "
+                    f"stranded={d['stranded']}",
+            extra=d))
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    t0 = time.perf_counter()
+    st = fault_recovery_stats(quick=args.quick)
+    for label in SCENARIOS:
+        d = st[label]
+        rec = (f"recovery={d['recovery_s']:6.2f}s"
+               if d["recovery_s"] is not None else "recovery=     -")
+        print(f"{label:11s} completed={d['completed']:3d} "
+              f"stranded={d['stranded']} deaths={d['instance_deaths']} "
+              f"failovers={d['fault_failovers']} "
+              f"replays={d['fault_replays']} {rec} "
+              f"slo={d['slo_attainment']:.2f} "
+              f"lat={d['latency_mean_s']:.2f}s")
+
+    # CI smoke assertions: structural only (never timing ratios)
+    for label in SCENARIOS:
+        assert st[label]["stranded"] == 0, f"{label}: stranded requests"
+    assert st["baseline"]["instance_deaths"] == 0
+    assert st["kv-migrate"]["instance_deaths"] == 1
+    assert st["kv-migrate"]["fault_failovers"] >= 1
+    assert st["kv-migrate"]["fault_replays"] == 0
+    assert st["kv-replay"]["instance_deaths"] == 1
+    assert st["kv-replay"]["fault_replays"] >= 1
+    assert st["straggler"]["instance_deaths"] == 0
+    if args.quick:
+        wall = time.perf_counter() - t0
+        assert wall < WALL_BOUND_S, \
+            f"fault-recovery smoke too slow: {wall:.0f}s"
+    print("fault-recovery benchmark OK")
+
+
+if __name__ == "__main__":
+    main()

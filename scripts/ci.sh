@@ -37,6 +37,7 @@ if [ "$TIER" = "fast" ]; then
         tests/test_simulator.py \
         tests/test_api_load.py \
         tests/test_scheduler.py \
+        tests/test_fault_injection.py \
         "tests/test_runner.py::test_registry_names_and_validation" \
         "tests/test_runner.py::test_packed_vs_two_program_greedy_bit_identical" \
         "tests/test_cluster_engine.py::test_1epd_greedy_parity_bit_identical" \
@@ -50,6 +51,10 @@ if [ "$TIER" = "fast" ]; then
     echo "== fast tier: HTTP gateway smoke (ephemeral port: unary + SSE + 400) =="
     python -m pytest -q \
         "tests/test_gateway.py::test_gateway_smoke" \
+        || exit $?
+    echo "== fast tier: dead-instance failover parity (byte-exact re-home) =="
+    python -m pytest -q \
+        "tests/test_fault_injection.py::test_mid_decode_death_bit_parity[kv-migrate]" \
         || exit $?
     echo "== fast tier: pallas-backend engine smoke (interpret) =="
     REPRO_ATTN_BACKEND=pallas python -m pytest -q \
@@ -76,6 +81,12 @@ echo "== sanitizer: role-switch cluster suite under REPRO_LOCK_SANITIZER =="
 REPRO_LOCK_SANITIZER=1 python -m pytest -q tests/test_cluster_switch.py \
     || exit 1
 
+echo "== sanitizer: fault-injection suite under REPRO_LOCK_SANITIZER =="
+# death/failover sweeps + elastic add/remove exercise the supervisor
+# thread against live executors — the new lock edges must stay ordered
+REPRO_LOCK_SANITIZER=1 python -m pytest -q tests/test_fault_injection.py \
+    || exit 1
+
 echo "== smoke: offline throughput benchmark (quick) =="
 python benchmarks/offline_throughput.py --quick || exit 1
 
@@ -100,6 +111,11 @@ echo "== smoke: role-switch benchmark (workload shift, switching on/off) =="
 # asserts >= 1 observed role switch with switching on and zero stranded
 # requests in both runs
 python benchmarks/role_switch.py --quick || exit 1
+
+echo "== smoke: fault-recovery benchmark (death/replay/straggler rows) =="
+# asserts zero stranded requests in every scenario and that the right
+# counter moved (failovers for kv-migrate, replays for kv-replay)
+python benchmarks/fault_recovery.py --quick || exit 1
 
 echo "== smoke: kernel micro-bench (kernel-vs-ref + packed-runner rows) =="
 python benchmarks/kernel_bench.py --quick || exit 1

@@ -7,18 +7,21 @@
 # - costmodel.py      roofline stage costs, A100/910B3/TPUv5e profiles
 # - cluster.py        "5E2P1D"-style specs, metrics, goodput
 # - allocator.py      black-box (GP-EI) resource allocation (§3.2.3)
+# - faults.py         injected fault plans (slowdowns / stalls / deaths)
 from repro.core.block_manager import (BlockManager, KVBlockManager,
                                       MMBlockManager, OutOfBlocks)
 from repro.core.cluster import ClusterSpec, Summary, goodput, simulate, summarize
 from repro.core.costmodel import (A100_80G, NPU_910B3, PROFILES, TPU_V5E,
                                   HardwareProfile)
+from repro.core.faults import Death, FaultPlan, Slowdown, Stall
 from repro.core.instance import Instance
 from repro.core.request import SLO, Request
 from repro.core.simulator import Simulator
 
 __all__ = [
     "A100_80G", "NPU_910B3", "PROFILES", "TPU_V5E", "BlockManager",
-    "ClusterSpec", "HardwareProfile", "Instance", "KVBlockManager",
-    "MMBlockManager", "OutOfBlocks", "Request", "SLO", "Simulator",
-    "Summary", "goodput", "simulate", "summarize",
+    "ClusterSpec", "Death", "FaultPlan", "HardwareProfile", "Instance",
+    "KVBlockManager", "MMBlockManager", "OutOfBlocks", "Request", "SLO",
+    "Simulator", "Slowdown", "Stall", "Summary", "goodput", "simulate",
+    "summarize",
 ]

@@ -1,0 +1,120 @@
+"""Fault injection plans for the cluster serving layer.
+
+Production clusters limp before they die (limplock): a degraded node
+first runs slow, then stalls, then disappears. A :class:`FaultPlan`
+scripts exactly that — per-instance latency multipliers, hard stalls,
+and deaths at scheduled times — and is consumed by BOTH execution
+substrates:
+
+  * ``core.simulator.Simulator(faults=...)`` scales analytical service
+    times, parks stalled instances, and re-homes a dead instance's
+    queued jobs and decode residents (degraded-node modeling);
+  * the real ``serving.cluster.ClusterEngine(faults=...)`` checks the
+    plan at the top of every instance executor loop (an injectable
+    shim): slowdowns sleep proportionally to real step time, stalls
+    park the executor, deaths make the executor thread exit so the
+    supervisor's failover sweep re-homes the residents.
+
+Instances are addressed by their position in the cluster spec order
+(``iid`` 0..N-1) — identical between ``Simulator.instances`` and
+``ClusterEngine.instances``, so one plan drives the sim-vs-real
+structural cross-validation. Plans are immutable after construction and
+therefore safely readable from any thread without locks.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional
+
+__all__ = ["Slowdown", "Stall", "Death", "FaultPlan"]
+
+
+@dataclass(frozen=True)
+class Slowdown:
+    """Instance ``iid`` runs ``factor``x slower on [start, start+duration)."""
+    iid: int
+    start: float
+    factor: float
+    duration: float = math.inf
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+
+@dataclass(frozen=True)
+class Stall:
+    """Instance ``iid`` makes no progress at all on [start, start+duration)
+    — the limplock middle ground between slow and dead (e.g. a GC pause,
+    a network partition that heals)."""
+    iid: int
+    start: float
+    duration: float
+
+    @property
+    def end(self) -> float:
+        return self.start + self.duration
+
+
+@dataclass(frozen=True)
+class Death:
+    """Instance ``iid`` dies at ``at`` and never comes back.
+
+    ``kv_reachable`` selects the failover mode for decode residents:
+    True models a process/accelerator failure whose HBM is still
+    addressable (or checkpointed KV) — residents migrate byte-exact via
+    ψ_PD extract/inject; False models the machine vanishing — residents
+    replay from the prompt (preemption-replay)."""
+    iid: int
+    at: float
+    kv_reachable: bool = True
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """An immutable schedule of injected faults, queried by (iid, now)."""
+    slowdowns: tuple = ()
+    stalls: tuple = ()
+    deaths: tuple = ()
+
+    def __post_init__(self):
+        # accept lists at construction; store tuples (immutability)
+        object.__setattr__(self, "slowdowns", tuple(self.slowdowns))
+        object.__setattr__(self, "stalls", tuple(self.stalls))
+        object.__setattr__(self, "deaths", tuple(self.deaths))
+
+    # ------------------------------------------------------------ queries
+    def multiplier(self, iid: int, now: float) -> float:
+        """Combined service-time multiplier active on ``iid`` at ``now``."""
+        m = 1.0
+        for s in self.slowdowns:
+            if s.iid == iid and s.start <= now < s.end:
+                m *= s.factor
+        return m
+
+    def stall_until(self, iid: int, now: float) -> float:
+        """End of any stall covering ``now`` (== ``now`` when none)."""
+        end = now
+        for s in self.stalls:
+            if s.iid == iid and s.start <= now < s.end:
+                end = max(end, s.end)
+        return end
+
+    def death_for(self, iid: int) -> Optional[Death]:
+        for d in self.deaths:
+            if d.iid == iid:
+                return d
+        return None
+
+    def dead(self, iid: int, now: float) -> bool:
+        d = self.death_for(iid)
+        return d is not None and now >= d.at
+
+    @property
+    def horizon(self) -> float:
+        """Latest scheduled fault onset (benchmarks size runs past it)."""
+        times = ([s.start for s in self.slowdowns]
+                 + [s.start for s in self.stalls]
+                 + [d.at for d in self.deaths])
+        return max(times, default=0.0)

@@ -78,7 +78,10 @@ class Instance:
         self.decode_slots: list[DecodeSlot] = []
         self.busy_until: float = 0.0
         self.accepting: bool = True
+        self.alive: bool = True           # cleared by injected fault deaths
         self.cooldown_until: float = 0.0  # anti-thrash for role switching
+        self.decode_rr: int = 0           # round-robin cursor over slots
+        self._lat_ewma: Optional[float] = None
         self._init_caches()
 
     # ------------------------------------------------------------- memory
@@ -103,6 +106,16 @@ class Instance:
             budget = free * self.kv_frac
             n_blocks = max(1, int(budget / max(kv_tok, 1) / self.block_size))
             self.kv_cache = KVBlockManager(n_blocks, self.block_size)
+
+    # ------------------------------------------------------------- latency
+    def observe_latency(self, seconds: float) -> None:
+        """Fold one observed per-job service latency into the EWMA the
+        latency-aware router reads (straggler shedding)."""
+        self._lat_ewma = (seconds if self._lat_ewma is None
+                          else 0.3 * seconds + 0.7 * self._lat_ewma)
+
+    def latency_ms(self) -> float:
+        return 0.0 if self._lat_ewma is None else self._lat_ewma * 1e3
 
     # ---------------------------------------------------------------- load
     def load(self) -> float:

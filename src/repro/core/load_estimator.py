@@ -78,6 +78,39 @@ class LoadEstimator:
             self.cfg, self.hw, int(prefill_tokens + output_len))
         return {"E": r * t_e, "P": r * t_p, "D": r * t_d}
 
+    def utilization(self, counts: dict[str, int]) -> dict[str, float]:
+        """Per-stage demand divided by serving instances: device-sec/sec
+        of arriving work per device. > 1.0 means the stage is underwater;
+        ``inf`` flags demand against a stage with zero instances."""
+        demand = self.stage_demand()
+        out: dict[str, float] = {}
+        for s in "EPD":
+            n = counts.get(s, 0)
+            d = demand.get(s, 0.0)
+            out[s] = 0.0 if d <= 0.0 else (d / n if n else float("inf"))
+        return out
+
+    def suggest_scale(self, counts: dict[str, int], *, up: float = 0.9,
+                      down: float = 0.3):
+        """Elastic-scaling hint (ElasticMM-style): ``("up", letter)`` for
+        the most underwater stage above the ``up`` watermark, else
+        ``("down", letter)`` for the idlest multi-instance stage below the
+        ``down`` watermark, else ``None``. The caller owns cooldowns and
+        min/max fleet bounds."""
+        util = self.utilization(counts)
+        served = [s for s in "EPD" if counts.get(s, 0) > 0]
+        if not served:
+            return None
+        hot = max(served, key=lambda s: util[s])
+        if util[hot] >= up:
+            return ("up", hot)
+        shrinkable = [s for s in served if counts[s] > 1]
+        if shrinkable:
+            cold = min(shrinkable, key=lambda s: util[s])
+            if util[cold] < down:
+                return ("down", cold)
+        return None
+
     def suggest_allocation(self, n_instances: int) -> dict[str, int]:
         """Proportional-demand instance split (floor 1 per needed stage)."""
         demand = self.stage_demand()

@@ -13,13 +13,14 @@ FCFS = "fcfs"
 SJF = "sjf"
 ROUND_ROBIN = "round_robin"
 LEAST_LOADED = "least_loaded"
+LATENCY_AWARE = "latency_aware"
 
 
 class Assigner:
     """Routes jobs to one of a stage's instances."""
 
     def __init__(self, policy: str = ROUND_ROBIN):
-        if policy not in (ROUND_ROBIN, LEAST_LOADED):
+        if policy not in (ROUND_ROBIN, LEAST_LOADED, LATENCY_AWARE):
             raise ValueError(policy)
         self.policy = policy
         self._rr = 0
@@ -32,6 +33,20 @@ class Assigner:
             idx = alive[self._rr % len(alive)]
             self._rr += 1
             return idx
+        if self.policy == LATENCY_AWARE:
+            # least-loaded, with queued work inflated by how much slower
+            # this instance's observed service latency runs than the
+            # fastest peer's — a limping instance sheds load before it dies
+            lats = {i: float(getattr(instances[i], "latency_ms",
+                                     lambda: 0.0)())
+                    for i in alive}
+            base = min((l for l in lats.values() if l > 0.0), default=0.0)
+
+            def score(i: int) -> float:
+                rel = (lats[i] / base) if base > 0.0 and lats[i] > 0.0 else 1.0
+                return (instances[i].load() + 1.0) * max(rel, 1.0)
+
+            return min(alive, key=score)
         return min(alive, key=lambda i: instances[i].load())
 
 

@@ -24,6 +24,7 @@ from typing import Any, Optional
 from repro.configs.base import ArchConfig
 from repro.core import costmodel as cm
 from repro.core.block_manager import OutOfBlocks
+from repro.core.faults import FaultPlan
 from repro.core.instance import (DecodeSlot, EncodeJob, Instance, PrefillJob,
                                  D_ROLES, E_ROLES, P_ROLES)
 from repro.core.request import Request
@@ -37,6 +38,8 @@ EP_DONE = "ep_transfer_done"
 PD_DONE = "pd_transfer_done"
 MONITOR = "monitor"
 ONLOAD = "onload"
+FAULT_DEATH = "fault_death"
+WAKE = "wake"
 
 
 @dataclass(order=True)
@@ -58,6 +61,7 @@ class Simulator:
                  monitor_interval: float = 2.0,
                  switch_threshold: float = 3.0,
                  transfer_links: int = 1,
+                 faults: Optional[FaultPlan] = None,
                  verbose: bool = False):
         self.cfg = cfg
         self.hw = hw
@@ -70,7 +74,13 @@ class Simulator:
         self.monitor_interval = monitor_interval
         self.switch_threshold = switch_threshold
         self.transfer_links = transfer_links
+        self.faults = faults or FaultPlan()
         self.verbose = verbose
+        # structural fault metrics (names match the real engine's
+        # ServeStats keys so sim-vs-real cross-validation compares directly)
+        self.fault_stats = {"instance_deaths": 0, "fault_failovers": 0,
+                            "fault_replays": 0, "jobs_rerouted": 0,
+                            "stranded": 0}
 
         self._events: list[Event] = []
         self._seq = itertools.count()
@@ -84,7 +94,13 @@ class Simulator:
 
     def stage(self, letter: str) -> list[Instance]:
         roles = {"E": E_ROLES, "P": P_ROLES, "D": D_ROLES}[letter]
-        return [i for i in self.instances if i.role in roles and i.accepting]
+        return [i for i in self.instances
+                if i.role in roles and i.accepting and i.alive]
+
+    def _pos(self, inst: Instance) -> int:
+        """FaultPlan addresses instances by position in spec order (the
+        global ``Instance.id`` counter is not cluster-relative)."""
+        return self.instances.index(inst)
 
     def _assign(self, letter: str) -> Instance:
         insts = self.stage(letter)
@@ -97,6 +113,12 @@ class Simulator:
             self._push(r.arrival, ARRIVAL, r.req_id)
         if self.role_switch:
             self._push(self.monitor_interval, MONITOR)
+        for d in self.faults.deaths:
+            if 0 <= d.iid < len(self.instances):
+                self._push(d.at, FAULT_DEATH, d.iid)
+        for s in self.faults.stalls:
+            if 0 <= s.iid < len(self.instances):
+                self._push(s.end, WAKE, s.iid)
 
         while self._events:
             ev = heapq.heappop(self._events)
@@ -144,14 +166,29 @@ class Simulator:
         self._kick(inst)
 
     def _enqueue_prefill(self, req: Request) -> None:
-        inst = self._assign("P")
+        try:
+            inst = self._assign("P")
+        except RuntimeError:      # every P-capable instance is dead
+            self._strand(req.req_id)
+            return
         inst.queue.append(PrefillJob(req.req_id, req.prefill_tokens))
         self._kick(inst)
 
     # ---------------------------------------------------- instance engine
+    def _stalled(self, inst: Instance) -> bool:
+        """Park a stalled instance until the stall's end (a WAKE event is
+        scheduled at plan-install time to re-kick it)."""
+        end = self.faults.stall_until(self._pos(inst), self.now)
+        if end > self.now:
+            inst.busy_until = max(inst.busy_until, end)
+            return True
+        return False
+
     def _kick(self, inst: Instance) -> None:
         """Start the next batch on an idle instance."""
-        if inst.busy_until > self.now or not inst.accepting:
+        if inst.busy_until > self.now or not inst.accepting or not inst.alive:
+            return
+        if self._stalled(inst):
             return
         if inst.queue:
             ordered = order_queue(inst.queue, self.queue_policy, inst.estimate)
@@ -167,6 +204,7 @@ class Simulator:
             for j in batch:
                 inst.queue.remove(j)
             service = self._service_time(inst, batch)
+            inst.observe_latency(service / len(batch))
             inst.busy_until = self.now + service
             self._push(inst.busy_until, JOB_DONE, (inst.id, batch))
             return
@@ -189,18 +227,31 @@ class Simulator:
         return admitted
 
     def _service_time(self, inst: Instance, batch: list) -> float:
-        return inst.batched_time(batch)
+        # injected slowdowns (limplock): the degraded node still serves,
+        # just proportionally slower
+        return (inst.batched_time(batch)
+                * self.faults.multiplier(self._pos(inst), self.now))
 
     def _maybe_decode(self, inst: Instance) -> None:
         if inst.role not in D_ROLES or not inst.decode_slots:
             return
-        if inst.busy_until > self.now:
+        if inst.busy_until > self.now or not inst.alive:
             return
-        step = inst.decode_step_time()
+        if self._stalled(inst):
+            return
+        step = (inst.decode_step_time()
+                * self.faults.multiplier(self._pos(inst), self.now))
+        inst.observe_latency(step)
         inst.busy_until = self.now + step
-        n = min(len(inst.decode_slots), inst.decode_batch)
-        batch = inst.decode_slots[:n]
-        self._push(inst.busy_until, DECODE_STEP, (inst.id, [s.req_id for s in batch]))
+        # rotate the slot window: with residency > decode_batch a fixed
+        # [:n] prefix starves the tail behind long-output heads forever
+        slots = inst.decode_slots
+        n = min(len(slots), inst.decode_batch)
+        start = inst.decode_rr % len(slots)
+        batch = (slots[start:] + slots[:start])[:n]
+        inst.decode_rr += n
+        self._push(inst.busy_until, DECODE_STEP,
+                   (inst.id, [s.req_id for s in batch]))
 
     def _inst(self, iid: int) -> Instance:
         return next(i for i in self.instances if i.id == iid)
@@ -208,6 +259,20 @@ class Simulator:
     def _on_job_done(self, ev: Event) -> None:
         iid, batch = ev.payload
         inst = self._inst(iid)
+        if not inst.alive:
+            # died mid-batch: the in-flight work is lost; re-dispatch each
+            # job to a surviving sibling of its stage
+            for job in batch:
+                letter = "E" if isinstance(job, EncodeJob) else "P"
+                sibs = self.stage(letter)
+                if sibs:
+                    tgt = sibs[self.assigner.pick(sibs)]
+                    tgt.queue.append(job)
+                    self.fault_stats["jobs_rerouted"] += 1
+                    self._kick(tgt)
+                else:
+                    self._strand(job.req_id)
+            return
         for job in batch:
             req = self.requests[job.req_id]
             if isinstance(job, EncodeJob):
@@ -242,7 +307,7 @@ class Simulator:
         for i in self.instances:
             if i.mm_cache is not None and i.role == "E":
                 i.mm_cache.free(rid)
-        if inst.role in ("EP", "EPD"):
+        if inst.role in ("EP", "EPD") and inst.alive:
             # aggregated: prefill runs on the same instance
             inst.queue.append(PrefillJob(rid, req.prefill_tokens))
             self._kick(inst)
@@ -255,10 +320,14 @@ class Simulator:
         req = self.requests[rid]
         req.pd_transfer_end = self.now
         req.decode_start = self.now
-        if src.role in ("EPD",):
+        if src.role in ("EPD",) and src.alive:
             dst = src                   # decode in place
         else:
-            dst = self._assign("D")
+            try:
+                dst = self._assign("D")
+            except RuntimeError:  # every D-capable instance is dead
+                self._strand(rid)
+                return
         if dst is not src and src.kv_cache is not None:
             src.kv_cache.free(rid)      # KV left the prefill worker
             self._kick(src)             # blocked prefills may now admit
@@ -280,6 +349,8 @@ class Simulator:
     def _on_decode_step(self, ev: Event) -> None:
         iid, rids = ev.payload
         inst = self._inst(iid)
+        if not inst.alive:
+            return    # residents were re-homed by the death handler
         done_ids = []
         for slot in list(inst.decode_slots):
             if slot.req_id not in rids:
@@ -296,6 +367,75 @@ class Simulator:
         # aggregated roles: queued encode/prefill work may preempt decode
         self._kick(inst)
         self._maybe_decode(inst)
+
+    # ------------------------------------------------------------- faults
+    def _strand(self, rid: int) -> None:
+        """No surviving instance can take this request: mark it finished
+        so the run drains, and count it (tests assert stranded == 0)."""
+        req = self.requests[rid]
+        if not req.done():
+            req.finish = self.now
+            self.fault_stats["stranded"] += 1
+
+    def _on_wake(self, ev: Event) -> None:
+        inst = self.instances[ev.payload]
+        if inst.alive:
+            self._kick(inst)
+            self._maybe_decode(inst)
+
+    def _on_fault_death(self, ev: Event) -> None:
+        """Injected instance death: re-home its queue and decode residents
+        exactly as the real ClusterEngine's failover sweep does — decode
+        residents migrate to a D sibling when the dead node's KV is
+        reachable, else replay from the prompt through a P sibling."""
+        pos = ev.payload
+        inst = self.instances[pos]
+        if not inst.alive:
+            return
+        death = self.faults.death_for(pos)
+        inst.alive = False
+        inst.accepting = False
+        self.fault_stats["instance_deaths"] += 1
+        # queued (not-yet-started) jobs reroute losslessly
+        jobs, inst.queue = inst.queue, []
+        for job in jobs:
+            letter = "E" if isinstance(job, EncodeJob) else "P"
+            sibs = self.stage(letter)
+            if sibs:
+                tgt = sibs[self.assigner.pick(sibs)]
+                tgt.queue.append(job)
+                self.fault_stats["jobs_rerouted"] += 1
+                self._kick(tgt)
+            else:
+                self._strand(job.req_id)
+        # decode residents: migrate (KV reachable) or replay from prompt
+        kv_ok = death.kv_reachable if death is not None else True
+        slots, inst.decode_slots = inst.decode_slots, []
+        for slot in slots:
+            if inst.kv_cache is not None:
+                inst.kv_cache.free(slot.req_id)
+            sibs = [i for i in self.stage("D") if i is not inst]
+            if kv_ok and sibs:
+                tgt = sibs[self.assigner.pick(sibs)]
+                tgt.decode_slots.append(slot)
+                if tgt.kv_cache is not None:
+                    try:
+                        tgt.kv_cache.allocate(
+                            slot.req_id, slot.context + slot.remaining)
+                    except OutOfBlocks:
+                        pass
+                self.fault_stats["fault_failovers"] += 1
+                self._maybe_decode(tgt)
+                continue
+            psibs = self.stage("P")
+            if psibs:
+                req = self.requests[slot.req_id]
+                tgt = psibs[self.assigner.pick(psibs)]
+                tgt.queue.append(PrefillJob(slot.req_id, req.prefill_tokens))
+                self.fault_stats["fault_replays"] += 1
+                self._kick(tgt)
+            else:
+                self._strand(slot.req_id)
 
     # -------------------------------------------------------- role switch
     def _stage_pressure(self, letter: str) -> float:

@@ -51,9 +51,11 @@ from typing import Any, Optional, Union
 from repro.configs.base import ArchConfig
 from repro.core.cluster import ClusterSpec
 from repro.core.costmodel import A100_80G, HardwareProfile
+from repro.core.faults import FaultPlan
 from repro.core.instance import D_ROLES, E_ROLES, P_ROLES
 from repro.core.load_estimator import LoadEstimator
-from repro.core.scheduler import LEAST_LOADED, ROUND_ROBIN, Assigner
+from repro.core.scheduler import (LATENCY_AWARE, LEAST_LOADED, ROUND_ROBIN,
+                                  Assigner)
 from repro.serving.engine import EngineBase
 from repro.serving.runner import ModelRunner
 from repro.serving.scheduler import Scheduler
@@ -65,7 +67,8 @@ from repro.serving.types import (ClusterConfig, EngineConfig, RequestState,
 
 __all__ = ["ClusterEngine", "ClusterConfig", "InstanceWorker"]
 
-_POLICIES = {"least_loaded": LEAST_LOADED, "round_robin": ROUND_ROBIN}
+_POLICIES = {"least_loaded": LEAST_LOADED, "round_robin": ROUND_ROBIN,
+             "latency_aware": LATENCY_AWARE}
 
 
 class _NullDecode:
@@ -124,6 +127,11 @@ class InstanceWorker:
         self.iid = iid
         self.cluster = cluster
         self.accepting = True
+        self.alive = True             # cleared by the fault shim on death
+        self.failed_over = False      # supervisor re-homed the residents
+        self.retired = False          # elastic scale-down drain completed
+        self._retiring = False        # executor-side retirement in progress
+        self._lat_ewma: Optional[float] = None
         self.cooldown_until = 0.0
         self.role_since = time.perf_counter()
         self._pending_role: Optional[str] = None
@@ -205,6 +213,84 @@ class InstanceWorker:
 
     def _idle(self) -> bool:
         return self.load() == 0.0
+
+    # ----------------------------------------------------- latency / faults
+    def observe_latency(self, seconds: float) -> None:
+        """One worked executor iteration's wall time folds into the EWMA
+        the latency-aware router reads (straggler shedding)."""
+        self._lat_ewma = (seconds if self._lat_ewma is None
+                          else 0.3 * seconds + 0.7 * self._lat_ewma)
+
+    def latency_ms(self) -> float:
+        return 0.0 if self._lat_ewma is None else self._lat_ewma * 1e3
+
+    def _fault_now(self) -> float:
+        c = self.cluster
+        return (time.perf_counter() - c._t0) - c._faults_t0
+
+    def _fault_shim(self) -> Optional[str]:
+        """Injected-fault check at the top of every executor iteration.
+        Returns ``"dead"`` (executor must exit — the supervisor's sweep
+        re-homes the residents), ``"stalled"`` (slept a bounded slice;
+        caller re-loops), or None. Because this runs BETWEEN
+        ``_step_once`` iterations, a death always lands on a quiescent
+        instance state — exactly the cut the failover sweep assumes."""
+        plan = self.cluster.faults
+        if plan is None:
+            return None
+        now = self._fault_now()
+        if plan.dead(self.iid, now):
+            return "dead"
+        stall = plan.stall_until(self.iid, now)
+        if stall > now:
+            time.sleep(min(stall - now, 0.05))
+            return "stalled"
+        return None
+
+    def _fault_slowdown(self, elapsed: float) -> float:
+        """Sleep the extra time a ``Slowdown`` multiplier adds to a worked
+        iteration; returns the added seconds (bounded per iteration)."""
+        plan = self.cluster.faults
+        if plan is None:
+            return 0.0
+        m = plan.multiplier(self.iid, self._fault_now())
+        if m <= 1.0:
+            return 0.0
+        extra = min(elapsed * (m - 1.0), 0.25)
+        time.sleep(extra)
+        return extra
+
+    # --------------------------------------------------------- retirement
+    def request_retire(self) -> None:
+        """Supervisor-side (elastic scale-down): stop accepting; the
+        executor offloads its queues, migrates decode residents
+        byte-exact, and exits — mirroring the LB's ``remove_backend``
+        drain semantics."""
+        self.accepting = False
+        self._retiring = True
+
+    def _progress_retire(self) -> bool:
+        """Executor-side retirement: offload -> migrate residents -> exit.
+        Aborts (and resumes serving) if no sibling can take the work."""
+        c = self.cluster
+        if not self._offload():
+            self._retiring = False
+            self.accepting = True
+            return True
+        if self.scheduler is not None and self.scheduler.task is not None:
+            # in-flight prefill: abandon the partial pass and re-admit the
+            # request elsewhere (state is already PREFILLING)
+            task, self.scheduler.task = self.scheduler.task, None
+            self.prefill_stage.abandon(task)
+            try:
+                c._route_admission(task.req, task.mm_tokens, front=True)
+            except RuntimeError as e:
+                c._fail(task.req, f"retirement admission failed: {e!r}")
+        if self.decode_stage is not None:
+            for r in c._collect_residents(self):
+                c._rehome_resident(self, r, kv_ok=True)
+        self.retired = True
+        return True
 
     # ---------------------------------------------------------- switching
     def request_switch(self, new_role: str) -> None:
@@ -314,7 +400,17 @@ class InstanceWorker:
 
     def _run(self) -> None:
         c = self.cluster
-        while not c._stop.is_set():
+        while not c._stop.is_set() and not self.retired:
+            fate = self._fault_shim()
+            if fate == "dead":
+                # die between iterations: quiescent state, thread exits;
+                # the supervisor sweep joins us and re-homes everything
+                self.alive = False
+                self.accepting = False
+                return
+            if fate == "stalled":
+                continue
+            t0 = time.perf_counter()
             try:
                 worked = self._step_once()
             except Exception as e:                    # noqa: BLE001
@@ -324,10 +420,16 @@ class InstanceWorker:
                     self.decode_stage.abort_all(
                         lambda r: c._fail(r, f"instance failed: {e!r}"))
                 worked = False
-            if not worked:
+            if worked:
+                dt = time.perf_counter() - t0
+                dt += self._fault_slowdown(dt)
+                self.observe_latency(dt)
+            else:
                 time.sleep(0.002)
 
     def _step_once(self) -> bool:
+        if self._retiring:
+            return self._progress_retire()
         worked = False
         if self._pending_role is not None:
             worked |= self._progress_switch()
@@ -473,7 +575,8 @@ class ClusterEngine(EngineBase):
 
     def __init__(self, cfg: ArchConfig, params: Any, engine: EngineConfig,
                  cluster: Union[ClusterConfig, str] = "1EPD", *,
-                 hw: HardwareProfile = A100_80G):
+                 hw: HardwareProfile = A100_80G,
+                 faults: Optional[FaultPlan] = None):
         if isinstance(cluster, str):
             cluster = ClusterConfig(spec=cluster)
         super().__init__(cfg, params, engine)
@@ -494,6 +597,14 @@ class ClusterEngine(EngineBase):
                                           kit=self.kit)
         roles = ClusterSpec(cluster.spec).roles()
         self._t0 = time.perf_counter()
+        # fault injection: plan times are relative to _faults_t0 (0 = the
+        # engine's birth; set_fault_plan rebases to "now")
+        self.faults = faults
+        self._faults_t0 = 0.0
+        self._started = False
+        self._next_iid = len(roles)     # elastic adds never reuse an iid
+        self.scale_log: list[tuple[float, str, int, str]] = []
+        self._scale_cooldown_until = 0.0
         self.instances = [InstanceWorker(i, r, self)
                           for i, r in enumerate(roles)]
         for letter in "PD":
@@ -507,9 +618,18 @@ class ClusterEngine(EngineBase):
         self.switch_log: list[tuple[float, int, str, str]] = []
         self._monitor_thread: Optional[threading.Thread] = None
 
+    def set_fault_plan(self, plan: Optional[FaultPlan]) -> None:
+        """Install (or clear) a fault plan on a LIVE engine. Plan times
+        are relative to now — ``Death(iid, at=0.0)`` kills instance
+        ``iid`` at its executor's next iteration — so tests can reach a
+        steady state first, then inject."""
+        self._faults_t0 = time.perf_counter() - self._t0
+        self.faults = plan
+
     # ------------------------------------------------------------- routing
     def _serving(self, letter: str) -> list[InstanceWorker]:
-        return [i for i in self.instances if i.serves(letter)]
+        return [i for i in self.instances
+                if i.serves(letter) and i.alive and not i.retired]
 
     def _pick(self, letter: str) -> InstanceWorker:
         insts = self._serving(letter)
@@ -586,14 +706,17 @@ class ClusterEngine(EngineBase):
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:
+        self._started = True
         for inst in self.instances:
             inst.start()
             self._threads.append(inst.thread)
-        if self.ccfg.role_switch:
-            self._monitor_thread = threading.Thread(
-                target=self._monitor_loop, daemon=True, name="monitor")
-            self._monitor_thread.start()
-            self._threads.append(self._monitor_thread)
+        # the supervisor always runs: dead-instance failover must work on
+        # every topology, not only when role switching or elastic scaling
+        # is configured (those duties are gated on their config flags)
+        self._monitor_thread = threading.Thread(
+            target=self._supervisor_loop, daemon=True, name="supervisor")
+        self._monitor_thread.start()
+        self._threads.append(self._monitor_thread)
 
     def stop(self, timeout: float = 5.0) -> None:
         """Signal every executor + the monitor, join them, then drain all
@@ -611,16 +734,202 @@ class ClusterEngine(EngineBase):
             inst.role_since = now
         self._fail_residents(error)
 
-    # -------------------------------------------------------- role monitor
-    def _monitor_loop(self) -> None:
+    # ----------------------------------------------------------- failover
+    def _collect_residents(self, inst: InstanceWorker) -> list[dict]:
+        """Export every decode resident of ``inst``: ψ_PD-parked handoffs
+        (admitted to the pool, not yet slotted) + live decode slots. Only
+        safe on the instance's executor thread, or after that thread has
+        exited (death / retirement) — the structures are executor-private."""
+        residents: list[dict] = []
+        if inst.psi_pd is not None:
+            for h in inst.psi_pd.drain():
+                residents.append({
+                    "req": h.req, "mm_tokens": h.mm_tokens,
+                    "last_tok": h.first_tok, "position": h.total,
+                    "x_pending": (h.x_last if h.first_tok is None else None)})
+        if inst.decode_stage is not None:
+            residents.extend(inst.decode_stage.evacuate())
+        return residents
+
+    def _rehome_resident(self, src: InstanceWorker, r: dict, *,
+                         kv_ok: bool) -> None:
+        """Move one decode resident off ``src``: byte-exact ψ_PD
+        extract/inject migration when the KV is reachable (greedy streams
+        stay bit-identical), else preemption-replay from the prompt."""
+        req = r["req"]
+        if req.finished:
+            with src.kv.lock:
+                src.kv.mgr.free(req.req_id)
+            return
+        if kv_ok:
+            try:
+                k, v = src.kv.extract(req.req_id)
+                payload = MigratedPrefill(
+                    req=req, first_tok=r["last_tok"], total=r["position"],
+                    mm_tokens=r["mm_tokens"], k_blocks=k, v_blocks=v,
+                    keys=None, x_last=r["x_pending"])
+                self._route_migration(payload)
+                self._stats.bump("fault_failovers")
+                return
+            except RuntimeError:
+                pass     # no surviving D sibling: fall through to replay
+        with src.kv.lock:
+            src.kv.mgr.free(req.req_id)
+        req.reset_generation()
+        self._stats.bump("preemptions")
+        self._stats.bump("fault_replays")
+        self._requeue(req, r["mm_tokens"])    # fails the req if unroutable
+
+    def _failover_instance(self, inst: InstanceWorker) -> None:
+        """Re-home everything a dead instance held (supervisor thread;
+        the executor has exited, so its channels/slots have one toucher).
+        Queued work reroutes losslessly; in-flight prefill re-admits from
+        the prompt; decode residents migrate byte-exact when the dead
+        pool is still reachable, else replay."""
+        inst.failed_over = True
+        self._stats.bump("instance_deaths")
+        death = (self.faults.death_for(inst.iid)
+                 if self.faults is not None else None)
+        kv_ok = death.kv_reachable if death is not None else True
+        for pop, _putback, req_of, route in inst._channels():
+            while True:
+                item = pop()
+                if item is None:
+                    break
+                try:
+                    route(item)
+                    self._stats.bump("jobs_rerouted")
+                except RuntimeError as e:
+                    self._fail(req_of(item),
+                               f"no surviving instance: {e!r}")
+        sched = inst.scheduler
+        if sched is not None and sched.task is not None:
+            task, sched.task = sched.task, None
+            inst.prefill_stage.abandon(task)
+            try:
+                self._route_admission(task.req, task.mm_tokens, front=True)
+                self._stats.bump("jobs_rerouted")
+            except RuntimeError as e:
+                self._fail(task.req, f"no surviving instance: {e!r}")
+        if inst.decode_stage is not None:
+            for r in self._collect_residents(inst):
+                self._rehome_resident(inst, r, kv_ok=kv_ok)
+
+    def _sweep_dead_instances(self) -> None:
+        for inst in list(self.instances):
+            if inst.alive or inst.failed_over:
+                continue
+            t = inst.thread
+            if t is not None and t.is_alive():
+                t.join(timeout=1.0)
+                if t.is_alive():
+                    continue              # executor still exiting: retry
+            self._failover_instance(inst)
+
+    def _reap_retired(self) -> None:
+        """Drop instances whose elastic retirement completed (their
+        executor migrated everything out and exited)."""
+        for inst in list(self.instances):
+            if not inst.retired:
+                continue
+            t = inst.thread
+            if t is not None and t.is_alive():
+                continue                  # exiting; reap next tick
+            # atomic list swap: router threads iterating the old list are
+            # unaffected (the retired instance routes nothing anyway)
+            self.instances = [i for i in self.instances if i is not inst]
+            self._stats.bump("scale_downs")
+            self.scale_log.append((time.perf_counter() - self._t0, "down",
+                                   inst.iid, inst.role))
+
+    # ------------------------------------------------------ elastic scaling
+    def add_instance(self, role: str) -> InstanceWorker:
+        """Elastic scale-up (ElasticMM-style): spawn a new instance of
+        ``role`` and start its executor if the engine is running."""
+        if role not in ("E", "P", "D", "EP", "EPD"):
+            raise ValueError(f"unknown role {role!r}")
+        inst = InstanceWorker(self._next_iid, role, self)
+        self._next_iid += 1
+        self.instances = self.instances + [inst]
+        if self._started:
+            inst.start()
+            self._threads.append(inst.thread)
+        self._stats.bump("scale_ups")
+        self.scale_log.append((time.perf_counter() - self._t0, "up",
+                               inst.iid, role))
+        return inst
+
+    def remove_instance(self, iid: int) -> bool:
+        """Elastic scale-down: request a drain-and-retire of instance
+        ``iid`` (offload queues, migrate decode residents byte-exact,
+        executor exits; the supervisor reaps it). Refuses — returning
+        False — when the instance is dead/retiring or is the last server
+        of any stage letter it serves."""
+        inst = next((i for i in self.instances if i.iid == iid), None)
+        if (inst is None or not inst.alive or inst.retired
+                or inst._retiring):
+            return False
+        for letter in "EPD":
+            if inst.serves(letter) and len(self._serving(letter)) <= 1:
+                return False
+        inst.request_retire()
+        return True
+
+    def autoscale_once(self) -> Optional[tuple[str, str]]:
+        """One elastic-scaling evaluation (public so tests and benchmarks
+        drive it without the timer): consult the LoadEstimator's per-stage
+        utilization and add/remove ONE instance, under cooldown and
+        min/max fleet bounds. Returns ``(op, letter)`` or None."""
+        now = time.perf_counter() - self._t0
+        if now < self._scale_cooldown_until:
+            return None
+        live = [i for i in self.instances
+                if i.alive and not i.retired and not i._retiring]
+        counts = {s: sum(1 for i in live if i.serves(s)) for s in "EPD"}
+        hint = self.load_estimator.suggest_scale(
+            counts, up=self.ccfg.scale_up_util,
+            down=self.ccfg.scale_down_util)
+        if hint is None:
+            return None
+        op, letter = hint
+        if op == "up":
+            if len(live) >= self.ccfg.max_instances:
+                return None
+            self.add_instance(letter)
+            self._scale_cooldown_until = now + self.ccfg.scale_cooldown
+            return ("up", letter)
+        if len(live) <= self.ccfg.min_instances:
+            return None
+        cands = [i for i in live if i.role == letter]
+        if not cands:
+            return None                   # only multi-letter servers left
+        victim = min(cands, key=lambda i: i.load())
+        if self.remove_instance(victim.iid):
+            self._scale_cooldown_until = now + self.ccfg.scale_cooldown
+            return ("down", letter)
+        return None
+
+    # ----------------------------------------------------------- supervisor
+    def _supervisor_loop(self) -> None:
         while not self._stop.wait(self.ccfg.monitor_interval):
             try:
-                self.monitor_once()
+                self.supervise_once()
             except Exception:                         # noqa: BLE001
                 # a broken evaluation skips this tick, never dies — but
                 # the failure must be diagnosable (a silently dead
-                # monitor = role switching silently off)
+                # supervisor = failover/switching silently off)
                 self._stats.bump("monitor_errors")
+
+    def supervise_once(self) -> None:
+        """One supervisor tick (public so tests drive it deterministically):
+        dead-instance failover sweep, retired-instance reaping, then the
+        config-gated duties — elastic scaling and role switching."""
+        self._sweep_dead_instances()
+        self._reap_retired()
+        if self.ccfg.elastic:
+            self.autoscale_once()
+        if self.ccfg.role_switch:
+            self.monitor_once()
 
     def monitor_once(self) -> Optional[tuple[int, str, str]]:
         """One role-switch evaluation (public so tests and benchmarks can
@@ -633,7 +942,9 @@ class ClusterEngine(EngineBase):
         requested, else None."""
         if any(i._pending_role is not None for i in self.instances):
             return None                       # one switch in flight at a time
-        singles = [i for i in self.instances if len(i.role) == 1]
+        singles = [i for i in self.instances
+                   if len(i.role) == 1 and i.alive and not i.retired
+                   and not i._retiring]
         if len(singles) < 2:
             return None
         demand = self.load_estimator.stage_demand()
@@ -668,18 +979,30 @@ class ClusterEngine(EngineBase):
 
     # ------------------------------------------------------------- queries
     def current_roles(self) -> list[str]:
-        """Live role of every instance (changes as the monitor re-roles)."""
-        return [i.role for i in self.instances]
+        """Live role of every serving instance (changes as the monitor
+        re-roles and as instances die / scale in and out)."""
+        return [i.role for i in self.instances
+                if i.alive and not i.retired]
 
     def queue_depth(self) -> int:
-        return int(sum(i.load() for i in self.instances))
+        return int(sum(i.load() for i in self.instances
+                       if i.alive and not i.retired))
 
     def kv_block_counts(self) -> tuple[int, int]:
         free = total = 0
         for inst in self.instances:
+            if not inst.alive or inst.retired:
+                continue             # a dead pool serves no new requests
             kv = inst.kv
             if kv is not None:
                 with kv.lock:
                     free += kv.mgr.free_blocks
                 total += self.ecfg.kv_blocks
         return (free, total)
+
+    def instance_states(self) -> dict[str, int]:
+        alive = sum(1 for i in self.instances if i.alive and not i.retired)
+        return {"alive": alive,
+                "dead": sum(1 for i in self.instances if not i.alive),
+                "retiring": sum(1 for i in self.instances
+                                if i._retiring and not i.retired)}

@@ -382,12 +382,20 @@ class EngineBase:
         """Stage letters served, one entry per instance."""
         return ["EPD"]
 
+    def instance_states(self) -> dict[str, int]:
+        """Fleet liveness counts (the ClusterEngine reports per-instance
+        deaths and elastic retirements; single-pipeline engines are one
+        implicit instance)."""
+        return {"alive": 1 if self._running() else 0, "dead": 0,
+                "retiring": 0}
+
     def health(self) -> dict[str, Any]:
         """Liveness + pressure snapshot (gateway /health, LB probes)."""
         free, total = self.kv_block_counts()
         return {"ok": self._running(), "roles": self.current_roles(),
                 "queue_depth": self.queue_depth(),
-                "kv_free_blocks": free, "kv_total_blocks": total}
+                "kv_free_blocks": free, "kv_total_blocks": total,
+                "instances": self.instance_states()}
 
     # --------------------------------------------------- encode-side shared
     def _run_encode_shard(self, stage: EncodeStage, req: ServeRequest,

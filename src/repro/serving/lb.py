@@ -64,6 +64,7 @@ class Backend:
         self.draining = False         # no new routes; in-flight finishes
         self.ewma_ms: Optional[float] = None
         self.consecutive_failures = 0
+        self.consecutive_successes = 0
         self.probes = 0
 
     def serves_encode(self) -> bool:
@@ -72,9 +73,18 @@ class Backend:
     def observe_probe(self, latency_ms: float, ok: bool,
                       alpha: float) -> None:
         self.probes += 1
-        self.ewma_ms = (latency_ms if self.ewma_ms is None
-                        else alpha * latency_ms + (1 - alpha) * self.ewma_ms)
-        self.consecutive_failures = 0 if ok else self.consecutive_failures + 1
+        if ok:
+            # failed probes don't update the EWMA: a probe that errored or
+            # timed out measures the failure path, not service latency, and
+            # would poison the routing score for long after recovery
+            self.ewma_ms = (latency_ms if self.ewma_ms is None
+                            else alpha * latency_ms
+                            + (1 - alpha) * self.ewma_ms)
+            self.consecutive_failures = 0
+            self.consecutive_successes += 1
+        else:
+            self.consecutive_failures += 1
+            self.consecutive_successes = 0
 
     def snapshot(self) -> dict[str, Any]:
         free, total = self.engine.kv_block_counts()
@@ -122,8 +132,10 @@ class LBTicket:
         while True:
             gen, handle = self._current()
             try:
-                out = handle.result(timeout=min(_FAILOVER_POLL,
-                                                deadline - time.time()))
+                # the deadline can race past between the loop check and
+                # here — clamp so handle.result never sees a negative wait
+                wait = max(0.0, min(_FAILOVER_POLL, deadline - time.time()))
+                out = handle.result(timeout=wait)
             except RequestTimeout:
                 if time.time() >= deadline:
                     raise RequestTimeout(self.req_id, timeout) from None
@@ -239,7 +251,7 @@ class LoadBalancer:
         ticket = LBTicket(self, best, handle)
         with self._lock:
             self.tickets[req.req_id] = ticket
-        self.counters["routed"] += 1
+            self.counters["routed"] += 1
         return ticket
 
     def abort(self, req_id: int, reason: str = "aborted by client") -> bool:
@@ -279,12 +291,22 @@ class LoadBalancer:
                     try:
                         best = min(cands, key=self.score)
                         t._reassign(best, best.engine.submit(clone))
-                        self.counters["failovers"] += 1
+                        with self._lock:
+                            self.counters["failovers"] += 1
                     except Exception:                 # noqa: BLE001
-                        self.counters["failover_failures"] += 1
+                        with self._lock:
+                            self.counters["failover_failures"] += 1
                 else:
+                    with self._lock:
+                        self.counters["failover_failures"] += 1
+            try:
+                dead.engine.abort(req.req_id, reason)
+            except Exception:                         # noqa: BLE001
+                # a dead engine is allowed to be *really* dead — a raising
+                # abort must not kill the health loop (lb-health thread)
+                # mid-sweep and leave the rest of the victims stranded
+                with self._lock:
                     self.counters["failover_failures"] += 1
-            dead.engine.abort(req.req_id, reason)
 
     # -------------------------------------------------------- health loop
     def health_check_once(self) -> None:
@@ -302,14 +324,21 @@ class LoadBalancer:
                 ok = False
             ms = (time.perf_counter() - t0) * 1e3
             b.observe_probe(ms, ok, self.ewma_alpha)
-            self.counters["health_probes"] += 1
+            with self._lock:
+                self.counters["health_probes"] += 1
             if (b.healthy and not ok
                     and b.consecutive_failures >= self.max_failures):
                 b.healthy = False
-                self.counters["backends_marked_unhealthy"] += 1
+                with self._lock:
+                    self.counters["backends_marked_unhealthy"] += 1
                 self._failover(b, reason=f"backend {b.name} unhealthy")
-            elif not b.healthy and ok:
-                b.healthy = True      # probe recovered: take traffic again
+            elif (not b.healthy and ok
+                    and b.consecutive_successes >= self.max_failures):
+                # symmetric hysteresis: one ok probe from a flapping
+                # backend must not re-admit it (and re-trigger a failover
+                # storm on the next blip) — demand the same streak length
+                # that marked it unhealthy
+                b.healthy = True
 
     def _health_loop(self) -> None:
         while not self._stop.wait(self.health_interval):

@@ -73,7 +73,13 @@ class ServeStats:
             "prefix_inflight_waits": 0,
             # distinct block-table widths the packed runner has padded to
             # (like packed_compiles: stops growing once warm)
-            "packed_table_widths": 0}
+            "packed_table_widths": 0,
+            # fault tolerance + elastic scaling (supervisor bookkeeping;
+            # the simulator's fault_stats uses the same key names so
+            # sim-vs-real cross-validation compares directly)
+            "instance_deaths": 0, "fault_failovers": 0,
+            "fault_replays": 0, "jobs_rerouted": 0,
+            "scale_ups": 0, "scale_downs": 0}
         self.live_cache_bytes = 0        # dense-mode KV accounting
 
     def peak(self, live_bytes: int) -> None:
@@ -919,6 +925,35 @@ class PagedDecodeStage:
             self._slots[i] = None
             self._x_pending[i] = None
             self._tables[i, :] = self.kv.trash
+
+    def evacuate(self) -> list[dict]:
+        """Export every live slot for failover/retirement WITHOUT freeing
+        its pool blocks (the caller migrates or frees per resident).
+
+        Must run on the instance's executor thread, or after that thread
+        has exited (dead instance): the slot arrays are executor-private.
+        Each entry carries exactly what a ψ_PD re-admission needs:
+        ``last_tok``/``position`` mirror a normal handoff's
+        (first_tok, total); a pending-x slot (fully-cached admit that has
+        not sampled yet) instead exports ``x_pending`` with position+1 KV
+        tokens, matching the token-less handoff shape."""
+        out: list[dict] = []
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            pending = self._x_pending[i]
+            out.append({
+                "req": s["req"], "mm_tokens": s["mm_tokens"],
+                "last_tok": None if pending is not None
+                else int(self._tokens[i]),
+                "position": int(self._positions[i]) + (1 if pending is not None
+                                                       else 0),
+                "x_pending": None if pending is None else np.asarray(pending),
+            })
+            self._slots[i] = None
+            self._x_pending[i] = None
+            self._tables[i, :] = self.kv.trash
+        return out
 
     @property
     def active_count(self) -> int:

@@ -166,12 +166,27 @@ class ClusterConfig:
     stage set/pools -> cooldown. ``monitor_interval`` is how often the
     monitor thread re-evaluates; ``switch_cooldown`` is the anti-thrash
     window an instance sits out after switching. A stage never drops to
-    zero instances (donors need >= 2 of their letter)."""
+    zero instances (donors need >= 2 of their letter).
+
+    Elastic scaling (``elastic=True``) lets the supervisor *add/remove*
+    instances (ElasticMM-style) instead of only re-roling fixed ones:
+    when the ``LoadEstimator``'s per-device utilization for a stage
+    crosses ``scale_up_util`` a new instance of that letter is spawned
+    (fleet capped at ``max_instances``); below ``scale_down_util`` the
+    idlest multi-instance stage drains one instance (never below
+    ``min_instances`` total, never to zero of a served letter), with
+    ``scale_cooldown`` seconds between decisions."""
     spec: str = "1EPD"
-    assign_policy: str = "least_loaded"     # or "round_robin"
+    assign_policy: str = "least_loaded"     # round_robin | latency_aware
     role_switch: bool = False
     monitor_interval: float = 0.25          # seconds (real-time monitor)
     switch_cooldown: float = 1.0            # anti-thrash, seconds
+    elastic: bool = False
+    scale_up_util: float = 0.9              # device-sec/sec per instance
+    scale_down_util: float = 0.3
+    min_instances: int = 1
+    max_instances: int = 8
+    scale_cooldown: float = 1.0             # seconds between scale ops
 
 
 @dataclass

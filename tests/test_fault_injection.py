@@ -1,0 +1,381 @@
+"""Fault injection, dead-instance failover, and elastic scaling.
+
+Three layers of coverage for the degraded-cluster path:
+
+* pure units — ``FaultPlan`` window algebra, the latency-aware assigner's
+  straggler shedding, ``LoadEstimator`` scale hints;
+* simulator — instance deaths (KV reachable and not), stalls and
+  slowdowns injected into the discrete-event loop: every request still
+  finishes, nothing strands, and the fault counters tell the story;
+* real ``ClusterEngine`` — a mid-decode death re-homes residents
+  byte-exact (greedy streams stay bit-identical to an undisturbed run),
+  elastic add/remove strands nothing, and the simulator agrees with the
+  real engine on the structural fault metrics under the same plan.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import A100_80G, SLO, Death, FaultPlan, Slowdown, Stall
+from repro.core.cluster import ClusterSpec, build_cluster
+from repro.core.request import Request
+from repro.core.scheduler import LATENCY_AWARE, Assigner
+from repro.core.simulator import Simulator
+
+TEXT_CFG = get_config("internlm2-20b")          # no modality: P/D suffice
+
+
+# --------------------------------------------------------------- units
+def test_fault_plan_windows():
+    plan = FaultPlan(
+        slowdowns=[Slowdown(iid=0, start=1.0, factor=2.0, duration=2.0),
+                   Slowdown(iid=0, start=2.0, factor=3.0, duration=2.0)],
+        stalls=[Stall(iid=1, start=1.0, duration=0.5)],
+        deaths=[Death(iid=2, at=5.0, kv_reachable=False)])
+    assert plan.multiplier(0, 0.5) == 1.0
+    assert plan.multiplier(0, 1.5) == 2.0
+    assert plan.multiplier(0, 2.5) == 6.0       # overlapping: product
+    assert plan.multiplier(0, 3.5) == 3.0
+    assert plan.multiplier(1, 2.5) == 1.0       # other instance untouched
+    assert plan.stall_until(1, 1.2) == 1.5
+    assert plan.stall_until(1, 2.0) == 2.0      # no active stall: now
+    assert plan.death_for(2).kv_reachable is False
+    assert plan.death_for(0) is None
+    assert not plan.dead(2, 4.9) and plan.dead(2, 5.1)
+    assert plan.horizon == 5.0
+    assert FaultPlan().horizon == 0.0
+
+
+def test_latency_aware_assigner_sheds_straggler():
+    """A limping instance (8x the peer's service EWMA) receives a small
+    minority of picks instead of its round-robin half."""
+    class Stub:
+        def __init__(self, lat_ms):
+            self.accepting = True
+            self._lat = lat_ms
+            self.n = 0
+
+        def load(self):
+            return float(self.n)
+
+        def latency_ms(self):
+            return self._lat
+
+    fast, slow = Stub(10.0), Stub(80.0)
+    a = Assigner(LATENCY_AWARE)
+    for _ in range(27):
+        picked = [fast, slow][a.pick([fast, slow])]
+        picked.n += 1
+    assert fast.n > 2 * slow.n, (fast.n, slow.n)
+    # with no latency signal yet it degrades to least-loaded (no crash)
+    cold = [Stub(0.0), Stub(0.0)]
+    cold[1].n = 5
+    assert Assigner(LATENCY_AWARE).pick(cold) == 0
+
+
+def test_load_estimator_scale_hints():
+    from repro.core.load_estimator import LoadEstimator
+    est = LoadEstimator(TEXT_CFG, A100_80G)
+    # a hot decode-heavy arrival stream: 50 req/s of 400-token outputs
+    for i in range(50):
+        est.observe_raw(i * 0.02, n_patches=0, prefill_tokens=128,
+                        output_len=400)
+    util = est.utilization({"E": 0, "P": 1, "D": 1})
+    assert util["E"] == 0.0                     # no mm demand at all
+    assert util["D"] > util["P"]
+    assert est.suggest_scale({"P": 1, "D": 1}) == ("up", "D")
+    # demand against a zero-instance stage flags as inf
+    assert est.utilization({"P": 0, "D": 1})["P"] == float("inf")
+    # a nearly idle stream with a wide fleet suggests shrinking it
+    idle = LoadEstimator(TEXT_CFG, A100_80G)
+    for i in range(10):
+        idle.observe_raw(i * 60.0, n_patches=0, prefill_tokens=16,
+                         output_len=2)
+    hint = idle.suggest_scale({"P": 2, "D": 4})
+    assert hint is not None and hint[0] == "down"
+    # ...but never below one instance of a served letter
+    assert idle.suggest_scale({"P": 1, "D": 1}) is None
+
+
+# ----------------------------------------------------------- simulator
+def _sim_reqs(n=8, out_len=200, rate=50.0):
+    return [Request(req_id=i, arrival=i / rate, prompt_len=64, n_items=0,
+                    patches_per_item=0, tokens_per_patch=0,
+                    output_len=out_len, slo=SLO(5.0, 0.5))
+            for i in range(n)]
+
+
+def _run_sim(faults=None, policy="round_robin", spec="1P2D", **req_kw):
+    cspec = ClusterSpec(spec, irp=False, assign_policy=policy)
+    sim = Simulator(TEXT_CFG, A100_80G, build_cluster(cspec, TEXT_CFG,
+                                                      A100_80G),
+                    assign_policy=policy, irp=False, faults=faults)
+    out = sim.run(_sim_reqs(**req_kw))
+    return sim, out
+
+
+def _mid_decode_time():
+    """A timestamp at which the whole batch is resident in decode (after
+    every ψ_PD handoff, before the first completion) — found from a dry
+    run; the simulator is deterministic, so it transfers to fault runs."""
+    _, out = _run_sim()
+    t_lo = max(r.pd_transfer_end for r in out)
+    t_hi = min(r.finish for r in out)
+    assert t_lo < t_hi, "workload finishes before all residents decode"
+    return (t_lo + t_hi) / 2.0
+
+
+def test_sim_death_kv_reachable_migrates_residents():
+    t = _mid_decode_time()
+    plan = FaultPlan(deaths=[Death(iid=1, at=t)])     # first D of "1P2D"
+    sim, out = _run_sim(faults=plan)
+    assert all(r.done() for r in out)
+    assert sim.fault_stats["instance_deaths"] == 1
+    assert sim.fault_stats["fault_failovers"] >= 1    # residents moved
+    assert sim.fault_stats["fault_replays"] == 0      # KV was reachable
+    assert sim.fault_stats["stranded"] == 0
+    # survivors absorbed the work: the run still produces sane timelines
+    for r in out:
+        assert r.arrival <= r.prefill_end <= r.finish
+
+
+def test_sim_death_kv_unreachable_replays_from_prompt():
+    t = _mid_decode_time()
+    plan = FaultPlan(deaths=[Death(iid=1, at=t, kv_reachable=False)])
+    sim, out = _run_sim(faults=plan)
+    assert all(r.done() for r in out)
+    assert sim.fault_stats["instance_deaths"] == 1
+    assert sim.fault_stats["fault_replays"] >= 1      # back through P
+    assert sim.fault_stats["fault_failovers"] == 0
+    assert sim.fault_stats["stranded"] == 0
+
+
+def test_sim_death_with_no_surviving_stage_strands_not_hangs():
+    """Killing the ONLY decode instance leaves its residents nowhere to
+    go — they strand (counted) instead of wedging the event loop."""
+    _, dry = _run_sim(spec="2P1D")
+    t_lo = max(r.pd_transfer_end for r in dry)
+    t_hi = min(r.finish for r in dry)
+    plan = FaultPlan(deaths=[Death(iid=2, at=(t_lo + t_hi) / 2)])
+    sim, out = _run_sim(faults=plan, spec="2P1D")     # terminates
+    assert sim.fault_stats["instance_deaths"] == 1
+    assert sim.fault_stats["stranded"] >= 1
+
+
+def test_sim_stall_delays_but_finishes():
+    base_sim, base = _run_sim()
+    t = _mid_decode_time()
+    plan = FaultPlan(stalls=[Stall(iid=1, start=t, duration=2.0)])
+    sim, out = _run_sim(faults=plan)
+    assert all(r.done() for r in out)
+    assert sim.fault_stats["stranded"] == 0
+    assert max(r.finish for r in out) > max(r.finish for r in base)
+
+
+def test_sim_slowdown_straggler_shed_with_latency_aware_routing():
+    """A 6x-slow D instance under round-robin drags mean latency; the
+    latency-aware policy sheds load off the straggler and recovers a
+    solid chunk of it."""
+    slow = FaultPlan(slowdowns=[Slowdown(iid=1, start=0.0, factor=6.0)])
+    _, rr = _run_sim(faults=slow, policy="round_robin")
+    _, la = _run_sim(faults=slow, policy="latency_aware")
+    assert all(r.done() for r in rr) and all(r.done() for r in la)
+    lat = lambda out: sum(r.e2e_latency for r in out) / len(out)  # noqa: E731
+    assert lat(la) < lat(rr), (lat(la), lat(rr))
+
+
+# -------------------------------------------------------- real cluster
+@pytest.fixture(scope="module")
+def text_setup():
+    import jax
+    from repro.models import build_model
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _wait(pred, timeout=60.0, dt=0.02):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(dt)
+    return False
+
+
+def _text_reqs(cfg, prompts, max_new, base=0):
+    from repro.serving import ServeRequest
+    return [ServeRequest(req_id=base + i, prompt=p, max_new_tokens=max_new)
+            for i, p in enumerate(prompts)]
+
+
+def _reference_tokens(cfg, params, ec, cc, prompts, max_new):
+    from repro.serving import ClusterEngine
+    clu = ClusterEngine(cfg, params, ec, cc)
+    clu.start()
+    try:
+        reqs = _text_reqs(cfg, prompts, max_new)
+        for r in reqs:
+            clu.submit(r)
+        return [list(clu.result(r.req_id, timeout=300).tokens)
+                for r in reqs]
+    finally:
+        clu.stop()
+
+
+@pytest.mark.cluster
+@pytest.mark.slow
+@pytest.mark.parametrize("kv_reachable", [True, False],
+                         ids=["kv-migrate", "kv-lost-replay"])
+def test_mid_decode_death_bit_parity(text_setup, kv_reachable):
+    """Kill a decode instance while its residents are mid-stream. With
+    the KV reachable they migrate byte-exact (ψ_PD extract/inject); with
+    it lost they replay from the prompt. Either way every request
+    finishes with tokens bit-identical to an undisturbed run, and
+    nothing strands."""
+    from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                               RequestState)
+    cfg, params = text_setup
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, 15).astype(np.int32)
+               for _ in range(4)]
+    max_new = 16
+    ec = EngineConfig(n_encode_workers=1, max_new_tokens=max_new,
+                      decode_batch=2, kv_blocks=32, kv_block_size=16,
+                      max_seq_len=128)
+    # monitor_interval is huge so the test drives supervise_once itself
+    cc = ClusterConfig(spec="1P2D", monitor_interval=60.0)
+    ref = _reference_tokens(cfg, params, ec, cc, prompts, max_new)
+
+    clu = ClusterEngine(cfg, params, ec, cc)
+    clu.start()
+    try:
+        reqs = _text_reqs(cfg, prompts, max_new)
+        for r in reqs:
+            clu.submit(r)
+        # steady state: every request handed off to a decode pool (some
+        # may still be token-less — exactly the victims the byte-exact
+        # path must keep bit-identical), none finished yet
+        assert _wait(lambda: clu.stats["pd_migrations"] >= len(reqs),
+                     timeout=120)
+        assert not any(r.finished for r in reqs)
+        victim = clu.instances[1]               # first D of "1P2D"
+        assert victim.role == "D"
+        clu.set_fault_plan(FaultPlan(deaths=[
+            Death(iid=1, at=0.0, kv_reachable=kv_reachable)]))
+        assert _wait(lambda: not victim.alive), "executor ignored death"
+        clu.supervise_once()                    # failover sweep
+        outs = [clu.result(r.req_id, timeout=300) for r in reqs]
+    finally:
+        clu.stop()
+    assert all(o.state is RequestState.DONE for o in outs)
+    for r, expect in zip(reqs, ref):
+        assert list(r.tokens) == expect, f"req {r.req_id} diverged"
+    assert clu.stats["instance_deaths"] == 1
+    if kv_reachable:
+        assert clu.stats["fault_failovers"] >= 1
+        assert clu.stats["fault_replays"] == 0
+    else:
+        assert clu.stats["fault_replays"] >= 1
+        assert clu.stats["fault_failovers"] == 0
+    states = clu.instance_states()
+    assert states["dead"] == 1 and states["alive"] == 2
+    for inst in clu.instances:
+        if inst.alive and inst.kv is not None:
+            assert inst.kv.mgr.used_blocks == 0
+
+
+@pytest.mark.cluster
+@pytest.mark.slow
+def test_elastic_add_remove_zero_stranded(text_setup):
+    """Scale up mid-traffic, then retire the ORIGINAL decode instance
+    while it still holds residents: they migrate to the newcomer, the
+    supervisor reaps the drained instance, and every request completes
+    full-length."""
+    from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                               RequestState)
+    cfg, params = text_setup
+    rng = np.random.default_rng(9)
+    ec = EngineConfig(n_encode_workers=1, max_new_tokens=8, decode_batch=2,
+                      kv_blocks=32, kv_block_size=16, max_seq_len=128)
+    clu = ClusterEngine(cfg, params, ec,
+                        ClusterConfig(spec="1P1D", monitor_interval=60.0))
+    clu.start()
+    try:
+        reqs = _text_reqs(
+            cfg, [rng.integers(0, cfg.vocab, 12).astype(np.int32)
+                  for _ in range(6)], max_new=8)
+        for r in reqs[:3]:
+            clu.submit(r)
+        added = clu.add_instance("D")
+        assert added.iid == 2 and len(clu.instances) == 3
+        for r in reqs[3:]:
+            clu.submit(r)
+        # the only P and the (not-yet-started) last D of a letter refuse
+        assert clu.remove_instance(0) is False
+        assert _wait(lambda: added.thread is not None
+                     and added.thread.is_alive())
+        assert clu.remove_instance(1) is True   # original D drains out
+        assert clu.remove_instance(1) is False  # already retiring
+        assert _wait(lambda: (clu.supervise_once() or
+                              len(clu.instances) == 2), timeout=120)
+        outs = [clu.result(r.req_id, timeout=300) for r in reqs]
+    finally:
+        clu.stop()
+    assert all(o.state is RequestState.DONE for o in outs)
+    assert all(len(o.tokens) == 8 for o in outs)
+    assert clu.stats["scale_ups"] == 1
+    assert clu.stats["scale_downs"] == 1
+    assert [i.iid for i in clu.instances] == [0, 2]
+    assert clu.scale_log and [e[1] for e in clu.scale_log] == ["up", "down"]
+    for inst in clu.instances:
+        if inst.kv is not None:
+            assert inst.kv.mgr.used_blocks == 0
+
+
+@pytest.mark.cluster
+@pytest.mark.slow
+def test_sim_vs_real_structural_agreement_under_faults(text_setup):
+    """The same fault class — kill the first D of a "1P2D" topology with
+    every request resident mid-decode, KV reachable — produces the same
+    STRUCTURE in the simulator and the real engine: one death, residents
+    re-homed by migration (not replay), zero stranded, all complete."""
+    from repro.serving import (ClusterConfig, ClusterEngine, EngineConfig,
+                               RequestState)
+    cfg, params = text_setup
+    # --- simulator side (cost-model config of the same shape class)
+    t = _mid_decode_time()
+    sim, sim_out = _run_sim(faults=FaultPlan(deaths=[Death(iid=1, at=t)]))
+    # --- real side
+    rng = np.random.default_rng(11)
+    ec = EngineConfig(n_encode_workers=1, max_new_tokens=12, decode_batch=2,
+                      kv_blocks=32, kv_block_size=16, max_seq_len=128)
+    clu = ClusterEngine(cfg, params, ec,
+                        ClusterConfig(spec="1P2D", monitor_interval=60.0))
+    clu.start()
+    try:
+        reqs = _text_reqs(
+            cfg, [rng.integers(0, cfg.vocab, 15).astype(np.int32)
+                  for _ in range(4)], max_new=12)
+        for r in reqs:
+            clu.submit(r)
+        assert _wait(lambda: clu.stats["pd_migrations"] >= len(reqs),
+                     timeout=120)
+        clu.set_fault_plan(FaultPlan(deaths=[Death(iid=1, at=0.0)]))
+        assert _wait(lambda: not clu.instances[1].alive)
+        clu.supervise_once()
+        outs = [clu.result(r.req_id, timeout=300) for r in reqs]
+    finally:
+        clu.stop()
+    # structural agreement, not wall-clock agreement
+    assert clu.stats["instance_deaths"] == sim.fault_stats[
+        "instance_deaths"] == 1
+    assert clu.stats["fault_failovers"] >= 1
+    assert sim.fault_stats["fault_failovers"] >= 1
+    assert clu.stats["fault_replays"] == sim.fault_stats[
+        "fault_replays"] == 0
+    assert sim.fault_stats["stranded"] == 0
+    assert all(r.done() for r in sim_out)
+    assert all(o.state is RequestState.DONE for o in outs)

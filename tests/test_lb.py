@@ -13,7 +13,7 @@ import pytest
 from fake_engine import FakeEngine, finish
 from repro.serving import LoadBalancer, ServeRequest
 from repro.serving.lb import clone_request
-from repro.serving.types import RequestState
+from repro.serving.types import RequestState, RequestTimeout
 
 _IDS = iter(range(30_000, 40_000))
 
@@ -182,6 +182,87 @@ def test_unhealthy_backend_recovers_on_ok_probe():
     a.ok = True
     lb.health_check_once()
     assert lb.backends["a"].healthy
+
+
+def test_raising_abort_does_not_kill_health_sweep():
+    """Regression: ``_failover`` called ``dead.engine.abort`` unguarded
+    per victim, so a *really* dead engine (abort raises) killed
+    ``health_check_once`` — and with it the lb-health thread — leaving
+    the rest of the fleet unprobed and later victims stranded."""
+    class DeadEngine(FakeEngine):
+        def abort(self, req_id, reason="aborted by client"):
+            raise ConnectionError("engine process is gone")
+
+    a = DeadEngine("a", auto_complete=False)
+    b = FakeEngine("b", depth=8, tokens=(7,))     # busier: both route to a
+    lb = _lb(a, b, max_failures=1)
+    t1, t2 = lb.submit(_req()), lb.submit(_req())
+    assert {t1.backend.name, t2.backend.name} == {"a"}
+    a.ok = False
+    lb.health_check_once()        # must not raise
+    # BOTH victims were still resubmitted despite every abort raising
+    assert lb.counters["failovers"] == 2
+    assert lb.counters["failover_failures"] == 2      # the raising aborts
+    assert t1.result(timeout=5).tokens == [7]
+    assert t2.result(timeout=5).tokens == [7]
+    # and the sweep survives to probe again
+    lb.health_check_once()
+
+
+def test_flapping_backend_needs_consecutive_ok_probes():
+    """Regression: one ok probe re-admitted an unhealthy backend, so a
+    flapping backend oscillated and re-triggered failover storms. Now
+    recovery demands ``max_failures`` consecutive successes, and failed
+    probes stay out of the latency EWMA."""
+    a = FakeEngine("a")
+    lb = _lb(a, max_failures=2)
+    back = lb.backends["a"]
+    back.observe_probe(10.0, ok=True, alpha=0.3)
+    ewma_before = back.ewma_ms
+
+    a.ok = False
+    lb.health_check_once()
+    lb.health_check_once()
+    assert not back.healthy
+    # failed probes (exceptions here) must not pollute the latency EWMA
+    assert back.ewma_ms == ewma_before
+
+    a.ok = True
+    lb.health_check_once()        # 1 consecutive success: not yet
+    assert not back.healthy
+    a.ok = False
+    lb.health_check_once()        # flap! success streak resets
+    a.ok = True
+    lb.health_check_once()
+    assert not back.healthy       # streak is 1 again
+    lb.health_check_once()
+    assert back.healthy           # 2 consecutive successes: re-admitted
+
+
+def test_result_timeout_clamped_and_reraises_caller_timeout():
+    """Regression: ``LBTicket.result`` computed
+    ``min(_FAILOVER_POLL, deadline - now)`` — negative once the deadline
+    raced past — and re-raised ``RequestTimeout`` with the poll slice,
+    not the caller's timeout. Pin both: every per-slice wait is >= 0 and
+    the surfaced timeout is the caller's."""
+    a = FakeEngine("a", auto_complete=False)
+    lb = _lb(a)
+    t = lb.submit(_req())
+    seen = []
+    inner = t.handle
+
+    class Recorder:
+        req = inner.req
+
+        def result(self, timeout):
+            seen.append(timeout)
+            return inner.result(timeout=timeout)
+
+    t.handle = Recorder()
+    with pytest.raises(RequestTimeout) as ei:
+        t.result(timeout=0.25)
+    assert ei.value.waited == 0.25
+    assert seen and all(w >= 0.0 for w in seen)
 
 
 def test_clone_request_is_pristine():

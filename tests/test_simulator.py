@@ -105,6 +105,39 @@ def test_text_only_requests_skip_encode():
     assert all(r.enc_end == r.enc_start for r in out)
 
 
+def test_decode_rotation_no_tail_starvation():
+    """Regression: the decode batch was always ``decode_slots[:n]``, so
+    with residency > decode_batch the tail slots never received a step
+    until the head requests finished — long-output heads starved the
+    tail indefinitely. The rotating window must give EVERY resident
+    progress within a bounded number of steps."""
+    import heapq
+
+    from repro.core.instance import DecodeSlot, Instance
+    from repro.core.request import Request
+    from repro.core.simulator import Simulator
+
+    cfg = get_config("internlm2-20b")              # text-only: D is enough
+    inst = Instance("D", 1, cfg, A100_80G, decode_batch=2)
+    sim = Simulator(cfg, A100_80G, [inst])
+    out_len = 40
+    for i in range(6):                             # residency 3x the batch
+        sim.requests[i] = Request(
+            req_id=i, arrival=0.0, prompt_len=16, n_items=0,
+            patches_per_item=0, tokens_per_patch=0, output_len=out_len,
+            slo=SLO(5.0, 0.5))
+        inst.decode_slots.append(DecodeSlot(i, 17, out_len))
+    sim._maybe_decode(inst)
+    for _ in range(30):                            # 30 steps x batch 2
+        ev = heapq.heappop(sim._events)
+        sim.now = ev.time
+        getattr(sim, "_on_" + ev.kind)(ev)
+    assert len(inst.decode_slots) == 6             # nobody finished yet
+    # every slot advanced; without rotation slots [2:] sit at out_len
+    for s in inst.decode_slots:
+        assert s.remaining < out_len, f"slot {s.req_id} starved"
+
+
 @settings(max_examples=20, deadline=None)
 @given(rate=st.floats(0.05, 2.0), items=st.integers(1, 6),
        out_len=st.integers(1, 40), seed=st.integers(0, 5))
