@@ -43,6 +43,7 @@ if [ "$TIER" = "fast" ]; then
         "tests/test_cluster_engine.py::test_1epd_greedy_parity_bit_identical" \
         "tests/test_cluster_engine.py::test_spec_and_config_validation" \
         "tests/test_prefix_cache.py::test_cache_on_off_bit_identity_single_engine[packed]" \
+        "tests/test_overlap.py::test_overlap_greedy_bit_identity[packed-overlap]" \
         || exit $?
     echo "== fast tier: prefix_cache=on engine smoke (fully-cached admit) =="
     python -m pytest -q \
@@ -87,6 +88,12 @@ echo "== sanitizer: fault-injection suite under REPRO_LOCK_SANITIZER =="
 REPRO_LOCK_SANITIZER=1 python -m pytest -q tests/test_fault_injection.py \
     || exit 1
 
+echo "== sanitizer: encode-prefill overlap suite under REPRO_LOCK_SANITIZER =="
+# streaming ψ_EP publishes shard spans from encode workers while the
+# scheduler thread polls watermarks — ShardStream._lock must stay a leaf
+REPRO_LOCK_SANITIZER=1 python -m pytest -q tests/test_overlap.py \
+    || exit 1
+
 echo "== smoke: offline throughput benchmark (quick) =="
 python benchmarks/offline_throughput.py --quick || exit 1
 
@@ -96,9 +103,11 @@ python examples/epd_serve.py --requests 4 --new-tokens 4 || exit 1
 echo "== smoke: cluster serve example (2E1P1D, migrations) =="
 python examples/cluster_serve.py --requests 4 --new-tokens 4 || exit 1
 
-echo "== smoke: engine TTFT + mm-cache + KV-prefix-cache benchmark (quick) =="
-# includes the engine_prefix_cache/{off,on} multi-turn rows; the whole
-# engine-only sweep must stay under the 10-minute wall-clock bound
+echo "== smoke: engine TTFT + mm-cache + prefix-cache + overlap benchmark (quick) =="
+# includes the engine_prefix_cache/{off,on} multi-turn rows and the
+# engine_overlap/{off,on} many-image rows (TTFT floor must be strictly
+# lower overlap-on); the whole engine-only sweep must stay under the
+# 10-minute wall-clock bound
 timeout 600 python benchmarks/ttft.py --quick --engine-only || exit 1
 
 echo "== smoke: mixed-load scheduler (long prefill mid-decode, chunked) =="

@@ -30,6 +30,10 @@ CLASS_ALIASES: dict[tuple[str, str], str] = {
     ("PagedKVState", "pool_lock"): "kv.pool_lock",
     ("EncodeStage", "_lock"): "encode.lock",
     ("PsiEP", "_lock"): "psi_ep.lock",
+    # streaming ψ_EP (encode–prefill overlap): a LEAF — publish/fill/
+    # span_ready never take another lock, and PsiEP.add_shard publishes
+    # OUTSIDE psi_ep.lock, so no edge involves it
+    ("ShardStream", "_lock"): "shard_stream.lock",
     ("MMTokenCache", "_lock"): "mm_cache.lock",
     ("LoadBalancer", "_lock"): "lb.lock",
     ("LBTicket", "_lock"): "ticket.lock",

@@ -71,6 +71,18 @@ _POLICIES = {"least_loaded": LEAST_LOADED, "round_robin": ROUND_ROBIN,
              "latency_aware": LATENCY_AWARE}
 
 
+def _task_payload(task):
+    """Re-admission payload for an abandoned prefill task. A task whose
+    streamed ψ_EP shards have not all landed re-admits with its LIVE
+    :class:`ShardStream` (the replay gates on the same watermark and the
+    stream keeps filling wherever the surviving shards encode); a fully
+    merged task re-admits with its token set as before."""
+    st = getattr(task, "stream", None)
+    if st is not None and task.mm_tokens is None:
+        return st.merged if st.merged is not None else st
+    return task.mm_tokens
+
+
 class _NullDecode:
     """Decode stand-in for P-only instances: the shared ``Scheduler``
     co-schedules decode and prefill; with no D stage on the instance the
@@ -197,6 +209,18 @@ class InstanceWorker:
                 self.decode_stage if d else _NullDecode(),
                 self.psi_in, psi_pd_out, c._stats, c._stop,
                 on_fail=c._fail, runner=runner)
+        # encode lanes: on an instance serving BOTH E and a packed
+        # prefill/decode scheduler, shard jobs fold into the runner's
+        # per-iteration packed plan instead of the threaded encode pool
+        self._lanes = (c.ecfg.encode_lanes and e
+                       and self.scheduler is not None
+                       and self.scheduler.runner is not None
+                       and self.scheduler.runner.max_encode_groups > 0)
+        if self._lanes:
+            self.scheduler.runner.on_encoded = (
+                lambda w, t, _s=self.encode_stage:
+                c._lane_shard_done(_s, w, t))
+            self.scheduler.on_encode_fail = c._encode_job_failed
 
     # --------------------------------------------------------------- load
     def load(self) -> float:
@@ -206,6 +230,7 @@ class InstanceWorker:
              + self.requeue_q.qsize() + len(self.mig_q))
         if self.scheduler is not None:
             n += len(self.scheduler.queue)
+            n += len(self.scheduler.encode_q)
             n += int(self.scheduler.task is not None)
         if self.decode_stage is not None:
             n += self.decode_stage.active_count + self.psi_pd.qsize()
@@ -283,7 +308,8 @@ class InstanceWorker:
             task, self.scheduler.task = self.scheduler.task, None
             self.prefill_stage.abandon(task)
             try:
-                c._route_admission(task.req, task.mm_tokens, front=True)
+                c._route_admission(task.req, _task_payload(task),
+                                   front=True)
             except RuntimeError as e:
                 c._fail(task.req, f"retirement admission failed: {e!r}")
         if self.decode_stage is not None:
@@ -370,6 +396,11 @@ class InstanceWorker:
             out.append((lambda: sq.popleft() if sq else None,
                         sq.appendleft, first,
                         lambda it: c._route_admission(it[0], it[1])))
+            # lane-queued shard jobs reroute to any E-capable instance
+            # (offload on switch/retire; lossless failover on death)
+            eq = self.scheduler.encode_q
+            out.append((lambda: eq.popleft() if eq else None,
+                        eq.appendleft, first, c._route_encode_job))
         if not only_unserved or self.decode_stage is None:
             out.append((mig_pop, mig_put, lambda m: m.req,
                         c._route_migration))
@@ -436,7 +467,8 @@ class InstanceWorker:
         else:
             worked |= self._reroute_misrouted()
         if self._pending_role is None and self.encode_stage is not None:
-            worked |= self._encode_one()
+            worked |= (self._feed_encode_lanes() if self._lanes
+                       else self._encode_one())
         if self.decode_stage is not None:
             worked |= self._admit_migrations()
         if self.scheduler is not None:
@@ -476,6 +508,20 @@ class InstanceWorker:
             return False
         self.cluster._run_encode_shard(self.encode_stage, *job)
         return True
+
+    def _feed_encode_lanes(self) -> bool:
+        """Lane mode: move routed shard jobs from the cluster-facing
+        ``enc_q`` into the scheduler's lane queue so the packed runner
+        co-schedules them with decode slots + prefill chunks (executor
+        thread — the scheduler deque is private)."""
+        worked = False
+        while True:
+            try:
+                job = self.enc_q.get_nowait()
+            except queue.Empty:
+                return worked
+            self.scheduler.submit_encode_job(job)
+            worked = True
 
     def _admit_migrations(self) -> bool:
         """Inject inbound PD migrations into this instance's pool and hand
@@ -670,16 +716,26 @@ class ClusterEngine(EngineBase):
         except RuntimeError as e:
             self._fail(req, f"admission routing failed: {e!r}")
 
+    def _overlap_capable(self) -> bool:
+        # every P-capable instance runs the chunked-prefill Scheduler,
+        # which gates streamed admissions on the encoded watermark; the
+        # shared ψ_EP assembler keeps stream state across E-instance
+        # deaths (failover replays only the still-queued shard jobs)
+        return True
+
     def _dispatch_encode(self, req: ServeRequest,
                          key: Optional[str]) -> None:
         shards = self.encode_planner.plan_shards(req)
+        stream = self._open_overlap_stream(req, len(shards))
         try:
             for sid, idx in enumerate(shards):
                 self._route_encode_job((req, sid, len(shards), idx, key))
         except RuntimeError as e:
-            self._fail(req, f"encode routing failed: {e!r}")
-            self.psi_ep.drop(req.req_id)
-            self._fail_inflight(req, key, f"encode routing failed: {e!r}")
+            self._encode_job_failed(req, key,
+                                    f"encode routing failed: {e!r}")
+            return
+        if stream is not None:
+            self._start_streaming_prefill(req, stream)
 
     def _release_blocks(self, req: ServeRequest) -> None:
         # at most one instance pool holds this request's blocks; free is
@@ -807,7 +863,8 @@ class ClusterEngine(EngineBase):
             task, sched.task = sched.task, None
             inst.prefill_stage.abandon(task)
             try:
-                self._route_admission(task.req, task.mm_tokens, front=True)
+                self._route_admission(task.req, _task_payload(task),
+                                      front=True)
                 self._stats.bump("jobs_rerouted")
             except RuntimeError as e:
                 self._fail(task.req, f"no surviving instance: {e!r}")

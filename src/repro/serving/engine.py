@@ -397,6 +397,36 @@ class EngineBase:
                 "kv_free_blocks": free, "kv_total_blocks": total,
                 "instances": self.instance_states()}
 
+    # --------------------------------------------- encode–prefill overlap
+    def _overlap_capable(self) -> bool:
+        """Whether this engine's P path can consume a live ShardStream
+        (the paged scheduler loops gate chunks at the encoded watermark;
+        the dense baseline prefills whole prompts only)."""
+        return False
+
+    def _open_overlap_stream(self, req: ServeRequest, n_shards: int):
+        """Encode–prefill overlap: for a multi-shard request on a
+        stream-capable P path, switch ψ_EP to streaming publication and
+        return the stream. None keeps the buffered full-merge path —
+        overlap off, or the documented no-op cases (text-only requests
+        never reach here; single-shard requests have no tail to hide)."""
+        if (not self.ecfg.encode_overlap or n_shards < 2
+                or not self._overlap_capable()):
+            return None
+        return self.psi_ep.open_stream(req)
+
+    def _start_streaming_prefill(self, req: ServeRequest, stream) -> None:
+        """Admit a still-encoding request to P NOW: the scheduler's
+        chunk frontier trails the stream's encoded watermark while the
+        remaining shards encode."""
+        try:
+            req.advance(RequestState.PREFILLING)
+        except ValueError:
+            if req.finished:      # aborted between dispatch and here
+                return
+            raise
+        self._dispatch_prefill(req, stream)
+
     # --------------------------------------------------- encode-side shared
     def _run_encode_shard(self, stage: EncodeStage, req: ServeRequest,
                           sid: int, n: int, idx, key: Optional[str]) -> None:
@@ -405,29 +435,64 @@ class EngineBase:
 
         A finished (aborted) leader's shards skip the encoder — ψ_EP
         tombstones its assembly anyway, and ``abort`` has already
-        promoted a waiter to re-lead the key. Waiters are delivered
-        BEFORE the leader advances, so a leader aborted between the merge
-        and its own dispatch can never drag its waiters down with it."""
+        promoted a waiter to re-lead the key."""
         if req.finished:
             return
         try:
             tokens = stage.encode_shard(req, idx)
-            merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
-            if merged is None:
-                return
-            if key is not None:
-                self.mm_cache.put(key, merged)
-            self._deliver_inflight(req, key, merged)
-            if req.finished:
-                return
-            req.t_encoded = time.perf_counter()
-            req.advance(RequestState.PREFILLING)
-            self._dispatch_prefill(req, merged)
+            self._finish_encode_shard(req, sid, n, idx, key, tokens)
         except Exception as e:                      # noqa: BLE001
-            self._fail(req, f"encode failed: {e!r}")
-            self.psi_ep.drop(req.req_id)
-            # byte-identical waiters would fail identically
-            self._fail_inflight(req, key, f"encode failed: {e!r}")
+            self._encode_job_failed(req, key, f"encode failed: {e!r}")
+
+    def _finish_encode_shard(self, req: ServeRequest, sid: int, n: int,
+                             idx, key: Optional[str], tokens) -> None:
+        """Post-encode half of a shard job: assemble over ψ_EP and, on
+        the full merge, cache + deliver waiters + dispatch.
+
+        Waiters are delivered BEFORE the leader advances, so a leader
+        aborted between the merge and its own dispatch can never drag
+        its waiters down with it. A streaming (overlap) request is
+        already PREFILLING against the live stream, so the merge only
+        commits the cache and delivers waiters — never re-dispatches."""
+        streaming = self.psi_ep.has_stream(req.req_id)
+        merged = self.psi_ep.add_shard(req, sid, n, idx, tokens)
+        if merged is None:
+            return
+        if key is not None:
+            # full-merge guard: a partial/streaming shard set must never
+            # commit a truncated entry for dedup followers
+            self.mm_cache.put(key, merged,
+                              n_expected=req.mm_embeds.shape[0])
+        self._deliver_inflight(req, key, merged)
+        if req.finished:
+            return
+        req.t_encoded = time.perf_counter()
+        if streaming:
+            return
+        req.advance(RequestState.PREFILLING)
+        self._dispatch_prefill(req, merged)
+
+    def _encode_job_failed(self, req: ServeRequest, key: Optional[str],
+                           error: str) -> None:
+        """Shared failure tail for a shard job (threaded or lane): fail
+        the leader, drop its ψ_EP assembly/stream, and fail the
+        byte-identical waiters (they would fail identically)."""
+        self._fail(req, error)
+        self.psi_ep.drop(req.req_id)
+        self._fail_inflight(req, key, error)
+
+    def _lane_shard_done(self, stage: EncodeStage, work, tokens) -> None:
+        """Completion hook for a lane-executed shard (scheduler thread,
+        from inside ``ModelRunner.execute``): identical post-half to a
+        threaded E worker, including shard accounting and failure
+        routing."""
+        stage.note_shards()
+        try:
+            self._finish_encode_shard(work.req, work.sid, work.n_shards,
+                                      work.idx, work.key, tokens)
+        except Exception as e:                      # noqa: BLE001
+            self._encode_job_failed(work.req, work.key,
+                                    f"encode failed: {e!r}")
 
     def _deliver_inflight(self, leader: Optional[ServeRequest],
                           key: Optional[str], merged) -> None:
@@ -523,6 +588,15 @@ class EPDEngine(EngineBase):
                 engine, self.prefill_stage, self.decode_stage,
                 self.psi_ep, self.psi_pd, self._stats, self._stop,
                 on_fail=self._fail, runner=runner)
+            # packed encode lanes: shard jobs go to the scheduler's
+            # iteration plan instead of the E worker threads
+            self._lanes = (engine.encode_lanes and runner is not None
+                           and runner.max_encode_groups > 0)
+            if self._lanes:
+                runner.on_encoded = (
+                    lambda w, t: self._lane_shard_done(self.encode_stage,
+                                                       w, t))
+                self.scheduler.on_encode_fail = self._encode_job_failed
         else:
             self.prefill_stage = DensePrefillStage(
                 self.model, cfg, params, engine, self._stats,
@@ -530,6 +604,8 @@ class EPDEngine(EngineBase):
             self.decode_stage = DenseDecodeStage(
                 self.model, cfg, params, engine, self._stats,
                 on_finish=self._finish, backend=self.backend)
+        if self.scheduler is None:
+            self._lanes = False               # dense baseline: E threads
         self._encode = self.encode_stage.encode_fn   # compat alias
         self._eq: queue.Queue = queue.Queue()        # encode shard jobs
 
@@ -537,14 +613,26 @@ class EPDEngine(EngineBase):
     def _has_encoder(self) -> bool:
         return self.encode_stage.encode_fn is not None
 
+    def _overlap_capable(self) -> bool:
+        return self.scheduler is not None
+
     def _dispatch_prefill(self, req: ServeRequest, mm_tokens) -> None:
         self.psi_ep.send(req, mm_tokens)
 
     def _dispatch_encode(self, req: ServeRequest,
                          key: Optional[str]) -> None:
         shards = self.encode_stage.plan_shards(req)
+        stream = self._open_overlap_stream(req, len(shards))
         for sid, idx in enumerate(shards):
-            self._eq.put((req, sid, len(shards), idx, key))
+            job = (req, sid, len(shards), idx, key)
+            if self._lanes:
+                self.scheduler.submit_encode_job(job)
+            else:
+                self._eq.put(job)
+        if stream is not None:
+            # overlap: admit to P immediately; the chunk frontier trails
+            # the stream's encoded watermark
+            self._start_streaming_prefill(req, stream)
 
     def _release_blocks(self, req: ServeRequest) -> None:
         if self.paged:
@@ -557,6 +645,7 @@ class EPDEngine(EngineBase):
         n = self._eq.qsize() + self.psi_ep.qsize()
         if self.scheduler is not None:
             n += (len(self.scheduler.queue)
+                  + len(self.scheduler.encode_q)
                   + int(self.scheduler.task is not None)
                   + self.psi_pd.qsize()
                   + self.decode_stage.active_count)

@@ -43,7 +43,7 @@ from repro.serving.stages import (PagedDecodeStage, PagedJitKit,
 from repro.serving.transfer import PrefillProgress, PsiPD
 from repro.serving.types import EngineConfig, ServeRequest
 
-__all__ = ["ChunkWork", "ModelRunner"]
+__all__ = ["ChunkWork", "EncodeWork", "ModelRunner"]
 
 
 @dataclass
@@ -58,6 +58,31 @@ class ChunkWork:
     n_new: int
     blocks: np.ndarray
     final: bool
+
+
+@dataclass
+class EncodeWork:
+    """One planned IRP encode shard (packed encode lanes): the shard's
+    patch groups become ``(tokens_per_item,)``-token segment rows in the
+    packed iteration. ``groups`` are whole patch groups (the last may be
+    ragged — zero-padded to the segment width, matching the legacy
+    multi-group reshape's padding exactly). ``legacy`` marks the one
+    shape the lane rows can NOT reproduce bit-identically: a shard that
+    is a single ragged group alone attends its ``m < tokens_per_item``
+    tokens UNPADDED in the per-shard encoder, so it runs through
+    ``encode_fn`` instead."""
+    req: ServeRequest
+    sid: int
+    n_shards: int
+    idx: np.ndarray
+    key: Optional[str]
+    groups: list
+    legacy: bool
+
+    @property
+    def tokens_cost(self) -> int:
+        """Budget tokens this shard charges the iteration."""
+        return int(len(self.idx))
 
 
 class ModelRunner(PagedDecodeStage):
@@ -122,6 +147,21 @@ class ModelRunner(PagedDecodeStage):
         # ``packed_table_widths`` compile-shape counter.
         self.table_buckets = _bucket_ladder(1, self.kv.max_blocks)
         self.table_widths_used: set[int] = set()
+        # packed encode lanes: encoder patch-group rows ride the same
+        # iteration; group counts pad to their own small ladder so lane
+        # load never drives a recompile. ``on_encoded(work, tokens)`` is
+        # wired by the engine (completes the shard over ψ_EP).
+        m = cfg.modality
+        if m is not None and kit.packed_epd_step is not None:
+            self._tpi = int(m.tokens_per_item)
+            self.enc_buckets = _bucket_ladder(
+                1, max(1, -(-ecfg.max_seq_len // self._tpi)))
+            self.max_encode_groups = self.enc_buckets[-1]
+        else:
+            self._tpi = 0
+            self.enc_buckets = ()
+            self.max_encode_groups = 0
+        self.on_encoded: Optional[Callable] = None
 
     # ------------------------------------------------------------- planning
     def next_chunk_len(self, task: PrefillProgress) -> int:
@@ -147,6 +187,18 @@ class ModelRunner(PagedDecodeStage):
         return ChunkWork(task=task, t0=t0, n_new=n_new, blocks=blocks,
                          final=task.done)
 
+    def plan_encode(self, job: tuple) -> EncodeWork:
+        """Turn a ψ_EP shard job ``(req, sid, n_shards, idx, key)`` into
+        lane work: split the shard's (contiguous, group-aligned) index
+        span back into whole patch groups."""
+        req, sid, n_shards, idx, key = job
+        idx = np.asarray(idx)
+        tpi = self._tpi
+        groups = [idx[i:i + tpi] for i in range(0, len(idx), tpi)]
+        legacy = len(groups) == 1 and len(groups[0]) < tpi
+        return EncodeWork(req=req, sid=sid, n_shards=n_shards, idx=idx,
+                          key=key, groups=groups, legacy=legacy)
+
     def _prefill_bucket(self, n_tokens: int) -> int:
         for w in self.buckets:
             if n_tokens <= w:
@@ -156,16 +208,55 @@ class ModelRunner(PagedDecodeStage):
             f"{self.buckets[-1]} (scheduler budget out of sync)")
 
     # ------------------------------------------------------------ execution
-    def execute(self, active: np.ndarray,
-                chunks: list[ChunkWork]) -> tuple[int, list[PrefillProgress]]:
+    def execute(self, active: np.ndarray, chunks: list[ChunkWork],
+                encodes: tuple | list = ()
+                ) -> tuple[int, list[PrefillProgress]]:
         """Run the iteration plan as ONE packed jitted forward.
 
         Returns ``(decode_slots_stepped, finished_prefill_tasks)`` —
         finished tasks carry their sampled ``first_tok`` and are ready
-        for the scheduler's ψ_PD handoff."""
+        for the scheduler's ψ_PD handoff. With ``encodes`` (packed
+        encode lanes), the shard forwards ride the same dispatch: the
+        combined ``packed_epd_step`` program when LM rows are present,
+        the bucketed encoder alone on an encode-only iteration; each
+        completed shard is handed to ``on_encoded``."""
         n = len(self._slots)
         n_pref = sum(c.n_new for c in chunks)
-        if not active.any() and n_pref == 0:
+        has_lm = bool(active.any()) or n_pref > 0
+        if not has_lm and not encodes:
+            return 0, []
+
+        # encode-lane operand: one row per whole patch group, padded to
+        # the group-count ladder (pad rows are zeros; row outputs are
+        # independent, so pads never perturb real rows)
+        lane_works = [w for w in encodes if not w.legacy]
+        ex = None
+        n_groups = 0
+        if lane_works:
+            n_groups = sum(len(w.groups) for w in lane_works)
+            G = next(g for g in self.enc_buckets if n_groups <= g)
+            ref = lane_works[0].req.mm_embeds
+            ex = np.zeros((G, self._tpi, ref.shape[-1]), ref.dtype)
+            r = 0
+            for w in lane_works:
+                for g in w.groups:
+                    ex[r, :len(g)] = w.req.mm_embeds[g]
+                    r += 1
+
+        if not has_lm:
+            # encode-only iteration: the lane rows still run as one
+            # bucketed program (same math as a combined iteration's
+            # encode operand — the rows are batch-independent)
+            enc_out = (np.asarray(self.kit.encode_fn(self.params,
+                                                     jnp.asarray(ex)))
+                       if ex is not None else None)
+            with self.stats.lock:
+                self.stats.data["packed_steps"] += 1
+                self.stats.data["encode_lane_rows"] += n_groups
+                self.stats.data["packed_compiles"] = max(
+                    self.stats.data["packed_compiles"],
+                    self.kit.packed_shapes_compiled())
+            self._commit_encodes(encodes, enc_out)
             return 0, []
         T = n + (self._prefill_bucket(n_pref) if n_pref else 0)
         bs = self.kv.mgr.block_size
@@ -257,18 +348,29 @@ class ModelRunner(PagedDecodeStage):
             "sample_pos": jnp.asarray(sample_pos),
         }
         t0 = time.perf_counter()
+        enc_out = None
         with self.kv.pool_lock:
             batch["k_pool"] = self.kv.k_pool
             batch["v_pool"] = self.kv.v_pool
-            _, nxt_tok, self.kv.k_pool, self.kv.v_pool = self._packed(
-                self.params, batch)
+            if ex is not None:
+                # ONE program across all three stages: decode slots,
+                # prefill-chunk rows, and encoder patch-group rows
+                (_, nxt_tok, self.kv.k_pool, self.kv.v_pool), enc_out_j = \
+                    self.kit.packed_epd_step(self.params, batch,
+                                             jnp.asarray(ex))
+            else:
+                _, nxt_tok, self.kv.k_pool, self.kv.v_pool = self._packed(
+                    self.params, batch)
         nxt = np.asarray(nxt_tok)
+        if ex is not None:
+            enc_out = np.asarray(enc_out_j)
         dt = time.perf_counter() - t0
 
         stepped = int(active.sum())
         with self.stats.lock:
             self.stats.data["packed_steps"] += 1
             self.stats.data["packed_prefill_tokens"] += n_pref
+            self.stats.data["encode_lane_rows"] += n_groups
             self.stats.data["packed_compiles"] = max(
                 self.stats.data["packed_compiles"],
                 self.kit.packed_shapes_compiled())
@@ -301,7 +403,33 @@ class ModelRunner(PagedDecodeStage):
             c.task.req.t_first_token = time.perf_counter()
             self.stats.bump("prefill_completions")
             finished.append(c.task)
+        if encodes:
+            self._commit_encodes(encodes, enc_out)
         return stepped, finished
+
+    def _commit_encodes(self, encodes, enc_out) -> None:
+        """Reassemble lane rows into per-shard token arrays and hand
+        each to ``on_encoded`` — the engine completes the shard over
+        ψ_EP exactly like a threaded E worker would."""
+        r = 0
+        for w in encodes:
+            if w.legacy:
+                continue
+            parts = []
+            for g in w.groups:
+                parts.append(enc_out[r, :len(g)])
+                r += 1
+            self.on_encoded(w, np.concatenate(parts, axis=0))
+        for w in encodes:
+            if not w.legacy:
+                continue
+            # a shard that is a single ragged group ALONE attends its
+            # m < tokens_per_item tokens UNPADDED in the per-shard
+            # encoder (a zero-padded lane row attends the pads too), so
+            # bit parity requires the per-shape program here
+            tokens = np.asarray(self.kit.encode_fn(
+                self.params, jnp.asarray(w.req.mm_embeds[w.idx])[None])[0])
+            self.on_encoded(w, tokens)
 
     # -------------------------------------------------- decode-only protocol
     def step(self, psi_pd: PsiPD) -> int:

@@ -79,6 +79,16 @@ class Scheduler:
         self.queue: deque = deque()
         self._front = 0
         self.task: Optional[PrefillProgress] = None
+        # packed encode lanes: ψ_EP shard jobs routed INTO the iteration
+        # plan (instead of E worker threads) — planned under the leftover
+        # budget each iteration and executed inside the packed program.
+        # A deque (not a Queue): producers append, only the scheduler
+        # thread pops, and a budget overrun can push a job back to the
+        # front without reordering.
+        self.encode_q: deque = deque()
+        # engine hook: fail a lane shard's request AND its mm-dedup
+        # followers (falls back to plain on_fail when unwired)
+        self.on_encode_fail: Optional[Callable] = None
         # effective chunk (block-aligned by the stage) and budget; the
         # budget is clamped so one full decode round plus one chunk always
         # fits — a smaller value would silently starve prefill whenever
@@ -93,6 +103,11 @@ class Scheduler:
         preempted in the same step keep their relative order)."""
         self.queue.insert(self._front, (req, mm_tokens))
         self._front += 1
+
+    def submit_encode_job(self, job: tuple) -> None:
+        """Queue one IRP shard ``(req, sid, n_shards, idx, key)`` for the
+        packed encode lanes (EngineConfig.encode_lanes)."""
+        self.encode_q.append(job)
 
     def begin_requeue_batch(self) -> None:
         """Reset the front-insertion cursor before a batch of ``requeue``
@@ -161,10 +176,55 @@ class Scheduler:
             if (spent + self.chunk > self.budget
                     and not (stepped == 0 and chunks == 0)):
                 break
+            if self._stream_gate(self.task):
+                break    # watermark gate: encode hasn't caught up yet
             spent += self.chunk
             chunks += 1
             self._advance_task()
         return bool(stepped or chunks)
+
+    def _next_span(self, task: PrefillProgress) -> tuple[int, int]:
+        """The prompt span the task's NEXT prefill call will cover."""
+        if self.runner is not None:
+            return task.n_done, task.n_done + self.runner.next_chunk_len(task)
+        S = task.total
+        chunk = self.prefill.chunk
+        if self._whole_path(task):
+            return task.n_done, S
+        return task.n_done, min(task.n_done + chunk, S)
+
+    def _whole_path(self, task: PrefillProgress) -> bool:
+        """Whether the two-program path will run the UNCHUNKED prefill
+        program for this task (mirrors ``run_chunk``'s dispatch)."""
+        chunk = self.prefill.chunk
+        return chunk <= 0 or (task.n_done == 0 and task.total <= chunk)
+
+    def _stream_gate(self, task: PrefillProgress) -> bool:
+        """Encode–prefill overlap: True when the task's next span covers
+        a placeholder whose shard has not been published yet (the chunk
+        must wait at the encoded watermark). When the span IS ready, the
+        published shard tokens are pulled into the embedded prompt and
+        the early-chunk counters move."""
+        st = getattr(task, "stream", None)
+        if st is None or task.mm_tokens is not None:
+            return False
+        t0, t1 = self._next_span(task)
+        if not st.span_ready(t0, t1):
+            return True
+        # sync AFTER the span check: a shard published between an earlier
+        # fill and the check must land in x before the chunk slices it
+        task.sync_stream()
+        if task.mm_tokens is None:
+            if self.runner is None and self._whole_path(task):
+                # the unchunked program re-embeds from the merged token
+                # set inside its jit — a partial stream can't feed it
+                # (overlap is a documented no-op for single-chunk
+                # prompts); wait for the full merge
+                return True
+            self.stats.bump("overlap_chunks_early")
+            self.stats.set_hwm("overlap_watermark_hwm",
+                               st.watermark(task.total))
+        return False
 
     def _drop_aborted_task(self) -> bool:
         """Abandon the in-flight prefill task if its request was aborted
@@ -243,8 +303,14 @@ class Scheduler:
                 # commit (clears the in-flight claim), hand straight to
                 # decode; the pending-x row there samples the first
                 # token. Costs no budget; each pass consumes a queue
-                # entry, so the admission loop still terminates.
+                # entry, so the admission loop still terminates. With a
+                # live stream the token-less handoff waits for the full
+                # merge (its x_last row must be final).
                 task = self.task
+                if getattr(task, "stream", None) is not None:
+                    task.sync_stream()
+                    if task.mm_tokens is None:
+                        break
                 self.task = None
                 self.stats.bump("prefill_completions")
                 self._to_decode(task)
@@ -255,27 +321,60 @@ class Scheduler:
                     or planned_tokens + n_new > runner.max_prefill_tokens)
             if over and not (n_dec == 0 and not chunks):
                 break
+            if self._stream_gate(self.task):
+                break    # watermark gate: encode hasn't caught up yet
             chunks.append(runner.plan_chunk(self.task))
             planned_tokens += n_new
             spent += self.chunk
             if self.task.done:
                 self.task = None     # fully planned; completes in execute
+        # packed encode lanes: spend the leftover budget on queued IRP
+        # shards (group rows in the same program). When the iteration is
+        # otherwise empty — e.g. the head task is watermark-blocked on
+        # these very shards — at least one job always runs (guaranteed
+        # progress, no deadlock).
+        enc_works: list = []
+        planned_groups = 0
+        while self.encode_q and not self._stop.is_set():
+            if (spent >= self.budget
+                    and (n_dec or chunks or handed or enc_works)):
+                break
+            job = self.encode_q.popleft()
+            if job[0].finished:      # aborted while queued
+                continue
+            w = runner.plan_encode(job)
+            if (enc_works and planned_groups + len(w.groups)
+                    > runner.max_encode_groups):
+                self.encode_q.appendleft(job)   # doesn't fit this bucket
+                break
+            enc_works.append(w)
+            planned_groups += len(w.groups)
+            spent += w.tokens_cost
         try:
-            stepped, finished = runner.execute(active, chunks)
+            stepped, finished = runner.execute(active, chunks, enc_works)
         except Exception as e:                        # noqa: BLE001
             # the packed program is one blast radius: fail every planned
-            # prefill task and every decode slot, then keep serving
+            # prefill task, encode shard, and decode slot, then keep
+            # serving
             failed = {id(c.task): c.task for c in chunks}
             for task in failed.values():
                 if self.task is task:
                     self.task = None
                 self.on_fail(task.req, f"packed step failed: {e!r}")
+            for w in enc_works:
+                self._fail_encode(w.req, w.key, f"packed step failed: {e!r}")
             runner.abort_all(
                 lambda r: self.on_fail(r, f"packed step failed: {e!r}"))
             return True
         for task in finished:
             self._to_decode(task)
-        return bool(stepped or chunks or handed)
+        return bool(stepped or chunks or handed or enc_works)
+
+    def _fail_encode(self, req: ServeRequest, key, error: str) -> None:
+        if self.on_encode_fail is not None:
+            self.on_encode_fail(req, key, error)
+        else:
+            self.on_fail(req, error)
 
     # ------------------------------------------------------------- shutdown
     def drain(self) -> list[ServeRequest]:
@@ -289,4 +388,8 @@ class Scheduler:
         while self.queue:
             req, _ = self.queue.popleft()
             stranded.append(req)
+        while self.encode_q:
+            # lane shards of one request appear once per shard; the
+            # engine's fail path is idempotent
+            stranded.append(self.encode_q.popleft()[0])
         return stranded

@@ -33,7 +33,8 @@ from repro.configs.base import ArchConfig
 from repro.core.block_manager import KVBlockManager, OutOfBlocks
 from repro.kernels.registry import AttentionBackend, resolve_backend
 from repro.models import dense
-from repro.serving.transfer import MMTokenCache, PrefillProgress, PsiPD
+from repro.serving.transfer import (MMTokenCache, PrefillProgress, PsiPD,
+                                    ShardStream)
 from repro.serving.types import EngineConfig, ServeRequest
 
 PAGED_FAMILIES = ("dense", "moe", "vlm")
@@ -74,6 +75,13 @@ class ServeStats:
             # distinct block-table widths the packed runner has padded to
             # (like packed_compiles: stops growing once warm)
             "packed_table_widths": 0,
+            # encode–prefill overlap + packed encode lanes: prefill
+            # chunks run before the request's full ψ_EP merge landed /
+            # encoder patch-group rows executed inside the packed
+            # per-iteration program / highest encoded watermark (prompt
+            # tokens) a still-streaming request was prefilled under
+            "overlap_chunks_early": 0, "encode_lane_rows": 0,
+            "overlap_watermark_hwm": 0,
             # fault tolerance + elastic scaling (supervisor bookkeeping;
             # the simulator's fault_stats uses the same key names so
             # sim-vs-real cross-validation compares directly)
@@ -182,6 +190,15 @@ class EncodeStage:
         if self.stats is not None:
             self.stats.bump("encode_shards")
         return tokens
+
+    def note_shards(self, n: int = 1) -> None:
+        """Account shard forwards executed elsewhere (packed encode
+        lanes run the forward inside the runner's program; the shard
+        plan — and therefore these counters — is identical either way)."""
+        with self._lock:
+            self.shards_run += n
+        if self.stats is not None:
+            self.stats.bump("encode_shards", n)
 
 
 # ===================================================================== P
@@ -483,7 +500,18 @@ class PagedPrefillStage:
 
         Returns None (without allocating) when the pool cannot hold the
         prompt right now — the scheduler keeps the request at the head of
-        its FIFO admission queue (pool-pressure backoff)."""
+        its FIFO admission queue (pool-pressure backoff).
+
+        With encode–prefill overlap, ``mm_tokens`` may be a live
+        :class:`ShardStream` whose shards are still encoding: the request
+        is admitted immediately, already-published shard tokens are
+        scattered into the embedded prompt, and the scheduler advances
+        its chunk frontier up to the encoded watermark (``sync_stream`` /
+        ``span_blocked`` on the returned task)."""
+        stream: Optional[ShardStream] = None
+        if isinstance(mm_tokens, ShardStream):
+            stream = mm_tokens
+            mm_tokens = stream.merged      # None while shards are in flight
         S = len(req.prompt)
         keys: Optional[list] = None
         n_cached = 0
@@ -554,8 +582,15 @@ class PagedPrefillStage:
         # prompt on the host, so mm-token merging never retraces per chunk
         x = np.asarray(dense.embed_inputs(self.params, self.cfg, toks,
                                           mm_t, mm_p)[0])
+        if stream is not None and mm_tokens is None:
+            # scatter whatever shards already landed; later publications
+            # are pulled in by sync_stream before each chunk. The copy
+            # makes x writable (np.asarray of a device buffer is a
+            # read-only view) — streaming admissions only.
+            x = np.array(x)
+            stream.fill(x)
         return PrefillProgress(req=req, x=x, mm_tokens=mm_tokens,
-                               n_done=n_cached, keys=keys)
+                               n_done=n_cached, keys=keys, stream=stream)
 
     def abandon(self, task: PrefillProgress) -> None:
         """Release a started task's blocks (failure / shutdown)."""
@@ -774,6 +809,21 @@ class PagedJitKit:
         self.packed_step = jax.jit(
             lambda p, b: dense.packed_step_core(p, cfg, b, backend=backend),
             donate_argnums=() if on_cpu else (1,))
+        # packed ENCODE LANES (EngineConfig.encode_lanes): when an
+        # iteration carries both LM rows and encoder patch-group rows,
+        # this combined program runs all three stages in ONE dispatch —
+        # the encode operand is (G_bucket, tokens_per_item, enc_d), each
+        # row one whole patch group, exactly the encoder's per-segment
+        # math (encode-only iterations reuse ``encode_fn`` at the same
+        # bucketed shape). None for families without a paged encoder.
+        if model.encode is not None and cfg.family in PAGED_FAMILIES:
+            self.packed_epd_step = jax.jit(
+                lambda p, b, ex: (
+                    dense.packed_step_core(p, cfg, b, backend=backend),
+                    model.encode(p, ex)),
+                donate_argnums=() if on_cpu else (1,))
+        else:
+            self.packed_epd_step = None
         # PD-migration scatter (PagedKVState.inject): block counts are
         # bucket-padded by the caller, so this compiles once per ladder
         # width; donates the destination pool
@@ -789,9 +839,14 @@ class PagedJitKit:
             donate_argnums=() if on_cpu else (0, 1))
 
     def packed_shapes_compiled(self) -> int:
-        """Distinct compiled shapes of the packed program (the compile
-        counter surfaced as ``ServeStats['packed_compiles']``)."""
-        return int(self.packed_step._cache_size())
+        """Distinct compiled shapes of the packed program(s) — the
+        compile counter surfaced as ``ServeStats['packed_compiles']``.
+        Includes the combined encode-lane variant so lane buckets are
+        under the same zero-mid-run-recompiles bar."""
+        n = int(self.packed_step._cache_size())
+        if self.packed_epd_step is not None:
+            n += int(self.packed_epd_step._cache_size())
+        return n
 
 
 class PagedDecodeStage:

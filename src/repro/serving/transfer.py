@@ -33,6 +33,78 @@ def drain_queue(q: queue.Queue) -> list:
             return out
 
 
+class ShardStream:
+    """Streaming ψ_EP assembly state for ONE request (encode–prefill
+    overlap): each IRP shard publishes its encoded tokens, with the
+    placeholder positions it covers, the moment its forward completes —
+    instead of buffering until the full §3.2.2 align/merge. The prefill
+    side reads the request's "encoded watermark" (the lowest prompt
+    position whose mm token has NOT arrived yet) and advances its chunk
+    frontier up to it while later shards are still encoding.
+
+    ``merged`` is set only once every mm token has arrived; that full
+    merge — never a partial shard set — is what may be committed to the
+    ``MMTokenCache``. The internal lock is a leaf: it is never held
+    while taking any other lock."""
+
+    def __init__(self, req: Any):
+        self.req = req
+        M = int(req.mm_embeds.shape[0])
+        self.positions = np.asarray(req.mm_positions,
+                                    dtype=np.int64).reshape(-1)
+        self._lock = threading.Lock()
+        self._have = np.zeros(M, dtype=bool)
+        self._buf: Optional[np.ndarray] = None
+        self.merged: Optional[np.ndarray] = None
+
+    @property
+    def complete(self) -> bool:
+        return self.merged is not None
+
+    def publish(self, idx: np.ndarray, tokens: np.ndarray
+                ) -> Optional[np.ndarray]:
+        """Record one encoded shard; returns the merged tokens when this
+        publication completes the set, ``None`` otherwise."""
+        with self._lock:
+            if self._buf is None:
+                self._buf = np.zeros(
+                    (self._have.shape[0], tokens.shape[-1]), tokens.dtype)
+            self._buf[idx] = tokens
+            self._have[idx] = True
+            if self.merged is None and bool(self._have.all()):
+                self.merged = self._buf
+            return self.merged
+
+    def span_ready(self, t0: int, t1: int) -> bool:
+        """True when every placeholder position in ``[t0, t1)`` has its
+        encoded token — the gate a prefill chunk must pass."""
+        with self._lock:
+            if self.merged is not None:
+                return True
+            in_span = (self.positions >= t0) & (self.positions < t1)
+            return bool(self._have[in_span].all())
+
+    def watermark(self, total: int) -> int:
+        """The encoded watermark: prefill may run up to (not including)
+        this prompt position; ``total`` once every shard has landed."""
+        with self._lock:
+            missing = self.positions[~self._have]
+            return int(total) if missing.size == 0 else int(missing.min())
+
+    def fill(self, x: np.ndarray) -> None:
+        """Scatter every already-encoded mm token into the embedded
+        prompt ``x`` (idempotent). Positions whose shard has not arrived
+        keep their placeholder rows — the span gate guarantees no chunk
+        covering them runs before a later ``fill`` fixes them up.
+        Positions beyond the prompt are dropped, matching the jnp
+        ``.at[].set()`` scatter the non-streaming embed path uses."""
+        with self._lock:
+            if self._buf is None:
+                return
+            have = self._have & (self.positions < x.shape[0])
+            x[self.positions[have]] = self._buf[have]
+
+
 @dataclass
 class PrefillProgress:
     """ψ_PD payload: a request's (possibly partial) prefill state.
@@ -55,6 +127,27 @@ class PrefillProgress:
     n_done: int = 0                      # prompt tokens already in the pool
     first_tok: Optional[int] = None      # sampled on the final chunk
     keys: Optional[list] = None          # prefix-cache block keys
+    stream: Optional[ShardStream] = None  # live ψ_EP stream (overlap)
+
+    def sync_stream(self) -> None:
+        """Pull newly published shard tokens into the embedded prompt
+        (scheduler thread, before planning a chunk). Once the stream
+        completes, ``mm_tokens`` is set to the full merge so preemption
+        replay and migration see exactly the non-streaming payload."""
+        st = self.stream
+        if st is None or self.mm_tokens is not None:
+            return
+        st.fill(self.x)
+        if st.merged is not None:
+            self.mm_tokens = st.merged
+
+    def span_blocked(self, t0: int, t1: int) -> bool:
+        """True when ``[t0, t1)`` covers a placeholder whose shard has
+        not been encoded yet (the chunk must wait at the watermark)."""
+        st = self.stream
+        if st is None or self.mm_tokens is not None:
+            return False
+        return not st.span_ready(t0, t1)
 
     @property
     def x_last(self) -> np.ndarray:
@@ -122,7 +215,19 @@ class MMTokenCache:
             self.hits += 1
             return tokens
 
-    def put(self, key: str, tokens: np.ndarray) -> None:
+    def put(self, key: str, tokens: np.ndarray, *,
+            n_expected: Optional[int] = None) -> None:
+        """Commit merged tokens. Streaming ψ_EP makes partial shard sets
+        a real hazard — a truncated entry would poison every dedup
+        follower — so callers pass the request's full mm token count and
+        a mismatch is refused."""
+        if tokens is None:
+            raise ValueError("mm cache put: tokens must be a merged array")
+        if n_expected is not None and int(tokens.shape[0]) != int(n_expected):
+            raise ValueError(
+                f"mm cache put refused: {int(tokens.shape[0])} of "
+                f"{int(n_expected)} mm tokens — a partial/streaming merge "
+                f"must never be cached")
         if self.capacity <= 0:
             return
         with self._lock:
@@ -143,33 +248,61 @@ class PsiEP:
         self.cache = cache
         self._q: queue.Queue = queue.Queue()
         self._shards: dict[int, list] = {}
+        self._streams: dict[int, ShardStream] = {}
         self._lock = threading.Lock()
         self.transfers = 0
 
-    def send(self, req: Any, mm_tokens: Optional[np.ndarray]) -> None:
-        """Deliver a prefill-ready request (merged tokens, a cache hit,
-        a text-only request, or a preemption requeue)."""
+    def send(self, req: Any, mm_tokens) -> None:
+        """Deliver a prefill-ready request: merged tokens, a cache hit,
+        a text-only request, a preemption requeue — or, with overlap, a
+        live ``ShardStream`` whose shards are still encoding."""
         self.transfers += 1
         self._q.put((req, mm_tokens))
+
+    def open_stream(self, req: Any) -> ShardStream:
+        """Switch a request's ψ_EP assembly to streaming publication:
+        subsequent ``add_shard`` calls publish into the stream (visible
+        to an already-admitted prefill) instead of buffering."""
+        stream = ShardStream(req)
+        with self._lock:
+            self._streams[req.req_id] = stream
+        return stream
+
+    def has_stream(self, req_id: int) -> bool:
+        with self._lock:
+            return req_id in self._streams
 
     def add_shard(self, req: Any, sid: int, n_shards: int,
                   idx: np.ndarray, tokens: np.ndarray
                   ) -> Optional[np.ndarray]:
         """Collect one IRP shard; when all ``n_shards`` have arrived,
         align + merge (paper §3.2.2) and return the merged tokens —
-        ``None`` while shards are still outstanding."""
+        ``None`` while shards are still outstanding. With a registered
+        stream the shard is published immediately (encode–prefill
+        overlap); the return contract is unchanged."""
         with self._lock:
             # checked under the lock: a sibling shard's failure either
             # happened before (we see finished and retain nothing) or its
             # drop() serializes after our insert and removes it
             if req.finished:
                 self._shards.pop(req.req_id, None)
+                self._streams.pop(req.req_id, None)
                 return None
-            shards = self._shards.setdefault(req.req_id, [None] * n_shards)
-            shards[sid] = (idx, tokens)
-            if any(s is None for s in shards):
-                return None
-            del self._shards[req.req_id]
+            stream = self._streams.get(req.req_id)
+            if stream is None:
+                shards = self._shards.setdefault(
+                    req.req_id, [None] * n_shards)
+                shards[sid] = (idx, tokens)
+                if any(s is None for s in shards):
+                    return None
+                del self._shards[req.req_id]
+        if stream is not None:
+            # publish outside our lock — the stream lock is a leaf
+            merged = stream.publish(idx, tokens)
+            if merged is not None:
+                with self._lock:
+                    self._streams.pop(req.req_id, None)
+            return merged
         M = req.mm_embeds.shape[0]
         merged = np.zeros((M, tokens.shape[-1]), tokens.dtype)
         for s_idx, s_tok in shards:
@@ -180,6 +313,7 @@ class PsiEP:
         """Discard any partial shard assembly for a failed request."""
         with self._lock:
             self._shards.pop(req_id, None)
+            self._streams.pop(req_id, None)
 
     def recv(self, timeout: float):
         """Next prefill-ready (req, mm_tokens); raises queue.Empty."""

@@ -148,6 +148,19 @@ class EngineConfig:
     # is byte-identical to today; greedy streams are bit-identical with
     # the cache on vs off on every topology.
     prefix_cache: bool = False
+    # encode–prefill overlap (intra-request pipelining, RServe-style):
+    # ``encode_overlap`` streams each completed IRP shard over ψ_EP the
+    # moment it finishes, and the scheduler advances the request's
+    # chunked-prefill frontier up to its encoded watermark while later
+    # shards are still encoding — the merge is lossless (§3.2.2), so
+    # greedy streams stay bit-identical overlap-on vs off. A no-op for
+    # text-only and single-shard requests. ``encode_lanes`` (packed
+    # runner only) additionally folds the encoder forwards into the
+    # packed per-iteration plan as patch-group segment rows co-scheduled
+    # with decode slots + prefill chunks under ``step_token_budget`` —
+    # ONE jitted program per iteration across all three stages.
+    encode_overlap: bool = False
+    encode_lanes: bool = False
 
 
 @dataclass

@@ -1,0 +1,302 @@
+"""Encode–prefill overlap (streaming ψ_EP) + packed encode lanes.
+
+Parity contract: overlap changes WHEN a prefill chunk runs, never WHAT
+it computes — the watermark gate admits a chunk only after every
+placeholder position it covers has its published shard tokens, and the
+host-side scatter (``ShardStream.fill``) writes the exact float32 rows
+the non-streaming ``embed_inputs`` merge would. Encode lanes move the
+shard forward INTO the packed per-iteration program; the segment-wise
+encoder attends each whole patch group identically whether batched as
+``(1, k*tpi)`` or as lane rows ``(G, tpi)``, so greedy streams stay
+bit-identical on every topology with overlap/lanes on or off.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Death, FaultPlan, Stall
+from repro.models import build_model
+from repro.serving import (ClusterConfig, ClusterEngine, EPDEngine,
+                           EngineConfig, RequestState, ServeRequest)
+from repro.serving.transfer import MMTokenCache
+
+pytestmark = pytest.mark.cluster
+
+
+@pytest.fixture(scope="module")
+def vlm_setup():
+    cfg = get_config("pixtral-12b").reduced()
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _ecfg(**kw):
+    base = dict(n_encode_workers=2, max_new_tokens=8, decode_batch=2,
+                kv_blocks=64, kv_block_size=16, max_seq_len=256)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _requests(cfg, base_id, *, n_groups=2, n_mm=3, n_text=1, prompt_len=48):
+    """Multimodal requests whose placeholder positions sit INSIDE the
+    prompt (positions 4..4+M), so the watermark actually gates chunks."""
+    rng = np.random.default_rng(42)
+    tpi = cfg.modality.tokens_per_item
+    M = n_groups * tpi
+    reqs = []
+    for i in range(n_mm + n_text):
+        mm = i < n_mm
+        reqs.append(ServeRequest(
+            req_id=base_id + i,
+            prompt=rng.integers(0, cfg.vocab, prompt_len).astype(np.int32),
+            mm_embeds=(rng.standard_normal((M, cfg.modality.enc_d_model))
+                       .astype(np.float32) * 0.1) if mm else None,
+            mm_positions=(np.arange(4, 4 + M, dtype=np.int32)
+                          if mm else None),
+            max_new_tokens=8))
+    return reqs
+
+
+def _serve(engine, reqs):
+    engine.start()
+    try:
+        for r in reqs:
+            engine.submit(r)
+        return {r.req_id - reqs[0].req_id: list(
+            engine.result(r.req_id, timeout=300).tokens) for r in reqs}
+    finally:
+        engine.stop()
+
+
+def _wait(pred, timeout=60.0):
+    t0 = time.perf_counter()
+    while time.perf_counter() - t0 < timeout:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return pred()
+
+
+@pytest.fixture(scope="module")
+def ref_tokens(vlm_setup):
+    """Greedy streams from the packed EPDEngine, overlap off."""
+    cfg, params = vlm_setup
+    return _serve(EPDEngine(cfg, params, _ecfg()), _requests(cfg, 0))
+
+
+# ================================================== greedy bit-identity
+@pytest.mark.parametrize("extra", [
+    dict(encode_overlap=True, prefill_chunk=8),
+    dict(runner="two_program", encode_overlap=True, prefill_chunk=8),
+    dict(runner="two_program", encode_overlap=True),   # whole-prompt gate
+    dict(encode_lanes=True),
+    dict(encode_overlap=True, encode_lanes=True, prefill_chunk=8),
+], ids=["packed-overlap", "two-program-overlap", "two-program-whole",
+        "packed-lanes", "overlap+lanes"])
+def test_overlap_greedy_bit_identity(vlm_setup, ref_tokens, extra):
+    """Every overlap/lane mode emits the overlap-off token streams, bit
+    for bit (acceptance: identical WHAT, earlier WHEN)."""
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, _ecfg(**extra))
+    got = _serve(eng, _requests(cfg, 100))
+    assert got == ref_tokens
+    if extra.get("encode_lanes"):
+        assert eng.stats["encode_lane_rows"] > 0
+        # threaded E workers executed ZERO shards: all rode the lanes
+        assert eng.stats["encode_shards"] == 6
+
+
+def test_cluster_2e1p1d_overlap_parity(vlm_setup, ref_tokens):
+    """True EPD disaggregation with streaming ψ_EP: shards encode on two
+    E instances, the P instance's chunk frontier trails the shared
+    stream's watermark, and the migrated decode stays bit-identical."""
+    cfg, params = vlm_setup
+    clu = ClusterEngine(cfg, params,
+                        _ecfg(encode_overlap=True, prefill_chunk=8),
+                        "2E1P1D")
+    got = _serve(clu, _requests(cfg, 200))
+    assert got == ref_tokens
+    assert clu.stats["pd_migrations"] == 4       # one per request
+    assert clu.stats["encode_shards"] == 6       # 3 mm requests x IRP 2
+
+
+# ============================================ watermark-gated admission
+def test_watermark_gates_chunk_admission(vlm_setup):
+    """Deterministic single-thread drive of the packed scheduler: a
+    still-encoding request is admitted immediately, its chunk frontier
+    stops exactly at the encoded watermark, and publishing the missing
+    shard releases it. Chunk = 16 (block-aligned), prompt = 40,
+    placeholders at 4..35 split into two 16-token shards."""
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, _ecfg(encode_overlap=True,
+                                       prefill_chunk=8))
+    [req] = _requests(cfg, 300, n_mm=1, n_text=0, prompt_len=40)
+    sched = eng.scheduler
+    stream = eng.psi_ep.open_stream(req)
+    req.advance(RequestState.ENCODING)
+    req.advance(RequestState.PREFILLING)
+    eng.psi_ep.send(req, stream)
+
+    for _ in range(3):
+        sched.step()
+    task = sched.task
+    assert task is not None, "streaming request was not admitted"
+    assert task.n_done == 0          # no shard yet: frontier at 0
+    assert eng.stats["overlap_chunks_early"] == 0
+
+    shards = eng.encode_stage.plan_shards(req)
+    assert len(shards) == 2
+    tok0 = eng.encode_stage.encode_shard(req, shards[0])
+    assert eng.psi_ep.add_shard(req, 0, 2, shards[0], tok0) is None
+    for _ in range(4):
+        sched.step()
+    # shard 0 covers placeholders 4..19: chunk [0,16) ran early, chunk
+    # [16,32) is blocked on position 20 — the encoded watermark
+    assert sched.task is task and task.n_done == 16
+    assert task.mm_tokens is None                # still streaming
+    assert eng.stats["overlap_chunks_early"] == 1
+    assert eng.stats["overlap_watermark_hwm"] == 20
+
+    tok1 = eng.encode_stage.encode_shard(req, shards[1])
+    merged = eng.psi_ep.add_shard(req, 1, 2, shards[1], tok1)
+    assert merged is not None and merged.shape[0] == req.mm_embeds.shape[0]
+    for _ in range(200):
+        sched.step()
+        if req.finished:
+            break
+    assert req.state is RequestState.DONE
+    assert len(req.tokens) == 8
+
+
+# ======================================================= fault tolerance
+def test_mid_stream_death_replays_only_unencoded_shards(vlm_setup,
+                                                        ref_tokens):
+    """Kill an E instance while requests are mid-stream (its queued
+    shard jobs stalled, siblings' shards already published). Failover
+    reroutes ONLY the unencoded shards — every shard forward runs
+    exactly once cluster-wide — and the streams complete wherever the
+    survivors encode: tokens stay bit-identical to an undisturbed run."""
+    cfg, params = vlm_setup
+    # stall instance 0 (an E) from birth so its routed jobs sit queued,
+    # then kill it; monitor_interval is huge — the test sweeps itself
+    plan = FaultPlan(stalls=[Stall(iid=0, start=0.0, duration=3600.0)],
+                     deaths=[Death(iid=0, at=1.0)])
+    clu = ClusterEngine(cfg, params,
+                        _ecfg(encode_overlap=True, prefill_chunk=8),
+                        ClusterConfig(spec="2E1P1D",
+                                      monitor_interval=60.0),
+                        faults=plan)
+    victim = clu.instances[0]
+    assert victim.role == "E"
+    clu.start()
+    try:
+        reqs = _requests(cfg, 400)
+        for r in reqs:
+            clu.submit(r)
+        assert _wait(lambda: not victim.alive), "executor ignored death"
+        clu.supervise_once()                    # failover sweep
+        outs = {r.req_id - 400: list(
+            clu.result(r.req_id, timeout=300).tokens) for r in reqs}
+    finally:
+        clu.stop()
+    assert outs == ref_tokens
+    assert clu.stats["instance_deaths"] == 1
+    assert clu.stats["jobs_rerouted"] >= 1      # victim held queued shards
+    # replay is precise: 3 mm requests x 2 shards, each encoded ONCE
+    assert clu.stats["encode_shards"] == 6
+
+
+# ================================================== prefix-cache compose
+def test_overlap_composes_with_prefix_cache(vlm_setup):
+    """The prefix salt is the hash of the FULL mm payload (raw embeds +
+    positions), not of whatever had streamed in — so a repeat of a
+    streamed request hits the prefix cache and stays bit-identical."""
+    cfg, params = vlm_setup
+    eng = EPDEngine(cfg, params, _ecfg(encode_overlap=True,
+                                       prefill_chunk=8,
+                                       prefix_cache=True))
+    [a] = _requests(cfg, 500, n_mm=1, n_text=0)
+    [b] = _requests(cfg, 501, n_mm=1, n_text=0)   # same rng -> same bytes
+    assert np.array_equal(a.prompt, b.prompt)
+    eng.start()
+    try:
+        eng.submit(a)
+        ta = list(eng.result(500, timeout=300).tokens)
+        eng.submit(b)
+        tb = list(eng.result(501, timeout=300).tokens)
+    finally:
+        eng.stop()
+    assert ta == tb
+    assert eng.stats["prefix_cache_hits"] >= 1
+    assert eng.stats["prefix_tokens_reused"] > 0
+
+
+# ================================================== mm-cache full-merge
+def test_mm_cache_refuses_partial_merge():
+    """Streaming makes a truncated entry a real hazard: ``put`` refuses
+    any token set that is not the request's full merge."""
+    cache = MMTokenCache(capacity=4)
+    tokens = np.ones((6, 8), np.float32)
+    with pytest.raises(ValueError, match="partial/streaming"):
+        cache.put("k", tokens, n_expected=10)
+    with pytest.raises(ValueError):
+        cache.put("k", None, n_expected=10)
+    cache.put("k", tokens, n_expected=6)         # full merge commits
+    assert cache.get("k") is tokens
+    assert len(cache) == 1
+
+
+# ==================================================== encode-lane shapes
+def test_encode_lanes_ragged_parity_and_compile_stability(vlm_setup):
+    """Lane rows cover every shard shape: whole groups, a trailing
+    ragged group riding with a whole one, and the one legacy shape (a
+    single ragged group alone, which attends unpadded and routes through
+    ``encode_fn``). A second identical wave adds ZERO compiled shapes to
+    the packed program OR the encoder — lane load can never drive a
+    mid-run recompile."""
+    cfg, params = vlm_setup
+    tpi = cfg.modality.tokens_per_item
+    # M = 2*tpi + 5 -> 3 groups; 3 E workers -> shards [tpi],[tpi],[5]:
+    # the last is the single-ragged-alone legacy shape
+    eng = EPDEngine(cfg, params, _ecfg(n_encode_workers=3,
+                                       encode_lanes=True))
+    ref = EPDEngine(cfg, params, _ecfg(n_encode_workers=3))
+
+    def wave(engine, base):
+        rng = np.random.default_rng(5)
+        M = 2 * tpi + 5
+        reqs = [ServeRequest(
+            req_id=base + i,
+            prompt=rng.integers(0, cfg.vocab, 48).astype(np.int32),
+            mm_embeds=(rng.standard_normal((M, cfg.modality.enc_d_model))
+                       .astype(np.float32) * 0.1),
+            mm_positions=np.arange(4, 4 + M, dtype=np.int32),
+            max_new_tokens=6) for i in range(2)]
+        return _serve_started(engine, reqs)
+
+    def _serve_started(engine, reqs):
+        for r in reqs:
+            engine.submit(r)
+        return [list(engine.result(r.req_id, timeout=300).tokens)
+                for r in reqs]
+
+    ref.start()
+    try:
+        expect = wave(ref, 0)
+    finally:
+        ref.stop()
+    eng.start()
+    try:
+        assert wave(eng, 100) == expect
+        assert eng.stats["encode_lane_rows"] > 0
+        assert eng.stats["encode_shards"] == 6   # 2 reqs x 3 shards
+        warm_packed = eng.stats["packed_compiles"]
+        warm_enc = int(eng.kit.encode_fn._cache_size())
+        assert wave(eng, 200) == expect
+        assert eng.stats["packed_compiles"] == warm_packed
+        assert int(eng.kit.encode_fn._cache_size()) == warm_enc
+    finally:
+        eng.stop()
